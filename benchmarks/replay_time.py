@@ -1,0 +1,76 @@
+"""Paper Fig. 7-8 analog: replay execution time + cumulative-progress curve.
+
+On this CPU host the original program and the proxy both execute for real;
+we compare wall times and the time-vs-events-executed staircase (sequence
+similarity, Fig. 8)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import PROGRAMS
+
+
+def run() -> list[dict]:
+    import jax
+    from repro.core.synthesize import synthesize
+    rows = []
+    for name, builder in PROGRAMS.items():
+        fn, args, axes = builder(8)
+        jfn = jax.jit(fn)
+        jax.block_until_ready(jfn(*args))     # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(jfn(*args))
+        t_orig = (time.perf_counter() - t0) / 3
+
+        res = synthesize(fn, *args, axis_sizes=axes, name=f"rt_{name}")
+        t_proxy = res.proxy.time_local(0, iters=3)
+        rows.append({
+            "program": name,
+            "orig_ms": round(t_orig * 1e3, 3),
+            "proxy_ms": round(t_proxy * 1e3, 3),
+            "time_err": round(abs(t_proxy - t_orig) / t_orig, 3),
+        })
+
+        # Fig. 8: cumulative roofline-seconds vs event index (shape match)
+        from repro.core.metrics import roofline_seconds, comm_seconds
+        from repro.core.events import is_comm
+        from repro.core import blocks as B
+
+        def curve(events, combos=None):
+            out, t = [], 0.0
+            ci = 0
+            for e in events:
+                if is_comm(e):
+                    t += comm_seconds(e.payload_bytes, 8)
+                else:
+                    t += roofline_seconds(e.vector)
+                out.append(t)
+            return np.asarray(out)
+
+        orig_curve = curve(res.rank_traces[0])
+        proxy_events = [res.merged.table[i]
+                        for i in res.merged.expand_rank(0)]
+        proxy_curve = []
+        t = 0.0
+        for e in proxy_events:
+            if is_comm(e):
+                t += comm_seconds(e.payload_bytes, 8)
+            else:
+                x, u = res.proxy.combos[
+                    res.merged.table.by_key[e.key()]]
+                t += roofline_seconds(B.combo_cost(x, u))
+            proxy_curve.append(t)
+        proxy_curve = np.asarray(proxy_curve)
+        m = min(len(orig_curve), len(proxy_curve))
+        corr = float(np.corrcoef(orig_curve[:m], proxy_curve[:m])[0, 1])
+        end_err = float(abs(proxy_curve[-1] - orig_curve[-1])
+                        / orig_curve[-1])
+        rows.append({
+            "program": name + "_curve",
+            "staircase_corr": round(corr, 5),
+            "endpoint_err": round(end_err, 4),
+        })
+    return rows

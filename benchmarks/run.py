@@ -1,0 +1,51 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Each module's ``run()`` returns a list of dict rows; everything is printed
+as CSV-ish lines and dumped to artifacts/benchmarks.json.  Runs in THIS
+process — benchmarks.common sets the 8-device host platform before jax
+initializes, so invoke as a fresh process.
+"""
+from benchmarks import common  # noqa: F401  (sets XLA_FLAGS first)
+common.ensure_devices()
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+SUITES = ("compression_table", "minime_compare", "replay_time",
+          "portability", "proxy_dryrun")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="artifacts/benchmarks.json")
+    args = ap.parse_args()
+
+    results = {}
+    for suite in SUITES:
+        if args.only and suite != args.only:
+            continue
+        mod = __import__(f"benchmarks.{suite}", fromlist=["run"])
+        t0 = time.perf_counter()
+        rows = mod.run()
+        dt = time.perf_counter() - t0
+        results[suite] = rows
+        print(f"\n== {suite} ({dt:.1f}s) ==")
+        for row in rows:
+            print(", ".join(f"{k}={v}" for k, v in row.items()))
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    existing = {}
+    if out.exists():
+        existing = json.loads(out.read_text())
+    existing.update(results)
+    out.write_text(json.dumps(existing, indent=1))
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Heterogeneous-rank example: a pipeline-parallel schedule traced through
+the host-level TraceSession (the PMPI-interposition analog), exercising
+Algorithm 1's main-rule clustering — different pipeline stages produce
+different main rules, merged with rank-set branches.
+
+    PYTHONPATH=src python examples/pipeline_proxy.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax.numpy as jnp   # noqa: E402
+
+from repro.core.events import CommEvent, ComputeEvent  # noqa: E402
+from repro.core.synthesize import synthesize           # noqa: E402
+from repro.core.tracer import TraceSession, compute_cost  # noqa: E402
+
+STAGES = 8
+MICROBATCHES = 16
+
+
+def main():
+    fwd = compute_cost(lambda a, b: jnp.tanh(a @ b),
+                       jnp.ones((64, 512)), jnp.ones((512, 512)))
+    with TraceSession(n_ranks=STAGES) as sess:
+        for _ in range(MICROBATCHES):
+            for r in range(STAGES):
+                sess.emit([r], ComputeEvent(tuple(fwd)))
+                if r < STAGES - 1:
+                    sess.emit([r, r + 1],
+                              CommEvent("ppermute", (64, 512), "float32",
+                                        ("stage",), ("shift", 1)))
+        for r in range(STAGES):
+            sess.emit([r], CommEvent("psum", (512, 512), "float32", ("stage",)))
+
+    res = synthesize(rank_traces=sess.rank_streams,
+                     axis_sizes={"stage": STAGES}, name="pp_proxy")
+    print("clusters:", len(res.merged.mains),
+          "| cluster ranks:", [sorted(r) for r in res.merged.cluster_ranks])
+    fid = res.fidelity()
+    print("lossless:", fid.comm_lossless, "| mean delta:", round(fid.mean, 4))
+    print("\n--- generated main rules (rank-set branches) ---")
+    in_main = False
+    for line in res.source.splitlines():
+        if line.startswith("def main"):
+            in_main = True
+        if in_main:
+            print(line)
+        if in_main and line.strip() == "return st":
+            in_main = False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, RunShape, SHAPES, applicable_shapes, smoke  # noqa: F401
+from repro.configs.registry import ARCH_IDS, batch_specs, get, input_specs, rules_for  # noqa: F401

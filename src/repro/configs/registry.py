@@ -1,0 +1,126 @@
+"""Architecture registry + dry-run input specs.
+
+``get(arch_id)`` resolves the assigned ids; ``input_specs(cfg, shape, mesh)``
+returns (args, in_shardings) of ShapeDtypeStructs for the step function of
+the shape's kind — the no-allocation stand-ins the multi-pod dry-run lowers
+against.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, RunShape, SHAPES, applicable_shapes, smoke,
+)
+from repro.sharding.partition import LogicalRules, sharding_for_shape
+
+_MODULES = {
+    "gemma3-4b": "gemma3_4b",
+    "qwen3-32b": "qwen3_32b",
+    "qwen3-8b": "qwen3_8b",
+    "llama3.2-3b": "llama32_3b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "mamba2-2.7b": "mamba2_27b",
+    "whisper-large-v3": "whisper_large_v3",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def rules_for(cfg: ArchConfig) -> LogicalRules:
+    rules = LogicalRules()
+    if cfg.rules_overrides:
+        rules = rules.with_overrides(**dict(cfg.rules_overrides))
+    return rules
+
+
+def batch_specs(cfg: ArchConfig, shape: RunShape, mesh, rules=None) -> dict:
+    """ShapeDtypeStruct batch for the given run shape (modalities stubbed)."""
+    rules = rules or rules_for(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    def sds(shp, dtype, axes):
+        return jax.ShapeDtypeStruct(
+            shp, dtype, sharding=sharding_for_shape(shp, axes, mesh, rules))
+
+    if shape.kind == "train":
+        out = {
+            "tokens": sds((b, s), jnp.int32, ("batch", "seq")),
+            "labels": sds((b, s), jnp.int32, ("batch", "seq")),
+        }
+    elif shape.kind == "prefill":
+        out = {"tokens": sds((b, s), jnp.int32, ("batch", "seq"))}
+    else:  # decode: one new token
+        out = {"tokens": sds((b, 1), jnp.int32, ("batch", None))}
+    if cfg.n_vision_tokens and shape.kind != "decode":
+        out["vision_embeds"] = sds((b, cfg.n_vision_tokens, cfg.d_model), dt,
+                                   ("batch", "patches", "embed"))
+    if cfg.n_audio_frames and shape.kind != "decode":
+        out["audio_frames"] = sds((b, cfg.n_audio_frames, cfg.d_model), dt,
+                                  ("batch", "frames", "embed"))
+    return out
+
+
+def param_specs(cfg: ArchConfig, mesh, rules=None):
+    """Abstract, sharded parameter ShapeDtypeStructs."""
+    from repro.models.model import init_abstract, logical_axes_tree
+    rules = rules or rules_for(cfg)
+    shapes = init_abstract(cfg)
+    axes = logical_axes_tree(cfg)
+    return jax.tree.map(
+        lambda sd, ax: jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype,
+            sharding=sharding_for_shape(sd.shape, ax, mesh, rules)),
+        shapes, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_specs(cfg: ArchConfig, shape: RunShape, mesh, rules=None):
+    """Abstract, sharded decode-cache ShapeDtypeStructs."""
+    from repro.models.model import abstract_cache, cache_logical_axes
+    rules = rules or rules_for(cfg)
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    axes = cache_logical_axes(cfg, shape.global_batch, shape.seq_len)
+    return jax.tree.map(
+        lambda sd, ax: jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype,
+            sharding=sharding_for_shape(sd.shape, ax, mesh, rules)),
+        cache, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def input_specs(arch_id: str, shape_name: str, mesh, *, with_opt: bool = True):
+    """Full argument specs for the dry-run step of (arch × shape).
+
+    train  → (params, opt_state, batch)   for train_step
+    prefill→ (params, batch)              for prefill_step
+    decode → (params, cache, batch, pos)  for serve_step
+    """
+    cfg = get(arch_id)
+    shape = SHAPES[shape_name]
+    rules = rules_for(cfg)
+    params = param_specs(cfg, mesh, rules)
+    batch = batch_specs(cfg, shape, mesh, rules)
+    if shape.kind == "train":
+        if not with_opt:
+            return cfg, (params, batch)
+        from repro.train.optimizer import abstract_opt_state
+        opt = abstract_opt_state(params, mesh, rules)
+        return cfg, (params, opt, batch)
+    if shape.kind == "prefill":
+        return cfg, (params, batch)
+    cache = cache_specs(cfg, shape, mesh, rules)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cfg, (params, cache, batch, pos)

@@ -1,0 +1,202 @@
+"""Code generation (paper §2.7, Algorithm 2): grammar → executable source.
+
+The merged grammar is emitted as a self-contained Python module:
+
+  * communication terminals → ``comm.do(...)`` calls carrying the exact
+    traced parameters (kind, payload shape/dtype, mesh axes, permute detail)
+    — lossless, like the paper's direct MPI-call emission;
+  * computation terminals → ``blocks.run_combo(st, x)`` with the QP-searched
+    block counts (paper: "combine the code blocks into a function");
+  * non-terminals → Python functions; run-length exponents → ``fori_loop``
+    via :func:`repro.core.replay.rep` (the O(1) loop replay of a^i symbols);
+  * main rules → per-cluster driver functions with rank-set branch guards,
+    consecutive symbols sharing a guard are grouped (paper: "compare and
+    merge the same rank lists to reduce redundant branch statements").
+
+The module executes under any comm backend: ``LocalSim`` on one host, or
+``DeviceComm`` inside ``shard_map`` on a real mesh, where its lowered HLO
+reproduces the original program's collective schedule.
+"""
+from __future__ import annotations
+
+import textwrap
+from typing import Mapping
+
+from repro.core.events import CommEvent, ComputeEvent, is_comm
+from repro.core.interproc import MergedProgram
+
+
+def _fmt_rankset(rs: frozenset, n_ranks: int) -> str:
+    """Compact literal: ALL / range / strided range / explicit set."""
+    if len(rs) == n_ranks:
+        return "ALL"
+    s = sorted(rs)
+    if len(s) == 1:
+        return f"frozenset(({s[0]},))"
+    step = s[1] - s[0]
+    if step > 0 and all(b - a == step for a, b in zip(s, s[1:])):
+        return f"frozenset(range({s[0]}, {s[-1] + 1}, {step}))" if step > 1 \
+            else f"frozenset(range({s[0]}, {s[-1] + 1}))"
+    return "frozenset((" + ", ".join(map(str, s)) + ",))"
+
+
+def generate_source(merged: MergedProgram,
+                    combos: Mapping[int, tuple],
+                    name: str = "proxy",
+                    axis_sizes: Mapping[str, int] | None = None) -> str:
+    """Emit the proxy-app module source.
+
+    ``combos[gid]`` is ``(x, unroll)`` — the 11-int loop-turn vector and the
+    block-instances-per-turn factor — for the compute terminal with global
+    id ``gid`` (one per compute-event cluster, paper §2.4).
+    """
+    axis_sizes = dict(axis_sizes or {})
+    L: list[str] = []
+    w = L.append
+
+    w(f'"""Auto-generated performance proxy ({name}).')
+    w("")
+    w("Synthesized by repro.core (Siesta-JAX): the collective skeleton is a")
+    w("lossless replay of the traced program; compute segments are QP-fitted")
+    w("block combinations.  Do not edit."  '"""')
+    w("from jax import lax  # noqa: F401")
+    w("from repro.core import blocks as _blocks")
+    w("from repro.core.replay import rep as _rep")
+    w("")
+    w(f"N_RANKS = {merged.n_ranks}")
+    w(f"AXIS_SIZES = {dict(axis_sizes)!r}")
+
+    # -- comm buffer pool (one per distinct payload shape/dtype) --------------
+    bufs: dict[tuple, str] = {}
+    for ev in merged.table.events:
+        if is_comm(ev):
+            key = (ev.shape, ev.dtype)
+            if key not in bufs:
+                bufs[key] = f"buf{len(bufs)}"
+    w("COMM_BUFFERS = {")
+    for (shape, dtype), bname in bufs.items():
+        w(f"    {bname!r}: ({shape!r}, {dtype!r}),")
+    w("}")
+    w("ALL = frozenset(range(N_RANKS))")
+    w("")
+
+    # -- terminals -------------------------------------------------------------
+    for gid, ev in enumerate(merged.table.events):
+        if is_comm(ev):
+            bname = bufs[(ev.shape, ev.dtype)]
+            w(f"def t{gid}(st, comm):  # {ev.kind} {ev.dtype}{list(ev.shape)} over {ev.axes}")
+            w(f"    return comm.do(st, {bname!r}, kind={ev.kind!r}, "
+              f"axes={ev.axes!r}, detail={ev.detail!r}, "
+              f"shape={ev.shape!r}, dtype={ev.dtype!r})")
+        else:
+            combo = combos.get(gid)
+            if combo is None:
+                raise KeyError(f"no block combo for compute terminal {gid}")
+            x, unroll = combo
+            w(f"def t{gid}(st, comm):  # MPI_Compute proxy, cluster {ev.cluster_id}")
+            w(f"    return _blocks.run_combo(st, {tuple(int(v) for v in x)!r}, "
+              f"unroll={int(unroll)})")
+        w("")
+
+    # -- non-terminals (children before parents) -------------------------------
+    order = _topo_order(merged.rules)
+    for rid in order:
+        w(f"def r{rid}(st, comm):")
+        body = merged.rules[rid]
+        if not body:
+            w("    return st")
+            w("")
+            continue
+        for kind, ref, exp in body:
+            fn = f"t{ref}" if kind == "t" else f"r{ref}"
+            if exp == 1:
+                w(f"    st = {fn}(st, comm)")
+            else:
+                w(f"    st = _rep({fn}, {exp}, st, comm)")
+        w("    return st")
+        w("")
+
+    # -- main rules with rank-set guards ----------------------------------------
+    guards_meta: list[list[str]] = []
+    for ci, (main, cranks) in enumerate(zip(merged.mains, merged.cluster_ranks)):
+        w(f"def main{ci}(st, comm, rank):")
+        if not main:
+            w("    return st")
+            w("")
+            guards_meta.append([])
+            continue
+        meta = []
+        # group consecutive symbols sharing a rank set (Alg. 2 lines 15-18)
+        runs: list[tuple[frozenset, list]] = []
+        for kind, ref, exp, rs in main:
+            if runs and runs[-1][0] == rs:
+                runs[-1][1].append((kind, ref, exp))
+            else:
+                runs.append((rs, [(kind, ref, exp)]))
+        for rs, syms in runs:
+            full = rs >= cranks
+            indent = "    "
+            if not full:
+                w(f"    if rank in {_fmt_rankset(rs, merged.n_ranks)}:")
+                indent = "        "
+            for kind, ref, exp in syms:
+                fn = f"t{ref}" if kind == "t" else f"r{ref}"
+                if exp == 1:
+                    w(f"{indent}st = {fn}(st, comm)")
+                else:
+                    w(f"{indent}st = _rep({fn}, {exp}, st, comm)")
+            meta.append("None" if full else _fmt_rankset(rs, merged.n_ranks))
+        w("    return st")
+        w("")
+        guards_meta.append(meta)
+
+    # -- driver + signature -------------------------------------------------------
+    w("CLUSTER_RANKS = (")
+    for cr in merged.cluster_ranks:
+        w(f"    {_fmt_rankset(cr, merged.n_ranks)},")
+    w(")")
+    w("_MAINS = (" + ", ".join(f"main{i}" for i in range(len(merged.mains)))
+      + ("," if len(merged.mains) == 1 else "") + ")")
+    w("_GUARDS = (")
+    for meta in guards_meta:
+        w("    (" + ", ".join(meta) + ("," if len(meta) == 1 else "") + "),")
+    w(")")
+    w("")
+    w(textwrap.dedent("""\
+        def run_rank(st, comm, rank):
+            \"\"\"Execute rank ``rank``'s proxy program (host-level dispatch).\"\"\"
+            for ranks, fn in zip(CLUSTER_RANKS, _MAINS):
+                if rank in ranks:
+                    st = fn(st, comm, rank)
+            return st
+
+
+        def program_signature(rank):
+            \"\"\"Hashable per-rank control-flow signature (jit dedupe key).\"\"\"
+            sig = []
+            for ci, (ranks, guards) in enumerate(zip(CLUSTER_RANKS, _GUARDS)):
+                if rank in ranks:
+                    sig.append((ci, tuple(i for i, g in enumerate(guards)
+                                          if g is None or rank in g)))
+            return tuple(sig)
+    """))
+    return "\n".join(L)
+
+
+def _topo_order(rules: dict[int, list]) -> list[int]:
+    """Children-first ordering of non-terminal definitions."""
+    seen: set[int] = set()
+    out: list[int] = []
+
+    def visit(rid: int):
+        if rid in seen:
+            return
+        seen.add(rid)
+        for kind, ref, _ in rules[rid]:
+            if kind == "r":
+                visit(ref)
+        out.append(rid)
+
+    for rid in sorted(rules):
+        visit(rid)
+    return out

@@ -1,0 +1,224 @@
+"""Event model for Siesta-JAX traces.
+
+The paper (§2.2-2.3) records two event kinds:
+  * communication events -- MPI calls with full parameter info (lossless), with
+    relative-rank encoding for point-to-point targets and canonicalized handles;
+  * computation events   -- everything between two communication events,
+    characterized by a 6-metric hardware-counter vector (virtual ``MPI_Compute``).
+
+This module is the TPU/JAX re-founding: communication events are mesh
+collectives (psum / all_gather / reduce_scatter / all_to_all / ppermute), and
+computation events carry the 6-metric TPU cost vector of
+:mod:`repro.core.metrics`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+# The 6 TPU performance metrics (the analog of the paper's Table 1).
+# INS/CYC/LST/L1_DCM/BR_CN/MSP  ->  see DESIGN.md §2 for the mapping.
+METRIC_NAMES: tuple[str, ...] = (
+    "mxu_flops",        # MXU (dot/conv) floating point ops
+    "vpu_elems",        # VPU elementwise/reduction element ops
+    "hbm_bytes",        # fusion-agnostic memory traffic (operands + results)
+    "transcendentals",  # exp/log/tanh/erf/... slow-path VPU ops
+    "gather_elems",     # irregularly-addressed elements (gather/scatter/take)
+    "scan_steps",       # sequential loop iterations (serialization hazard)
+)
+N_METRICS = len(METRIC_NAMES)
+
+_DTYPE_BYTES = {
+    "float64": 8, "int64": 8, "uint64": 8, "complex64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool": 1,
+    "float8_e4m3fn": 1, "float8_e5m2": 1, "int4": 1, "uint4": 1,
+}
+
+
+def dtype_bytes(dtype: Any) -> int:
+    return _DTYPE_BYTES.get(str(np.dtype(dtype).name) if not isinstance(dtype, str) else dtype,
+                            _DTYPE_BYTES.get(str(dtype), 4))
+
+
+# ---------------------------------------------------------------------------
+# Communication events
+# ---------------------------------------------------------------------------
+
+#: collective kinds we record.  ``ppermute`` is the point-to-point analog
+#: (MPI_Send/Recv); the rest are MPI collectives.
+COMM_KINDS = (
+    "psum", "all_gather", "reduce_scatter", "all_to_all", "ppermute",
+    "pmax", "pmin", "broadcast",
+)
+
+
+def encode_relative_perm(perm: Sequence[tuple[int, int]], axis_size: int):
+    """Relative-rank encoding of a ppermute permutation (paper §2.2, Fig. 2).
+
+    If every (src, dst) pair satisfies ``dst - src ≡ k (mod axis_size)`` the
+    whole permutation compresses to the single offset ``k`` plus the
+    participation set (stored as a canonical mask tuple only when not all
+    ranks participate).  Otherwise the sorted pair tuple is kept verbatim
+    (still lossless).
+    """
+    if not perm:
+        return ("empty",)
+    offsets = {(dst - src) % axis_size for src, dst in perm}
+    srcs = sorted(src for src, _ in perm)
+    full = len(perm) == axis_size and srcs == list(range(axis_size))
+    if len(offsets) == 1:
+        off = offsets.pop()
+        if full:
+            return ("shift", off)
+        # partial participation: mask of source ranks (boundary effects --
+        # the non-periodic stencil case of paper Fig. 2).
+        return ("shift", off, tuple(srcs))
+    return ("perm", tuple(sorted((s, d) for s, d in perm)))
+
+
+def decode_relative_perm(detail: tuple, axis_size: int) -> list[tuple[int, int]]:
+    """Inverse of :func:`encode_relative_perm` (losslessness guarantee)."""
+    tag = detail[0]
+    if tag == "empty":
+        return []
+    if tag == "shift":
+        off = detail[1]
+        srcs = detail[2] if len(detail) > 2 else range(axis_size)
+        return [(s, (s + off) % axis_size) for s in srcs]
+    return [tuple(p) for p in detail[1]]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommEvent:
+    """A lossless record of one collective (the MPI-call analog)."""
+    kind: str                       # one of COMM_KINDS
+    shape: tuple[int, ...]          # per-device payload shape
+    dtype: str
+    axes: tuple[str, ...]           # mesh axes the collective spans
+    detail: tuple = ()              # e.g. relative-rank encoding for ppermute
+
+    def __post_init__(self):
+        if self.kind not in COMM_KINDS:
+            raise ValueError(f"unknown collective kind {self.kind!r}")
+
+    @property
+    def payload_bytes(self) -> int:
+        n = math.prod(self.shape) if self.shape else 1
+        return n * dtype_bytes(self.dtype)
+
+    def key(self) -> str:
+        """Canonical string key (terminal-table identity, paper §2.5)."""
+        return (f"C|{self.kind}|{'x'.join(map(str, self.shape))}|{self.dtype}"
+                f"|{','.join(self.axes)}|{self.detail!r}")
+
+
+# ---------------------------------------------------------------------------
+# Computation events
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeEvent:
+    """A virtual ``MPI_Compute`` call: the 6-metric cost of one compute span."""
+    metrics: tuple[float, ...]      # aligned with METRIC_NAMES
+    cluster_id: int = -1            # assigned by cluster_compute_events
+
+    def __post_init__(self):
+        if len(self.metrics) != N_METRICS:
+            raise ValueError(f"expected {N_METRICS} metrics")
+
+    @property
+    def vector(self) -> np.ndarray:
+        return np.asarray(self.metrics, dtype=np.float64)
+
+    def key(self) -> str:
+        if self.cluster_id >= 0:
+            return f"X|{self.cluster_id}"
+        return "X|" + "|".join(f"{m:.6g}" for m in self.metrics)
+
+
+Event = Any  # CommEvent | ComputeEvent
+
+
+def is_comm(ev: Event) -> bool:
+    return isinstance(ev, CommEvent)
+
+
+def is_compute(ev: Event) -> bool:
+    return isinstance(ev, ComputeEvent)
+
+
+# ---------------------------------------------------------------------------
+# Computation-event clustering (paper §2.3: "we set a threshold to cluster
+# similar computation events into one event")
+# ---------------------------------------------------------------------------
+
+
+def _quantize(vec: np.ndarray, rel_tol: float) -> tuple[int, ...]:
+    """Log-space bucketing: two metric vectors land in the same bucket when
+    every metric agrees within a multiplicative factor of ~(1 + rel_tol)."""
+    width = math.log1p(rel_tol)
+    out = []
+    for v in vec:
+        if v <= 0:
+            out.append(-1)
+        else:
+            out.append(int(math.floor(math.log(v + 1.0) / width)))
+    return tuple(out)
+
+
+def cluster_compute_events(
+    events: Iterable[ComputeEvent], rel_tol: float = 0.05
+) -> tuple[list[ComputeEvent], dict[int, np.ndarray]]:
+    """Assign cluster ids; each cluster's representative vector is the mean.
+
+    Two passes: log-space bucketing (O(n)), then a greedy merge of buckets
+    whose representatives agree within ``rel_tol`` on every metric — so
+    near-identical events straddling a bucket boundary still unify (the
+    paper's "threshold to cluster similar computation events").
+    """
+    buckets: dict[tuple[int, ...], int] = {}
+    sums: dict[int, np.ndarray] = {}
+    counts: dict[int, int] = {}
+    assigned: list[tuple[ComputeEvent, int]] = []
+    for ev in events:
+        q = _quantize(ev.vector, rel_tol)
+        if q not in buckets:
+            buckets[q] = len(buckets)
+        bid = buckets[q]
+        sums[bid] = sums.get(bid, 0) + ev.vector
+        counts[bid] = counts.get(bid, 0) + 1
+        assigned.append((ev, bid))
+
+    # merge close buckets (greedy, deterministic by bucket id)
+    bids = sorted(sums)
+    bucket_rep = {b: sums[b] / counts[b] for b in bids}
+    remap: dict[int, int] = {}
+    cluster_reps: list[np.ndarray] = []
+    cluster_w: list[int] = []
+    for b in bids:
+        v = bucket_rep[b]
+        placed = False
+        for cid, rep in enumerate(cluster_reps):
+            denom = np.maximum(np.maximum(np.abs(rep), np.abs(v)), 1e-30)
+            if np.all(np.abs(rep - v) / denom <= rel_tol):
+                w = cluster_w[cid]
+                cluster_reps[cid] = (rep * w + v * counts[b]) / (w + counts[b])
+                cluster_w[cid] = w + counts[b]
+                remap[b] = cid
+                placed = True
+                break
+        if not placed:
+            remap[b] = len(cluster_reps)
+            cluster_reps.append(v.copy())
+            cluster_w.append(counts[b])
+
+    out = [dataclasses.replace(ev, cluster_id=remap[bid])
+           for ev, bid in assigned]
+    reps = {cid: rep for cid, rep in enumerate(cluster_reps)}
+    return out, reps

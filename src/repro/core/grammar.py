@@ -1,0 +1,135 @@
+"""Frozen grammar + terminal-table model (paper §2.5-2.6 data structures).
+
+A :class:`Grammar` is the per-process result of intra-process compression:
+an id-keyed rule set (rule 0 = main rule) over a :class:`TerminalTable` that
+maps canonical event keys to small integer ids (the hash table of §2.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Iterable
+
+from repro.core.events import CommEvent, ComputeEvent, Event, is_comm
+from repro.core.sequitur import Sequitur
+
+# A rule body entry: ("t", terminal_id, exp) or ("r", rule_id, exp)
+Sym = tuple[str, int, int]
+
+
+class TerminalTable:
+    """Event <-> id interning table (paper: 'events are stored in a hash
+    table ... then the trace is represented by a sequence of ids')."""
+
+    def __init__(self):
+        self.by_key: dict[str, int] = {}
+        self.events: list[Event] = []
+
+    def intern(self, ev: Event) -> int:
+        k = ev.key()
+        tid = self.by_key.get(k)
+        if tid is None:
+            tid = len(self.events)
+            self.by_key[k] = tid
+            self.events.append(ev)
+        return tid
+
+    def __len__(self):
+        return len(self.events)
+
+    def __getitem__(self, tid: int) -> Event:
+        return self.events[tid]
+
+
+@dataclasses.dataclass
+class Grammar:
+    rules: dict[int, list[Sym]]     # rule 0 is the main rule
+    table: TerminalTable
+    main_id: int = 0
+
+    # -- lossless expansion ---------------------------------------------------
+
+    def expand_ids(self, rid: int | None = None) -> list[int]:
+        rid = self.main_id if rid is None else rid
+        out: list[int] = []
+        self._expand(rid, 1, out)
+        return out
+
+    def _expand(self, rid: int, times: int, out: list[int]) -> None:
+        body = self.rules[rid]
+        for _ in range(times):
+            for kind, ref, exp in body:
+                if kind == "t":
+                    out.extend([ref] * exp)
+                else:
+                    self._expand(ref, exp, out)
+
+    def expand_events(self) -> list[Event]:
+        return [self.table[i] for i in self.expand_ids()]
+
+    def expanded_length(self, rid: int | None = None) -> int:
+        """Number of events the grammar expands to, without expanding."""
+        rid = self.main_id if rid is None else rid
+        memo: dict[int, int] = {}
+
+        def length(r: int) -> int:
+            if r in memo:
+                return memo[r]
+            total = 0
+            for kind, ref, exp in self.rules[r]:
+                total += exp * (1 if kind == "t" else length(ref))
+            memo[r] = total
+            return total
+
+        return length(rid)
+
+    # -- size accounting (paper Table 3 'compressed size') --------------------
+
+    def n_symbols(self) -> int:
+        return sum(len(b) for b in self.rules.values())
+
+    def encoded_size_bytes(self) -> int:
+        """Serialized size: symbols (kind+ref+exp ~ 9B) + terminal table."""
+        sym_bytes = 9 * self.n_symbols() + 4 * len(self.rules)
+        table_bytes = sum(len(ev.key()) + 2 for ev in self.table.events)
+        return sym_bytes + table_bytes
+
+    def rule_depth(self, rid: int) -> int:
+        """Tree height with terminals as leaves (paper §2.6.2)."""
+        memo: dict[int, int] = {}
+
+        def depth(r: int) -> int:
+            if r in memo:
+                return memo[r]
+            memo[r] = 0  # cycle guard (well-formed grammars are acyclic)
+            d = 1 + max((depth(ref) for k, ref, _ in self.rules[r] if k == "r"),
+                        default=0)
+            memo[r] = d
+            return d
+
+        return depth(rid)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "rules": {str(k): v for k, v in self.rules.items()},
+            "terminals": [ev.key() for ev in self.table.events],
+        })
+
+
+def raw_trace_bytes(events: Iterable[Event]) -> int:
+    """Uncompressed trace size estimate (paper Table 3 'trace size'):
+    one record per event (key string, like a text trace line)."""
+    return sum(len(ev.key()) + 1 for ev in events)
+
+
+def from_sequitur(s: Sequitur, table: TerminalTable) -> Grammar:
+    return Grammar(rules=s.grammar_rules(), table=table)
+
+
+def compress_events(events: Iterable[Event]) -> Grammar:
+    """Intern + Sequitur-compress a flat event sequence."""
+    table = TerminalTable()
+    s = Sequitur()
+    for ev in events:
+        s.push(table.intern(ev))
+    return from_sequitur(s, table)

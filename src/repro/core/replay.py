@@ -1,0 +1,178 @@
+"""Proxy replay engine + fidelity measurement (paper §3.3).
+
+``rep`` is the run-length replay primitive used by generated code: small
+exponents unroll (cheap trace), large exponents become ``lax.fori_loop`` so
+a loop that executed 10^6 times costs O(1) code and O(1) trace — mirroring
+the grammar's a^i symbols.
+
+:class:`ProxyProgram` wraps a generated module:
+  * ``run_local(rank)`` executes the proxy on this host (LocalSim comm),
+    jit-compiling once per distinct control-flow signature;
+  * ``rank_metrics(rank)`` re-traces the generated code with the *same*
+    jaxpr cost walker used on the original program — the measurement behind
+    the paper's Table 3 relative-error columns;
+  * ``fidelity(original)`` computes δ̄ = mean_{m,p} |A-B|/A (paper eq. 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib.util
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import blocks
+from repro.core.events import Event, METRIC_NAMES, N_METRICS, is_comm
+from repro.core.tracer import trace_fn
+from repro.sharding.collectives import LocalSim
+
+_UNROLL_LIMIT = 4
+
+
+def rep(fn, n: int, st: dict, comm) -> dict:
+    """Repeat ``fn`` n times: unrolled when small, ``fori_loop`` otherwise."""
+    if n <= _UNROLL_LIMIT:
+        for _ in range(n):
+            st = fn(st, comm)
+        return st
+    return lax.fori_loop(0, n, lambda i, s: fn(s, comm), st)
+
+
+def load_module(source: str, name: str = "generated_proxy",
+                out_dir: str | Path | None = None):
+    """Write generated source to a file and import it as a module."""
+    out_dir = Path(out_dir) if out_dir else Path(tempfile.mkdtemp(prefix="proxy_"))
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{name}.py"
+    path.write_text(source)
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod
+    spec.loader.exec_module(mod)
+    mod.__proxy_path__ = str(path)
+    return mod
+
+
+def init_replay_state(module, seed: int = 0) -> dict:
+    """Block state + the generated module's comm buffer pool."""
+    st = blocks.init_state(seed)
+    for bname, (shape, dtype) in module.COMM_BUFFERS.items():
+        st[bname] = jnp.full(shape, 0.5, dtype=dtype)
+    return st
+
+
+@dataclasses.dataclass
+class FidelityReport:
+    """Per-(metric, rank) relative errors (paper Table 3 / Fig. 4)."""
+    delta: np.ndarray          # (n_metrics, n_ranks)
+    comm_lossless: bool        # event-id sequences reproduced exactly
+    mean: float                # δ̄, paper eq. 8
+
+    def heatmap_csv(self) -> str:
+        lines = ["metric," + ",".join(f"rank{p}" for p in range(self.delta.shape[1]))]
+        for m, name in enumerate(METRIC_NAMES):
+            lines.append(name + "," + ",".join(f"{v:.4f}" for v in self.delta[m]))
+        return "\n".join(lines)
+
+
+class ProxyProgram:
+    """A synthesized proxy-app: source + module + replay/fidelity methods."""
+
+    def __init__(self, source: str, module, merged, combos,
+                 axis_sizes: dict[str, int] | None = None):
+        self.source = source
+        self.module = module
+        self.merged = merged
+        self.combos = combos
+        self.axis_sizes = dict(axis_sizes or {})
+        self._compiled: dict = {}
+
+    # -- execution -------------------------------------------------------------
+
+    def _fn_for_rank(self, rank: int, comm):
+        sig = self.module.program_signature(rank)
+        key = (sig, id(comm))
+        if key not in self._compiled:
+            mod = self.module
+            self._compiled[key] = jax.jit(
+                lambda st: mod.run_rank(st, comm, rank))
+        return self._compiled[key]
+
+    def run_local(self, ranks: Sequence[int] | None = None, seed: int = 0,
+                  comm=None) -> dict:
+        """Execute ranks sequentially on this host; returns final state of
+        the last rank (values are meaningless — this is a performance proxy)."""
+        comm = comm or LocalSim()
+        ranks = range(self.merged.n_ranks) if ranks is None else ranks
+        st = init_replay_state(self.module, seed)
+        out = st
+        for r in ranks:
+            out = self._fn_for_rank(r, comm)(st)
+        jax.block_until_ready(out)
+        return out
+
+    def time_local(self, rank: int = 0, iters: int = 1, seed: int = 0) -> float:
+        """Wall-clock seconds of one rank's replay (compiled, warm)."""
+        comm = LocalSim()
+        fn = self._fn_for_rank(rank, comm)
+        st = init_replay_state(self.module, seed)
+        jax.block_until_ready(fn(st))  # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(st))
+        return (time.perf_counter() - t0) / iters
+
+    # -- measurement -------------------------------------------------------------
+
+    def rank_metrics(self, rank: int) -> np.ndarray:
+        """Walker-measured 6-metric total of this rank's generated program."""
+        st = jax.eval_shape(lambda: init_replay_state(self.module))
+        comm = LocalSim()
+        tr = trace_fn(lambda s: self.module.run_rank(s, comm, rank), st)
+        return tr.total_compute()
+
+    def expand_rank_ids(self, rank: int) -> list[int]:
+        return self.merged.expand_rank(rank)
+
+    def fidelity(self, original_rank_traces: Sequence[Sequence[Event]],
+                 original_rank_keys: Sequence[Sequence[str]] | None = None,
+                 sample_ranks: int | None = None) -> FidelityReport:
+        """Compare proxy vs original per rank (paper §3.3.1).
+
+        Compute metrics: walker totals of generated code vs the original
+        trace's compute totals.  Communication: the merged grammar must
+        expand to the original event *key* sequence exactly (losslessness;
+        keys, not local ids — heterogeneous ranks intern in different
+        orders).
+        """
+        n_ranks = len(original_rank_traces)
+        ranks = list(range(n_ranks))
+        if sample_ranks and n_ranks > sample_ranks:
+            step = max(n_ranks // sample_ranks, 1)
+            ranks = ranks[::step][:sample_ranks]
+        lossless = True
+        if original_rank_keys is not None:
+            for r in range(n_ranks):
+                got = [self.merged.table[i].key()
+                       for i in self.expand_rank_ids(r)]
+                if list(original_rank_keys[r]) != got:
+                    lossless = False
+                    break
+        delta = np.zeros((N_METRICS, len(ranks)))
+        for col, r in enumerate(ranks):
+            a = np.zeros(N_METRICS)
+            for ev in original_rank_traces[r]:
+                if not is_comm(ev):
+                    a += ev.vector
+            b = self.rank_metrics(r)
+            delta[:, col] = np.abs(a - b) / np.maximum(np.abs(a), 1e-30)
+            delta[a <= 0, col] = 0.0  # metric absent in original and (near) proxy
+        return FidelityReport(delta=delta, comm_lossless=lossless,
+                              mean=float(delta.mean()))

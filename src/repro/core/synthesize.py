@@ -1,0 +1,168 @@
+"""Top-level proxy-app synthesis pipeline (paper Fig. 1).
+
+    trace → cluster compute events → per-rank Sequitur grammars →
+    inter-process merge → QP block-combination search → code generation
+
+One call::
+
+    result = synthesize(step_fn, *specs, axis_sizes={"data": 16})
+    result.proxy.run_local()
+    print(result.stats["compression_ratio"], result.fidelity.mean)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import proxy_search
+from repro.core.events import (
+    ComputeEvent, Event, cluster_compute_events, is_comm,
+)
+from repro.core.grammar import Grammar, TerminalTable, from_sequitur, raw_trace_bytes
+from repro.core.interproc import MergedProgram, merge_grammars
+from repro.core.codegen import generate_source
+from repro.core.replay import FidelityReport, ProxyProgram, load_module
+from repro.core.sequitur import Sequitur
+from repro.core.tracer import Trace, per_rank_traces, trace_fn
+
+
+@dataclasses.dataclass
+class SynthesisResult:
+    proxy: ProxyProgram
+    merged: MergedProgram
+    grammars: list[Grammar]
+    rank_traces: list[list[Event]]
+    rank_ids: list[list[int]]
+    fits: dict[int, proxy_search.FitResult]
+    stats: dict
+
+    @property
+    def source(self) -> str:
+        return self.proxy.source
+
+    def fidelity(self, sample_ranks: int | None = 16) -> FidelityReport:
+        keys = [[g.table[i].key() for i in ids]
+                for g, ids in zip(self.grammars, self.rank_ids)]
+        return self.proxy.fidelity(self.rank_traces, keys,
+                                   sample_ranks=sample_ranks)
+
+
+def compress_rank_traces(rank_traces: Sequence[Sequence[Event]],
+                         rel_tol: float = 0.05,
+                         threshold: float = 0.5,
+                         ) -> tuple[list[Grammar], MergedProgram,
+                                    list[list[int]], dict[int, np.ndarray]]:
+    """Cluster compute events jointly, build per-rank grammars, merge.
+
+    Joint clustering across ranks is the paper's "inter-process merging of
+    computing terminals has been completed in the process of processing
+    computing events" (§2.6.1).
+    """
+    flat: list[ComputeEvent] = []
+    index: list[list[int]] = []
+    for tr in rank_traces:
+        idx = []
+        for ev in tr:
+            if not is_comm(ev):
+                idx.append(len(flat))
+                flat.append(ev)
+            else:
+                idx.append(-1)
+        index.append(idx)
+    clustered, reps = cluster_compute_events(flat, rel_tol)
+
+    grammars: list[Grammar] = []
+    rank_ids: list[list[int]] = []
+    for tr, idx in zip(rank_traces, index):
+        table = TerminalTable()
+        seq = Sequitur()
+        ids = []
+        for ev, fi in zip(tr, idx):
+            ev2 = clustered[fi] if fi >= 0 else ev
+            tid = table.intern(ev2)
+            ids.append(tid)
+            seq.push(tid)
+        grammars.append(from_sequitur(seq, table))
+        rank_ids.append(ids)
+    merged = merge_grammars(grammars, threshold)
+    return grammars, merged, rank_ids, reps
+
+
+def synthesize(fn: Callable | None = None, *args,
+               rank_traces: Sequence[Sequence[Event]] | None = None,
+               axis_sizes: dict[str, int] | None = None,
+               name: str = "proxy",
+               rel_tol: float = 0.05,
+               threshold: float = 0.5,
+               solver: str = "nnls",
+               count_scale: float = 1.0,
+               out_dir=None) -> SynthesisResult:
+    """Synthesize a proxy-app from a step function or pre-recorded traces.
+
+    ``count_scale`` < 1 shrinks the fitted block counts (and hence replay
+    time) proportionally — the proxy then represents a 1/count_scale
+    time-dilated execution; useful to keep CPU-host replay benchmarks fast.
+    """
+    if rank_traces is None:
+        if fn is None:
+            raise ValueError("need fn or rank_traces")
+        template: Trace = trace_fn(fn, *args, axis_sizes=axis_sizes)
+        axis_sizes = dict(template.axis_sizes if axis_sizes is None
+                          else axis_sizes)
+        rank_traces = per_rank_traces(template, axis_sizes)
+    n_events = sum(len(t) for t in rank_traces)
+    trace_bytes = sum(raw_trace_bytes(t) for t in rank_traces)
+
+    grammars, merged, rank_ids, reps = compress_rank_traces(
+        rank_traces, rel_tol, threshold)
+
+    # QP block-combination search, one fit per unique compute terminal
+    fits: dict[int, proxy_search.FitResult] = {}
+    combos: dict[int, tuple] = {}
+    targets, gids = [], []
+    for gid, ev in enumerate(merged.table.events):
+        if not is_comm(ev):
+            t = np.asarray(reps[ev.cluster_id] if ev.cluster_id >= 0
+                           else ev.vector) * count_scale
+            targets.append(t)
+            gids.append(gid)
+    if solver == "pgd" and targets:
+        xs = proxy_search.fit_batch_pgd(np.stack(targets))
+        from repro.core.blocks import calibration_matrix
+        b = calibration_matrix()
+        for gid, t, x in zip(gids, targets, xs):
+            pred = b @ x
+            fits[gid] = proxy_search.FitResult(
+                x=x, predicted=pred, target=t, residual=0.0,
+                per_metric_rel_err=proxy_search.rel_error(t, pred), unroll=1)
+            combos[gid] = (tuple(int(v) for v in x), 1)
+    else:
+        for gid, t in zip(gids, targets):
+            fr = proxy_search.fit_combination(t)
+            fits[gid] = fr
+            combos[gid] = (tuple(int(v) for v in fr.x), fr.unroll)
+
+    source = generate_source(merged, combos, name, axis_sizes)
+    module = load_module(source, name=f"{name}_mod", out_dir=out_dir)
+    proxy = ProxyProgram(source, module, merged, combos, axis_sizes)
+
+    grammar_bytes = merged.encoded_size_bytes()
+    fit_errs = [float(np.mean(f.per_metric_rel_err[f.target > 0]))
+                for f in fits.values() if np.any(f.target > 0)]
+    stats = {
+        "n_ranks": len(rank_traces),
+        "n_events": n_events,
+        "n_unique_terminals": len(merged.table),
+        "n_rules": len(merged.rules),
+        "trace_bytes": trace_bytes,
+        "grammar_bytes": grammar_bytes,
+        "compression_ratio": trace_bytes / max(grammar_bytes, 1),
+        "source_lines": source.count("\n") + 1,
+        "mean_fit_rel_err": float(np.mean(fit_errs)) if fit_errs else 0.0,
+        "max_fit_rel_err": float(np.max(fit_errs)) if fit_errs else 0.0,
+    }
+    return SynthesisResult(proxy=proxy, merged=merged, grammars=grammars,
+                           rank_traces=list(map(list, rank_traces)),
+                           rank_ids=rank_ids, fits=fits, stats=stats)

@@ -1,0 +1,358 @@
+"""Event tracing front-ends (paper §2.2–2.3, DESIGN.md §2).
+
+The paper intercepts MPI calls with PMPI and reads PAPI counters around them.
+Our programs are staged JAX, so tracing needs no runtime interposition at all:
+
+* :func:`trace_fn` walks the jaxpr of a step function.  Collective primitives
+  (``psum``/``all_gather``/``reduce_scatter``/``all_to_all``/``ppermute`` …,
+  visible inside ``shard_map`` bodies) become :class:`CommEvent`s; every
+  equation between two collectives accumulates into the pending 6-metric
+  vector of a :class:`ComputeEvent` (the virtual ``MPI_Compute`` call).
+
+* :class:`TraceSession` is the host-level recorder for multi-step drivers
+  (pipeline schedules, serving engines) whose per-rank behaviour differs in
+  Python, not in the jaxpr.  The collective wrappers in
+  :mod:`repro.sharding.collectives` record into the active session — the
+  literal PMPI-interposition analog.
+
+``lax.scan`` bodies that contain collectives are walked once per iteration so
+the event sequence is exact; Sequitur's run-length constraint collapses the
+repetition back to O(1) grammar space.  Collective-free bodies are costed
+``length`` times in O(1) and charged ``length`` scan steps (the serialization
+hazard metric).
+
+Handle canonicalization (paper: MPI_Request/MPI_Comm pools): distinct
+``axis_index_groups`` values are renumbered in first-use order, so traces stay
+low-entropy and compressible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.events import (
+    CommEvent, ComputeEvent, Event, N_METRICS, encode_relative_perm, is_comm,
+)
+from repro.core.metrics import (
+    COLLECTIVE_PRIMS, I_SCAN, collective_event_info, eqn_cost,
+)
+
+
+@dataclasses.dataclass
+class Trace:
+    """A template trace: one SPMD event stream plus mesh-axis metadata.
+
+    ``ppermute`` events carry their raw permutation; :func:`per_rank_traces`
+    specializes them into per-rank relative-encoded events.
+    """
+    events: list[Event]
+    axis_sizes: dict[str, int]
+
+    def comm_events(self) -> list[CommEvent]:
+        return [e for e in self.events if is_comm(e)]
+
+    def compute_events(self) -> list[ComputeEvent]:
+        return [e for e in self.events if not is_comm(e)]
+
+    def total_compute(self) -> np.ndarray:
+        vec = np.zeros(N_METRICS)
+        for e in self.compute_events():
+            vec += e.vector
+        return vec
+
+    def total_comm_bytes(self) -> int:
+        return sum(e.payload_bytes for e in self.comm_events())
+
+
+class JaxprWalker:
+    """Recursive jaxpr walk producing the template event stream."""
+
+    def __init__(self, axis_sizes: dict[str, int] | None = None):
+        self.events: list[Event] = []
+        self.pending = np.zeros(N_METRICS, dtype=np.float64)
+        self.axis_sizes: dict[str, int] = dict(axis_sizes or {})
+        self._group_pool: dict[tuple, int] = {}   # handle canonicalization
+
+    # -- event emission -------------------------------------------------------
+
+    def flush(self) -> None:
+        if self.pending.any():
+            self.events.append(ComputeEvent(tuple(self.pending)))
+            self.pending = np.zeros(N_METRICS, dtype=np.float64)
+
+    def _emit_comm(self, eqn) -> None:
+        self.flush()
+        info = collective_event_info(eqn)
+        # canonicalize axis_index_groups handles through a first-use pool
+        detail = info["detail"]
+        if detail and detail[0] == "groups" or (len(detail) > 2 and "groups" in detail):
+            detail = self._canon_groups(detail)
+        elif "groups" in detail:
+            detail = self._canon_groups(detail)
+        info["detail"] = detail
+        self.events.append(CommEvent(**info))
+
+    def _canon_groups(self, detail: tuple) -> tuple:
+        out = []
+        i = 0
+        while i < len(detail):
+            if detail[i] == "groups" and i + 1 < len(detail):
+                gid = self._group_pool.setdefault(detail[i + 1],
+                                                  len(self._group_pool))
+                out.extend(["groups", gid])
+                i += 2
+            else:
+                out.append(detail[i])
+                i += 1
+        return tuple(out)
+
+    # -- recursion ------------------------------------------------------------
+
+    def walk(self, jaxpr) -> None:
+        """Walk a (possibly Closed) jaxpr, emitting events in program order."""
+        jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+        for eqn in jaxpr.eqns:
+            self._walk_eqn(eqn)
+
+    def _walk_eqn(self, eqn) -> None:
+        name = eqn.primitive.name
+        if name in COLLECTIVE_PRIMS:
+            self._emit_comm(eqn)
+            return
+        if name in ("pjit", "closed_call", "core_call", "custom_lin"):
+            self.walk(eqn.params["jaxpr"])
+            return
+        if name in ("remat2", "remat", "checkpoint"):
+            self.walk(eqn.params["jaxpr"])
+            return
+        if name in ("custom_jvp_call", "custom_vjp_call", "custom_jvp_call_jaxpr",
+                    "custom_vjp_call_jaxpr"):
+            inner = eqn.params.get("call_jaxpr", eqn.params.get("fun_jaxpr"))
+            if inner is not None:
+                self.walk(inner)
+            return
+        if name == "shard_map":
+            mesh = eqn.params.get("mesh")
+            if mesh is not None:
+                for ax, sz in zip(mesh.axis_names, mesh.shape.values()
+                                  if hasattr(mesh.shape, "values") else mesh.shape):
+                    self.axis_sizes[str(ax)] = int(sz)
+            self.walk(eqn.params["jaxpr"])
+            return
+        if name == "scan":
+            self._walk_scan(eqn)
+            return
+        if name == "while":
+            self._walk_while(eqn)
+            return
+        if name == "cond":
+            self._walk_cond(eqn)
+            return
+        self.pending += eqn_cost(eqn)
+
+    # -- higher-order handling --------------------------------------------------
+
+    def _walk_scan(self, eqn) -> None:
+        body = eqn.params["jaxpr"]
+        length = int(eqn.params["length"])
+        if _contains_collective(body):
+            # exact event sequence; Sequitur's RLE makes this O(1) in grammar
+            for _ in range(length):
+                self.walk(body)
+        else:
+            cost = _subtree_cost(body)
+            self.pending += cost * length
+            self.pending[I_SCAN] += length
+
+    def _walk_while(self, eqn) -> None:
+        body = eqn.params["body_jaxpr"]
+        cond = eqn.params["cond_jaxpr"]
+        # trip count is dynamic; cost one iteration and flag serialization.
+        if _contains_collective(body):
+            self.walk(cond)
+            self.walk(body)
+        else:
+            self.pending += _subtree_cost(cond) + _subtree_cost(body)
+            self.pending[I_SCAN] += 1
+
+    def _walk_cond(self, eqn) -> None:
+        branches = eqn.params["branches"]
+        if any(_contains_collective(b) for b in branches):
+            # SPMD safety requires identical collective skeletons; walk branch 0
+            self.walk(branches[0])
+            return
+        costs = [_subtree_cost(b) for b in branches]
+        self.pending += np.max(np.stack(costs), axis=0)
+
+
+def _contains_collective(jaxpr) -> bool:
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in COLLECTIVE_PRIMS:
+            return True
+        for v in eqn.params.values():
+            if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+                if _contains_collective(v):
+                    return True
+            elif isinstance(v, (tuple, list)):
+                for b in v:
+                    if (hasattr(b, "eqns") or hasattr(b, "jaxpr")) and _contains_collective(b):
+                        return True
+    return False
+
+
+def _subtree_cost(jaxpr) -> np.ndarray:
+    """Total 6-metric cost of a collective-free jaxpr subtree."""
+    w = JaxprWalker()
+    w.walk(jaxpr)
+    w.flush()
+    vec = np.zeros(N_METRICS)
+    for e in w.events:
+        vec += e.vector
+    return vec
+
+
+# ---------------------------------------------------------------------------
+# public front-end: trace a function
+# ---------------------------------------------------------------------------
+
+
+def trace_fn(fn: Callable, *args, axis_sizes: dict[str, int] | None = None,
+             **kwargs) -> Trace:
+    """Trace ``fn(*args, **kwargs)`` into a template event stream.
+
+    Works on any JAX-traceable callable; args may be ShapeDtypeStructs
+    (no allocation — the "binary only" analog is "staged artifact only").
+    """
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    w = JaxprWalker(axis_sizes)
+    w.walk(jaxpr)
+    w.flush()
+    return Trace(w.events, w.axis_sizes)
+
+
+def compute_cost(fn: Callable, *args, **kwargs) -> np.ndarray:
+    """Total 6-metric cost of a collective-free callable (block calibration)."""
+    t = trace_fn(fn, *args, **kwargs)
+    return t.total_compute()
+
+
+# ---------------------------------------------------------------------------
+# per-rank specialization (paper §2.2 relative ranks, §2.6 SPMD merging input)
+# ---------------------------------------------------------------------------
+
+
+def per_rank_traces(trace: Trace, axis_sizes: dict[str, int] | None = None,
+                    ) -> list[list[Event]]:
+    """Specialize the SPMD template to one event list per rank.
+
+    Ranks are the row-major flattening of the mesh axes in ``axis_sizes``
+    order.  ``ppermute`` events become relative-encoded events present only on
+    participating ranks (paper Fig. 2: a shift permutation collapses to one
+    shared terminal; boundary ranks of a non-periodic halo drop out, which is
+    exactly what drives rank-set branches in the merged main rule).
+    """
+    axis_sizes = dict(axis_sizes or trace.axis_sizes)
+    axes = list(axis_sizes)
+    sizes = [axis_sizes[a] for a in axes]
+    n_ranks = int(np.prod(sizes)) if sizes else 1
+
+    def coords(rank: int) -> dict[str, int]:
+        out = {}
+        rem = rank
+        for a, s in zip(reversed(axes), reversed(sizes)):
+            out[a] = rem % s
+            rem //= s
+        return out
+
+    traces: list[list[Event]] = []
+    for rank in range(n_ranks):
+        c = coords(rank)
+        evs: list[Event] = []
+        for ev in trace.events:
+            if is_comm(ev) and ev.kind == "ppermute":
+                ev2 = _specialize_ppermute(ev, c, axis_sizes)
+                if ev2 is not None:
+                    evs.append(ev2)
+            else:
+                evs.append(ev)
+        traces.append(evs)
+    return traces
+
+
+def _specialize_ppermute(ev: CommEvent, coords: dict[str, int],
+                         axis_sizes: dict[str, int]) -> CommEvent | None:
+    if not ev.detail or ev.detail[0] != "rawperm":
+        return ev
+    perm = ev.detail[1]
+    axis = ev.axes[0] if ev.axes else None
+    size = axis_sizes.get(axis, max((max(s, d) for s, d in perm), default=0) + 1)
+    me = coords.get(axis, 0)
+    srcs = {s for s, _ in perm}
+    dsts = {d for _, d in perm}
+    if me not in srcs and me not in dsts:
+        return None  # this rank does not participate
+    rel = encode_relative_perm([tuple(p) for p in perm], size)
+    return dataclasses.replace(ev, detail=rel)
+
+
+# ---------------------------------------------------------------------------
+# host-level interposition recorder (PMPI analog for multi-step drivers)
+# ---------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+class TraceSession:
+    """Record events emitted by instrumented wrappers in host-driver code.
+
+    ``rank_streams[r]`` is rank r's event list.  Wrappers use
+    :func:`record_event`; compute segments are costed with
+    :func:`record_compute`.  Nested sessions are not supported.
+    """
+
+    def __init__(self, n_ranks: int, axis_sizes: dict[str, int] | None = None):
+        self.n_ranks = n_ranks
+        self.axis_sizes = dict(axis_sizes or {})
+        self.rank_streams: list[list[Event]] = [[] for _ in range(n_ranks)]
+
+    def __enter__(self):
+        if getattr(_TLS, "session", None) is not None:
+            raise RuntimeError("TraceSession already active")
+        _TLS.session = self
+        return self
+
+    def __exit__(self, *exc):
+        _TLS.session = None
+        return False
+
+    def emit(self, ranks: Iterable[int] | None, ev: Event) -> None:
+        ranks = range(self.n_ranks) if ranks is None else ranks
+        for r in ranks:
+            self.rank_streams[r].append(ev)
+
+
+def active_session() -> TraceSession | None:
+    return getattr(_TLS, "session", None)
+
+
+def record_event(ev: Event, ranks: Iterable[int] | None = None) -> None:
+    s = active_session()
+    if s is not None:
+        s.emit(ranks, ev)
+
+
+def record_compute(fn: Callable, *args, ranks: Iterable[int] | None = None,
+                   **kwargs) -> None:
+    """Cost ``fn`` with the jaxpr walker and record one ComputeEvent."""
+    s = active_session()
+    if s is None:
+        return
+    vec = compute_cost(fn, *args, **kwargs)
+    s.emit(ranks, ComputeEvent(tuple(vec)))

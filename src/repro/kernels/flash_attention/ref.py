@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel (same contract:
+pre-expanded heads, (bh, s, d) layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None):
+    bh, s, d = q.shape
+    t = k.shape[1]
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    if causal:
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(t)[None, :]
+        m = j <= i
+        if window is not None:
+            m = m & (j > i - window)
+        scores = jnp.where(m[None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.proxy_blocks.ops import mxu_block, stream_block  # noqa: F401

@@ -1,0 +1,22 @@
+"""jit wrappers with CPU-interpret dispatch for the proxy-block kernels."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.proxy_blocks.kernel import mxu_pallas, stream_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mxu_block(a, b, reps: int, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return mxu_pallas(a, b, reps, interpret=interpret)
+
+
+def stream_block(v, reps: int, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return stream_pallas(v, reps, interpret=interpret)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for the proxy-block kernels (the same math as the
+corresponding blocks in repro.core.blocks)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MM = 128
+
+
+def mxu_ref(a, b, reps: int):
+    def body(i, a):
+        return ((a @ b) * jnp.bfloat16(1.0 / MM)).astype(a.dtype) \
+            if a.dtype == jnp.bfloat16 else ((a @ b) * (1.0 / MM)).astype(a.dtype)
+    return jax.lax.fori_loop(0, reps, body, a)
+
+
+def stream_ref(v, reps: int):
+    def body(i, v):
+        return v * 0.999999 + 1e-6
+    return jax.lax.fori_loop(0, reps, body, v)

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for the SSD (Mamba2) intra-chunk diagonal block.
+
+Computes, for one (batch, chunk, group) program:
+
+    scores  = C Bᵀ                      (q×k MXU matmul, n-contraction)
+    L[i,j]  = exp(cum_i − cum_j)·1[i≥j]  per head      (VPU)
+    Y_diag  = (scores ∘ L) (dt·X)        (r batched q×k×p MXU matmuls)
+
+This is the quadratic-in-chunk hot spot of the SSD dual form — the analog
+of flash attention's score block, with the decay mask in place of softmax.
+VMEM per program: q·n (B,C) + q·r (cum, dt) + q·r·p (X, Y) + r·q·q (masked
+scores) floats; q=128..256, r≤8-per-slab keeps it in budget — ops.py slabs
+the head dim when r is large.  Chunk q and state n are 128-multiples
+(MXU-aligned); the inter-chunk recurrence stays in XLA (it is linear-time
+and bandwidth-bound, not MXU work).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_diag_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref):
+    # blocks: x (q, r, p)  dt (q, r)  cum (q, r)  b/c (q, n)  y (q, r, p)
+    q, r, p = x_ref.shape
+    cm = c_ref[...].astype(jnp.float32)               # (q, n)
+    bm = b_ref[...].astype(jnp.float32)               # (q, n)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (q, k)
+    cum = cum_ref[...].astype(jnp.float32)            # (q, r)
+    dec = cum[:, None, :] - cum[None, :, :]           # (q, k, r)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    ik = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    causal = iq >= ik
+    lmask = jnp.where(causal[:, :, None], jnp.exp(dec), 0.0)   # (q, k, r)
+    m = scores[:, :, None] * lmask                    # (q, k, r)
+    dx = (dt_ref[...].astype(jnp.float32)[:, :, None]
+          * x_ref[...].astype(jnp.float32))           # (k, r, p)
+    # per-head batched matmul: (r, q, k) @ (r, k, p) -> (r, q, p)
+    mr = m.transpose(2, 0, 1)
+    dxr = dx.transpose(1, 0, 2)
+    y = jax.lax.dot_general(mr, dxr, (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    y_ref[...] = y.transpose(1, 0, 2).astype(y_ref.dtype)
+
+
+def ssd_diag_pallas(x, dt, cum, b, c, *, interpret: bool = True):
+    """x: (nb, nc, q, g, r, p); dt/cum: (nb, nc, q, g, r); b/c: (nb, nc, q, g, n).
+
+    Returns y_diag: (nb, nc, q, g, r, p).  Grid: (nb, nc, g).
+    """
+    nb, nc, q, g, r, p = x.shape
+    n = b.shape[-1]
+    return pl.pallas_call(
+        _ssd_diag_kernel,
+        grid=(nb, nc, g),
+        in_specs=[
+            pl.BlockSpec((None, None, q, None, r, p),
+                         lambda i, j, k: (i, j, 0, k, 0, 0)),
+            pl.BlockSpec((None, None, q, None, r),
+                         lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((None, None, q, None, r),
+                         lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((None, None, q, None, n),
+                         lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((None, None, q, None, n),
+                         lambda i, j, k: (i, j, 0, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, q, None, r, p),
+                               lambda i, j, k: (i, j, 0, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, nc, q, g, r, p), x.dtype),
+        interpret=interpret,
+    )(x, dt, cum, b, c)

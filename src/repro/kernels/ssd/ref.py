@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the SSD diagonal-block kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_diag_ref(x, dt, cum, b, c):
+    """Same contract as ssd_diag_pallas (see kernel.py docstring)."""
+    nb, nc, q, g, r, p = x.shape
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", c.astype(jnp.float32),
+                        b.astype(jnp.float32))
+    # decay: (nb,nc,q,g,r) -> L[q,k] per head
+    dec = cum[:, :, :, None, :, :] - cum[:, :, None, :, :, :]
+    # dec: (nb,nc,q,k,g,r)
+    iq = jnp.arange(q)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None, None]
+    lmask = jnp.where(causal, jnp.exp(dec), 0.0)      # (nb,nc,q,k,g,r)
+    m = scores.transpose(0, 1, 3, 4, 2)[:, :, :, :, :, None] * lmask
+    dx = dt.astype(jnp.float32)[..., None] * x.astype(jnp.float32)
+    y = jnp.einsum("bcqkgr,bckgrp->bcqgrp", m, dx)
+    return y.astype(x.dtype)

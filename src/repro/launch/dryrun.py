@@ -1,0 +1,141 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes, record memory/cost/roofline artifacts.
+
+MUST be the process entrypoint (the XLA_FLAGS lines below run before any
+jax import — jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+
+Outputs one JSON per cell under --out (default artifacts/dryrun).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.configs.registry import ARCH_IDS, get, input_specs
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_forward
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def build_step(cfg, kind: str, mesh):
+    """The per-shape step function lowered in the dry-run."""
+    if kind == "train":
+        loss_fn = build_forward(cfg, "loss")
+        opt_cfg = AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg, mesh))(params)
+            params, opt_state, metrics = adamw_update(grads, params,
+                                                      opt_state, opt_cfg)
+            return params, opt_state, loss
+
+        return train_step, (0, 1)
+    if kind == "prefill":
+        fn = build_forward(cfg, "prefill")
+
+        def prefill_step(params, batch):
+            return fn(params, batch, cfg, mesh)
+
+        return prefill_step, ()
+    fn = build_forward(cfg, "decode")
+
+    def serve_step(params, cache, batch, pos):
+        return fn(params, cache, batch, pos, cfg, mesh)
+
+    return serve_step, (1,)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg, specs = input_specs(arch, shape_name, mesh)
+    shape = SHAPES[shape_name]
+    step, donate = build_step(cfg, shape.kind, mesh)
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=donate).lower(*specs)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    rep = roofline.report(compiled, cfg, shape, mesh, mesh_name)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "ok": True,
+        "compile_sec": round(time.time() - t0, 1),
+        "memory_analysis": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+        },
+        "xla_cost_analysis": {
+            "flops": float(ca.get("flops", -1)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1)),
+        },
+        "roofline": rep.as_dict(),
+        "roofline_fraction": roofline.roofline_fraction(rep),
+        "step_time_bound_s": roofline.step_time_bound(rep),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_name}.json"
+    (out_dir / fname).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all applicable)")
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+    failures = []
+    for arch in archs:
+        cfg = get(arch)
+        shapes = [args.shape] if args.shape else applicable_shapes(cfg)
+        for shape_name in shapes:
+            for mp in pods:
+                tag = f"{arch} × {shape_name} × {'multi' if mp else 'single'}"
+                try:
+                    rec = run_cell(arch, shape_name, mp, out)
+                    r = rec["roofline"]
+                    print(f"[OK ] {tag}: compile={rec['compile_sec']}s "
+                          f"bottleneck={r['bottleneck']} "
+                          f"frac={rec['roofline_fraction']:.3f} "
+                          f"mem={rec['memory_analysis']['temp_bytes']/2**30:.2f}GiB",
+                          flush=True)
+                except Exception as e:
+                    failures.append(tag)
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+                    traceback.print_exc()
+                    out.mkdir(parents=True, exist_ok=True)
+                    with (out / "failures.log").open("a") as fh:
+                        fh.write(f"{tag}\n{traceback.format_exc()}\n")
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,491 @@
+"""Loop-aware cost model over post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every computation **once** — a
+``lax.scan`` over 64 layer-units reports 1/64th of the real FLOPs, and
+collectives inside while bodies vanish from naive grepping.  This module
+parses ``compiled.as_text()`` into computations + a call graph, finds while
+trip counts from the loop-condition constant, and aggregates
+
+    flops            (dot/convolution ops, 2·M·N·K from shapes)
+    hbm bytes        (operands+results of *top-scope* ops: fusion kernels,
+                      dots, copies — ops inside fused computations are
+                      register-level and excluded)
+    collective bytes (operand sizes of all-reduce / all-gather /
+                      reduce-scatter / all-to-all / collective-permute,
+                      per-kind, with replica-group sizes)
+
+multiplied along the call graph (fusion/call × 1, while body × trips).
+Used by the roofline (§Roofline) and the HLO-level Siesta trace front-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s4": 1, "u4": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "s2": 1, "u2": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 1
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict[str, str]          # param name -> type
+    ops: dict[str, Op]
+    order: list[str]
+
+
+_COMP_HDR = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)(?:\.clone)?\s*\((.*?)\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\s]+?))\s+"
+    r"([\w\-]+)\((.*)$")
+
+
+ENTRY_KEY = "__entry__"
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    """Parse computations; the ENTRY computation's name is stored under
+    the ``ENTRY_KEY`` pseudo-entry (a plain string, not a Computation)."""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//") or s.startswith("HloModule"):
+            continue
+        hdr = _COMP_HDR.match(s)
+        if hdr and s.endswith("{"):
+            if s.startswith("ENTRY"):
+                comps[ENTRY_KEY] = hdr.group(1)  # type: ignore[assignment]
+            params = {}
+            for pm in re.finditer(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[\w\[\],{}]+))",
+                                  hdr.group(2)):
+                params[pm.group(1)] = pm.group(2)
+            cur = Computation(hdr.group(1), params, {}, [])
+            comps[cur.name] = cur
+            continue
+        if s == "}" or s == "})":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        name, rtype, opcode, rest = m.groups()
+        # split operands (up to the matching close paren) from attributes
+        depth = 1
+        i = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operand_str, attrs = rest[:i], rest[i + 1:]
+        operands = []
+        d2 = 0
+        tok = ""
+        for ch in operand_str:
+            if ch == "," and d2 == 0:
+                operands.append(tok.strip())
+                tok = ""
+            else:
+                if ch in "([{":
+                    d2 += 1
+                elif ch in ")]}":
+                    d2 -= 1
+                tok += ch
+        if tok.strip():
+            operands.append(tok.strip())
+        operands = [o.lstrip("%") for o in operands]
+        op = Op(name, opcode, rtype.strip(), operands, attrs, s)
+        cur.ops[name] = op
+        cur.order.append(name)
+    return comps
+
+
+def _operand_type(comp: Computation, operand: str) -> str | None:
+    operand = operand.split(" ")[-1].lstrip("%")
+    if operand in comp.ops:
+        return comp.ops[operand].result_type
+    if operand in comp.params:
+        return comp.params[operand]
+    return None
+
+
+def _dot_flops(comp: Computation, op: Op) -> int:
+    out_elems = shape_elems(op.result_type)
+    lhs_t = _operand_type(comp, op.operands[0]) if op.operands else None
+    if lhs_t is None:
+        return 2 * out_elems  # unknown contraction; degrade gracefully
+    lhs_dims = _shape_dims(lhs_t)
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    k = 1
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                k *= lhs_dims[int(d)]
+    return 2 * out_elems * k
+
+
+def _conv_flops(comp: Computation, op: Op) -> int:
+    out_elems = shape_elems(op.result_type)
+    rhs_t = _operand_type(comp, op.operands[1]) if len(op.operands) > 1 else None
+    if rhs_t is None:
+        return 2 * out_elems
+    kernel_elems = shape_elems(rhs_t)
+    dims = _shape_dims(rhs_t)
+    out_ch = dims[-1] if dims else 1   # heuristic: o is usually last in `io`
+    return 2 * out_elems * max(kernel_elems // max(out_ch, 1), 1)
+
+
+_CALL_ATTRS = (
+    ("calls=", 1), ("to_apply=", 1), ("body=", None), ("condition=", None),
+    ("true_computation=", 1), ("false_computation=", 1),
+)
+
+
+def _callees(op: Op) -> list[tuple[str, str]]:
+    """[(kind, computation_name)]; kind in {call, body, condition, branch}."""
+    out = []
+    for m in re.finditer(r"(calls|to_apply|body|condition|true_computation|"
+                         r"false_computation)=%?([\w.\-]+)", op.attrs):
+        kind = {"calls": "call", "to_apply": "apply", "body": "body",
+                "condition": "condition"}.get(m.group(1), "branch")
+        out.append((kind, m.group(2)))
+    bm = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)
+    if bm:
+        for name in bm.group(1).split(","):
+            out.append(("branch", name.strip().lstrip("%")))
+    return out
+
+
+def _group_size(op: Op) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]*)\}", op.attrs)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 0
+
+
+def while_trip_count(comps: dict[str, Computation], cond_name: str) -> int:
+    """Largest s32 constant in the loop condition ≈ the scan length."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops.values():
+        if op.opcode == "constant" and op.result_type.startswith("s32"):
+            m = re.search(r"constant\((-?\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+        if op.opcode == "fusion":
+            for _, callee in _callees(op):
+                sub = comps.get(callee)
+                if sub:
+                    for o2 in sub.ops.values():
+                        if o2.opcode == "constant" and o2.result_type.startswith("s32"):
+                            m = re.search(r"constant\((-?\d+)\)", o2.line)
+                            if m:
+                                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_count: int = 0
+    transcendentals: float = 0.0
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.collective_count += int(other.collective_count * mult)
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] += v * mult
+
+
+_TRANS_OPS = {"exponential", "log", "tanh", "power", "rsqrt", "sqrt",
+              "logistic", "sine", "cosine", "expm1", "log-plus-one"}
+
+
+def _op_cost(comp: Computation, op: Op, comps, in_fusion: bool) -> HloCost:
+    """Cost of one op, resolving operand types within its computation."""
+    one = HloCost()
+    _accumulate_op(one, comp, op, comps, in_fusion)
+    return one
+
+
+def _comp_own_cost(comp: Computation, comps, fused_names: set[str],
+                   in_fusion: bool) -> HloCost:
+    c = HloCost()
+    for op in comp.ops.values():
+        _accumulate_op(c, comp, op, comps, in_fusion)
+    return c
+
+
+def _accumulate_op(c: HloCost, comp: Computation, op: Op, comps,
+                   in_fusion: bool) -> None:
+    if True:
+        oc = op.opcode
+        if oc == "dot":
+            c.flops += _dot_flops(comp, op)
+        elif oc == "convolution":
+            c.flops += _conv_flops(comp, op)
+        elif oc in _TRANS_OPS:
+            c.transcendentals += shape_elems(op.result_type)
+        base = oc.replace("-start", "")
+        if base in COLLECTIVE_OPS and not oc.endswith("-done"):
+            nbytes = sum(shape_bytes(_operand_type(comp, o) or "")
+                         for o in op.operands)
+            c.collective_bytes += nbytes
+            c.collective_by_kind[base] += nbytes
+            c.collective_count += 1
+        if not in_fusion:
+            # HBM traffic: top-scope kernels only (fusion boundaries).
+            # reshape/broadcast/iota are layout-aliasing (usually free);
+            # gather/dynamic-slice touch only the *result*-sized window of
+            # their operand, and scatter/dus update in place.
+            if oc in ("gather", "dynamic-slice"):
+                c.bytes += 2 * shape_bytes(op.result_type)
+                for o in op.operands[1:]:
+                    t = _operand_type(comp, o)
+                    if t:
+                        c.bytes += shape_bytes(t)
+            elif oc in ("scatter", "dynamic-update-slice"):
+                for o in op.operands[1:]:
+                    t = _operand_type(comp, o)
+                    if t:
+                        c.bytes += 2 * shape_bytes(t)
+            elif oc in ("fusion", "dot", "convolution", "copy", "custom-call",
+                        "reduce", "sort", "cholesky", "triangular-solve",
+                        "concatenate", "transpose", "slice", "pad") or \
+                    base in COLLECTIVE_OPS:
+                nbytes = shape_bytes(op.result_type)
+                sparse_idx = (_gather_param_idxs(comps, op)
+                              if oc == "fusion" else frozenset())
+                for i, o in enumerate(op.operands):
+                    t = _operand_type(comp, o)
+                    if not t:
+                        continue
+                    if i in sparse_idx:
+                        # operand is only gathered from: window-sized traffic
+                        nbytes += min(shape_bytes(t),
+                                      shape_bytes(op.result_type))
+                    else:
+                        nbytes += shape_bytes(t)
+                c.bytes += nbytes
+    return c
+
+
+def _gather_param_idxs(comps, op: Op) -> frozenset:
+    """Operand indices of a fusion that are only read through gather/
+    dynamic-slice inside the fused computation (embedding tables etc.)."""
+    callee = next((n for k, n in _callees(op) if k == "call"), None)
+    sub = comps.get(callee) if callee else None
+    if sub is None:
+        return frozenset()
+    param_order = {name: i for i, name in enumerate(sub.params)}
+    gathered: set[int] = set()
+    direct: set[int] = set()
+    for o2 in sub.ops.values():
+        for j, operand in enumerate(o2.operands):
+            nm = operand.split(" ")[-1].lstrip("%")
+            if nm in param_order:
+                if o2.opcode in ("gather", "dynamic-slice") and j == 0:
+                    gathered.add(param_order[nm])
+                else:
+                    direct.add(param_order[nm])
+    return frozenset(gathered - direct)
+
+
+def top_sites(text: str, n: int = 20, key: str = "bytes") -> list[tuple]:
+    """Largest per-op cost sites with loop multiplicities — the dry-run
+    'profile' used in §Perf hillclimbing.  Returns
+    [(total, mult, comp, op_name, opcode, result_type), ...] sorted desc."""
+    comps = parse_module(text)
+    entry = _find_entry(comps)
+    fused: set[str] = set()
+    applied: set[str] = set()
+    for comp in comps.values():
+        for op in comp.ops.values():
+            for kind, callee in _callees(op):
+                if op.opcode == "fusion" and kind == "call":
+                    fused.add(callee)
+                elif kind == "apply":
+                    applied.add(callee)
+
+    mults: dict[str, float] = defaultdict(float)
+
+    def walk(name: str, mult: float, depth: int = 0):
+        if depth > 64 or name not in comps:
+            return
+        mults[name] += mult
+        for op in comps[name].ops.values():
+            callees = _callees(op)
+            if op.opcode == "while":
+                cond = next((c for k, c in callees if k == "condition"), None)
+                trips = while_trip_count(comps, cond) if cond else 1
+                for k, c in callees:
+                    walk(c, mult * trips, depth + 1)
+            else:
+                for k, c in callees:
+                    walk(c, mult, depth + 1)
+
+    walk(entry, 1.0)
+    sites = []
+    for name, comp in comps.items():
+        mult = mults.get(name, 0.0)
+        if mult == 0:
+            continue
+        in_fusion = name in fused or name in applied
+        for op in comp.ops.values():
+            c = _op_cost(comp, op, comps, in_fusion)
+            val = {"bytes": c.bytes, "flops": c.flops,
+                   "collective": c.collective_bytes}[key]
+            if val > 0:
+                sites.append((val * mult, mult, name, op.name, op.opcode,
+                              op.result_type[:48]))
+    sites.sort(reverse=True)
+    return sites[:n]
+
+
+def _find_entry(comps) -> str | None:
+    ent = comps.pop(ENTRY_KEY, None)
+    if isinstance(ent, str) and ent in comps:
+        return ent
+    called = {c for comp in comps.values()
+              for op in comp.ops.values()
+              for _, c in _callees(op)}
+    entries = [n for n in comps if n not in called]
+    return entries[0] if entries else (next(iter(comps)) if comps else None)
+
+
+def analyze(text: str, entry: str | None = None) -> HloCost:
+    comps = parse_module(text)
+    ent = _find_entry(comps)
+    if entry is None:
+        entry = ent
+    if not comps or entry is None:
+        return HloCost()
+    # find fusion-called computations (register scope: no byte counting)
+    fused: set[str] = set()
+    applied: set[str] = set()
+    for comp in comps.values():
+        for op in comp.ops.values():
+            for kind, callee in _callees(op):
+                if op.opcode == "fusion" and kind == "call":
+                    fused.add(callee)
+                elif kind == "apply":
+                    applied.add(callee)
+    own = {name: _comp_own_cost(comp, comps, fused,
+                                in_fusion=name in fused or name in applied)
+           for name, comp in comps.items()}
+
+    memo: dict[str, HloCost] = {}
+
+    def total(name: str, depth: int = 0) -> HloCost:
+        if name in memo:
+            return memo[name]
+        if depth > 64 or name not in comps:
+            return HloCost()
+        memo[name] = HloCost()   # cycle guard
+        c = HloCost()
+        c.add(own[name])
+        comp = comps[name]
+        for op in comp.ops.values():
+            callees = _callees(op)
+            if op.opcode == "while":
+                body = next((n for k, n in callees if k == "body"), None)
+                cond = next((n for k, n in callees if k == "condition"), None)
+                trips = while_trip_count(comps, cond) if cond else 1
+                if body:
+                    c.add(total(body, depth + 1), trips)
+                if cond:
+                    c.add(total(cond, depth + 1), trips)
+            elif op.opcode == "conditional":
+                # expected-value semantics: weight each branch uniformly.
+                # Exactly right for the flash causal block-skip (half the
+                # (q,kv) blocks take the skip branch); a uniform prior for
+                # anything else.
+                branches = [n for k, n in callees if k == "branch"]
+                for n in branches:
+                    c.add(total(n, depth + 1), 1.0 / max(len(branches), 1))
+            else:
+                for k, n in callees:
+                    if k in ("call", "apply"):
+                        c.add(total(n, depth + 1), 1.0)
+        memo[name] = c
+        return c
+
+    return total(entry)

@@ -1,0 +1,96 @@
+"""Roofline term derivation from compiled dry-run artifacts (§Roofline).
+
+Per (arch × shape × mesh):
+
+    compute    = per-chip HLO flops / peak_FLOP/s
+    memory     = per-chip HLO bytes / HBM_bw
+    collective = per-chip collective bytes / link_bw
+
+(`compiled` programs are already per-device post-SPMD, so per-chip terms
+come straight from the loop-aware HLO analysis; dividing global quantities
+by chip count gives identical numbers.)
+
+MODEL_FLOPS uses 6·N_active·tokens for training and 2·N_active·tokens for
+inference; the ratio MODEL_FLOPS / (chips · HLO_flops) exposes remat
+recompute and padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, RunShape
+from repro.launch import hlo_cost
+
+# TPU v5e-class chip constants (assignment-specified)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_by_kind: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float          # MODEL_FLOPS / (chips * HLO flops)
+    memory_per_device: int       # from memory_analysis (bytes)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["coll_by_kind"] = dict(self.coll_by_kind)
+        return d
+
+
+def model_flops(cfg: ArchConfig, shape: RunShape) -> float:
+    n_active = cfg.active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def report(compiled, cfg: ArchConfig, shape: RunShape, mesh,
+           mesh_name: str) -> RooflineReport:
+    n_chips = mesh.devices.size
+    cost = hlo_cost.analyze(compiled.as_text())
+    t_c = cost.flops / PEAK_FLOPS_BF16
+    t_m = cost.bytes / HBM_BW
+    t_n = cost.collective_bytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / max(cost.flops * n_chips, 1.0)
+    try:
+        mem = int(compiled.memory_analysis().temp_size_in_bytes
+                  + compiled.memory_analysis().argument_size_in_bytes)
+    except Exception:
+        mem = -1
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, n_chips=n_chips,
+        flops_per_chip=cost.flops, bytes_per_chip=cost.bytes,
+        coll_bytes_per_chip=cost.collective_bytes,
+        coll_by_kind=dict(cost.collective_by_kind),
+        t_compute=t_c, t_memory=t_m, t_collective=t_n,
+        bottleneck=bottleneck, model_flops=mf, useful_ratio=useful,
+        memory_per_device=mem)
+
+
+def step_time_bound(rep: RooflineReport) -> float:
+    """max-of-terms lower bound on step wall time (perfect overlap)."""
+    return max(rep.t_compute, rep.t_memory, rep.t_collective)
+
+
+def roofline_fraction(rep: RooflineReport) -> float:
+    """Fraction of the ideal compute roofline this cell achieves, assuming
+    step time = max(terms): (MODEL_FLOPS/chips/peak) / max(terms)."""
+    ideal = rep.model_flops / rep.n_chips / PEAK_FLOPS_BF16
+    return ideal / max(step_time_bound(rep), 1e-30)

@@ -1,0 +1,3 @@
+from repro.models.model import (  # noqa: F401
+    build_forward, init_params, init_abstract, logical_axes_tree,
+)

@@ -1,0 +1,278 @@
+"""GQA attention: training (full/sliding-window causal, cross), prefill and
+single-token decode against a KV cache.
+
+Projection parameters are stored **flattened** — wq: (d, h·hd), wk/wv:
+(d, g·hd), wo: (h·hd, d) with logical axes ("embed", "heads_flat") — because
+h·hd is always a multiple of the TP degree even when the head *count* is not
+(h·hd is a multiple of 64).  This keeps params, projection compute and their
+weight-gradient dots TP-sharded for every assigned architecture; the
+(h, hd) split happens after the einsum, where the activation sharding mode
+(heads / batch / context-parallel; see repro.models.flash.attn_mode) takes
+over.
+
+Decode KV caches are annotated ("batch", "kv_seq", ...): the default rules
+shard the cache *sequence* over the "model" axis (flash-decode style — the
+softmax over the sharded seq dim compiles to partial max/sum + all-reduce),
+which is what makes 32k/500k-token caches fit per chip.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flash import attn_mode, flash_attention
+from repro.models.layers import Param, rms_norm, rope
+from repro.sharding.partition import constraint
+
+NEG_INF = -2.0 ** 30
+FLASH_MIN_SEQ = 1024
+
+
+def tp_size(mesh) -> int:
+    """Size of the tensor-parallel ("model") mesh axis (1 off-mesh)."""
+    if mesh is None:
+        return 1
+    try:
+        return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    except Exception:
+        return 1
+
+
+def head_sharded(mesh, n_heads: int) -> bool:
+    return n_heads % tp_size(mesh) == 0
+
+
+def attn_params(d: int, n_heads: int, n_kv: int, head_dim: int,
+                qk_norm: bool, dtype: str) -> dict:
+    p = {
+        "wq": Param((d, n_heads * head_dim), ("embed", "heads_flat"), dtype=dtype),
+        "wk": Param((d, n_kv * head_dim), ("embed", "kv_flat"), dtype=dtype),
+        "wv": Param((d, n_kv * head_dim), ("embed", "kv_flat"), dtype=dtype),
+        "wo": Param((n_heads * head_dim, d), ("heads_flat", "embed"), dtype=dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = Param((head_dim,), ("head_dim",), scale=0.0, dtype="float32")
+        p["k_norm"] = Param((head_dim,), ("head_dim",), scale=0.0, dtype="float32")
+    return p
+
+
+def _qkv_axes(mesh, n_heads: int, batch: int, head_logical: str, *,
+              is_q: bool):
+    """Activation axes for (b, s, heads, d) by attention sharding mode
+    (see repro.models.flash.attn_mode): heads-TP / batch-over-all-axes /
+    context-parallel.  In CP mode only Q is seq-sharded; K/V stay
+    replicated (their projections are a rounding error, and flash consumes
+    the full K/V strip per chip)."""
+    mode = attn_mode(mesh, n_heads, batch)
+    if mode == "heads":
+        return ("batch", None, head_logical, "head_dim")
+    if mode == "batch":
+        return ("batch_attn", None, None, None)
+    if is_q:
+        return ("batch", "attn_seq", None, None)
+    return ("batch", None, None, None)
+
+
+def _split_heads(y, n: int, hd: int):
+    b, s, _ = y.shape
+    return y.reshape(b, s, n, hd)
+
+
+def _reshard_flat(y, mode, *, is_q: bool, mesh):
+    """Move the mode's sharding onto the *flat* (b, s, h·hd) projection
+    output: an axis-move reshard (all-to-all) with aligned tiles, so the
+    following (h, hd) reshape is purely local.  Resharding the reshaped 4-D
+    tensor instead trips GSPMD's 'involuntary full rematerialization'
+    (global all-gather) when h does not divide the TP degree."""
+    if mode == "batch":
+        return constraint(y, ("batch_attn", None, None), mesh)
+    if mode == "cp":
+        if is_q:
+            return constraint(y, ("batch", "attn_seq", None), mesh)
+        return constraint(y, ("batch", None, None), mesh)
+    return y  # heads mode: flat TP shards align with the head split
+
+
+def _project_qkv(p, x, positions, theta, n_heads, n_kv, head_dim, mesh):
+    mode = attn_mode(mesh, n_heads, x.shape[0])
+    qf = _reshard_flat(x @ p["wq"], mode, is_q=True, mesh=mesh)
+    kf = _reshard_flat(x @ p["wk"], mode, is_q=False, mesh=mesh)
+    vf = _reshard_flat(x @ p["wv"], mode, is_q=False, mesh=mesh)
+    q = _split_heads(qf, n_heads, head_dim)
+    k = _split_heads(kf, n_kv, head_dim)
+    v = _split_heads(vf, n_kv, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    b = x.shape[0]
+    q = constraint(q, _qkv_axes(mesh, n_heads, b, "heads", is_q=True), mesh)
+    k = constraint(k, _qkv_axes(mesh, n_heads, b, "kv_heads", is_q=False), mesh)
+    v = constraint(v, _qkv_axes(mesh, n_heads, b, "kv_heads", is_q=False), mesh)
+    return q, k, v
+
+
+def _merge_out(out, p, mesh, mode: str = "heads"):
+    """(b,s,h,hd) → out-projection → (b,s,d).
+
+    The flat reshape happens in the attention regime (local), then the flat
+    tensor reshards back to TP columns before the Megatron-style wo matmul."""
+    b, s, h, hd = out.shape
+    y = out.reshape(b, s, h * hd)
+    if mode == "batch":
+        y = constraint(y, ("batch", None, "heads_flat"), mesh)
+    elif mode == "cp":
+        y = constraint(y, ("batch", "attn_seq", None), mesh)
+    y = y @ p["wo"]
+    return constraint(y, ("batch", "seq", "embed"), mesh)
+
+
+def _sdpa(q, k, v, mask, mesh):
+    """Grouped scaled-dot-product attention; q: (b,s,h,k), kv: (b,t,g,k)."""
+    b, s, h, hd = q.shape
+    g = k.shape[2]
+    rep = h // g
+    q = q.reshape(b, s, g, rep, hd)
+    scores = jnp.einsum("bsgrk,btgk->bgrst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrst,btgk->bsgrk", w, v)
+    out = out.reshape(b, s, h, hd)
+    return constraint(out, ("batch", "seq", "heads", "head_dim"), mesh)
+
+
+def causal_mask(s: int, t: int, window: int | None = None):
+    """(1,1,1,s,t) boolean mask; window => sliding-window causal."""
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(t)[None, :]
+    m = j <= i
+    if window is not None:
+        m = m & (j > i - window)
+    return m[None, None, None]
+
+
+def attention(p, x, positions, *, n_heads: int, n_kv: int, head_dim: int,
+              theta: float = 1e4, window: int | None = None,
+              causal: bool = True, mesh=None):
+    """Training/prefill self-attention; returns (out, (k, v)).
+
+    Long sequences take the flash path (never materializing s×t); short
+    ones use the direct _sdpa reference.
+    """
+    mode = attn_mode(mesh, n_heads, x.shape[0])
+    q, k, v = _project_qkv(p, x, positions, theta, n_heads, n_kv, head_dim,
+                           mesh)
+    s = x.shape[1]
+    if s >= FLASH_MIN_SEQ:
+        out = flash_attention(q, k, v, causal=causal, window=window, mesh=mesh)
+    else:
+        mask = causal_mask(s, s, window) if causal else None
+        out = _sdpa(q, k, v, mask, mesh)
+    return _merge_out(out, p, mesh, mode), (k, v)
+
+
+def cross_kv(p, kv_states, n_kv: int, head_dim: int):
+    """Project encoder/vision states to cross-attention K/V (cacheable)."""
+    k = kv_states @ p["wk"]
+    v = kv_states @ p["wv"]
+    b, t, _ = kv_states.shape
+    k = k.reshape(b, t, n_kv, head_dim)
+    v = v.reshape(b, t, n_kv, head_dim)
+    if "k_norm" in p:
+        k = rms_norm(k, p["k_norm"])
+    return k, v
+
+
+def cross_attention(p, x, kv_states, *, n_heads: int, n_kv: int,
+                    head_dim: int, mesh=None, kv=None):
+    """Cross-attention (VLM / enc-dec decoder): x attends to kv_states.
+
+    ``kv`` short-circuits with precomputed (k, v) (decode-time cache)."""
+    mode = attn_mode(mesh, n_heads, x.shape[0])
+    qf = _reshard_flat(x @ p["wq"], mode, is_q=True, mesh=mesh)
+    q = _split_heads(qf, n_heads, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+    if kv is None:
+        if mode == "batch":
+            kv_states = constraint(kv_states, ("batch_attn", None, None), mesh)
+        k, v = cross_kv(p, kv_states, n_kv, head_dim)
+    else:
+        k, v = kv
+    b = x.shape[0]
+    q = constraint(q, _qkv_axes(mesh, n_heads, b, "heads", is_q=True), mesh)
+    if x.shape[1] >= FLASH_MIN_SEQ:
+        out = flash_attention(q, k, v, causal=False, mesh=mesh)
+    else:
+        out = _sdpa(q, k, v, None, mesh)
+    return _merge_out(out, p, mesh, mode)
+
+
+# ---------------------------------------------------------------------------
+# KV cache decode
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (b, cache_len, g, hd)
+    v: jax.Array
+
+
+def init_cache(batch: int, cache_len: int, n_kv: int, head_dim: int,
+               dtype) -> KVCache:
+    shape = (batch, cache_len, n_kv, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_logical_axes() -> KVCache:
+    ax = ("batch", "kv_seq", "kv_heads", "head_dim")
+    return KVCache(ax, ax)
+
+
+def decode_attention(p, x, cache: KVCache, pos, *, n_heads: int, n_kv: int,
+                     head_dim: int, theta: float = 1e4,
+                     window: int | None = None, mesh=None):
+    """One-token decode: x (b,1,d), pos scalar int32 — next position.
+
+    A sliding-window layer whose cache is exactly ``window`` long is a ring
+    buffer (slot = pos % window); otherwise the cache is absolute-indexed and
+    positions beyond ``pos`` (and outside the window) are masked.  Ring-ness
+    is derived from static shapes, so it never enters the traced pytree.
+    """
+    b = x.shape[0]
+    q = _split_heads(x @ p["wq"], n_heads, head_dim)
+    k = _split_heads(x @ p["wk"], n_kv, head_dim)
+    v = _split_heads(x @ p["wv"], n_kv, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = rope(q, posv, theta)
+    k = rope(k, posv, theta)
+
+    cache_len = cache.k.shape[1]
+    ring = window is not None and cache_len <= window
+    slot = jnp.mod(pos, cache_len) if ring else pos
+    newk = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                        (0, slot, 0, 0))
+    newv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                        (0, slot, 0, 0))
+    newk = constraint(newk, ("batch", "kv_seq", "kv_heads", "head_dim"), mesh)
+    newv = constraint(newv, ("batch", "kv_seq", "kv_heads", "head_dim"), mesh)
+
+    j = jnp.arange(cache_len)
+    if ring:
+        valid = jnp.where(pos + 1 >= cache_len, jnp.ones_like(j, bool),
+                          j <= slot)
+    else:
+        valid = j <= pos
+        if window is not None:
+            valid = valid & (j > pos - window)
+    mask = valid[None, None, None, None, :]
+    out = _sdpa(q, newk, newv, mask, mesh)
+    return _merge_out(out, p, mesh), KVCache(newk, newv)

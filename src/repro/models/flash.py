@@ -1,0 +1,334 @@
+"""Flash attention with a custom VJP (the framework's core compute kernel).
+
+Forward: online-softmax over kv chunks inside a scan over q chunks — the
+(s×t) score matrix never materializes; only (q, k, v, out, L) survive to the
+backward, where L = m + log(l) is the per-row logsumexp.
+
+Backward: the FlashAttention-2 recomputation scheme — for every (q chunk ×
+kv chunk) block, scores are recomputed from q/k and L, then
+
+    dv += pᵀ·do        dp = do·vᵀ        ds = p∘(dp − D)·scale
+    dq += ds·k         dk += dsᵀ·q       with D = rowsum(do∘out)
+
+dk/dv accumulate *locally* in the scan carry and hit the network once per
+layer (not once per block — this is what removed the ×1792 per-block
+all-reduce the naive autodiff-of-scan produced; see EXPERIMENTS.md §Perf).
+
+Sliding-window layers slice a (window+cq) K/V strip per q chunk in both
+directions, so local-attention cost is O(s·window) end to end.
+
+Sharding: heads-TP when n_heads divides the model axis, context-parallel
+(q-chunk rows → model) fallback otherwise; K/V replicated in the fallback.
+The Pallas TPU kernel (repro.kernels.flash_attention) implements the same
+blocked algorithm with explicit VMEM tiling; this module is the XLA path
+and the kernel's reference oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.partition import constraint
+
+NEG_INF = -2.0 ** 30
+Q_CHUNK = 256
+KV_CHUNK = 1024
+
+
+def _tp_size(mesh) -> int:
+    if mesh is None:
+        return 1
+    try:
+        return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    except Exception:
+        return 1
+
+
+def _mesh_size(mesh) -> int:
+    return 1 if mesh is None else int(mesh.devices.size)
+
+
+def attn_mode(mesh, n_heads: int, batch: int) -> str:
+    """Attention sharding mode selection (the TP fallback chain):
+
+    heads — TP over heads (n_heads divides the model axis): zero extra comm.
+    batch — heads don't divide, but the global batch divides the *whole*
+            mesh: attention runs fully local with batch sharded over every
+            axis (Ulysses-style a2a reshard at region boundary).
+    cp    — context-parallel q-chunks over the model axis: cheap forward
+            (prefill) but the backward dk/dv reduction is collective-heavy;
+            chosen only when nothing divides (documented in §Perf).
+    """
+    if n_heads % _tp_size(mesh) == 0:
+        return "heads"
+    if batch % _mesh_size(mesh) == 0:
+        return "batch"
+    return "cp"
+
+
+def _axes(mesh, h, b):
+    mode = attn_mode(mesh, h, b)
+    if mode == "heads":
+        return {"mode": mode,
+                "q4": ("batch", None, "heads", None),
+                "q5": (None, "batch", "heads", None, None),
+                "sc": ("batch", "heads", None, None)}
+    if mode == "batch":
+        return {"mode": mode,
+                "q4": ("batch_attn", None, None, None),
+                "q5": (None, "batch_attn", None, None, None),
+                "sc": ("batch_attn", None, None, None)}
+    return {"mode": mode,
+            "q4": ("batch", "attn_seq", None, None),
+            "q5": (None, "batch", None, "attn_seq", None),
+            "sc": ("batch", None, "attn_seq", None)}
+
+
+def _pad_seq(x, c: int):
+    s = x.shape[1]
+    sp = ((s + c - 1) // c) * c
+    if sp != s:
+        x = jnp.pad(x, ((0, 0), (0, sp - s)) + ((0, 0),) * (x.ndim - 2))
+    return x, sp
+
+
+def _block_mask(qpos, kpos, causal: bool, window, limit):
+    mask = None
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    if limit is not None:
+        lm = kpos < limit
+        mask = lm[None, :] if mask is None else (mask & lm[None, :])
+    return mask
+
+
+def _fwd_block(qc, kc, vc, qpos, kpos, carry, scale, r, causal, window,
+               limit, sc_axes, mesh):
+    """One (q chunk, kv chunk) forward block with online softmax."""
+    m, l, acc = carry
+    if r > 1:
+        kc = jnp.repeat(kc, r, axis=2)
+        vc = jnp.repeat(vc, r, axis=2)
+    s = jnp.einsum("bhqd,bkhd->bhqk", qc, kc).astype(jnp.float32) * scale
+    s = constraint(s, sc_axes, mesh)
+    mask = _block_mask(qpos, kpos, causal, window, limit)
+    if mask is not None:
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l = l * corr + jnp.sum(p, axis=-1)
+    acc = acc * corr[..., None] + jnp.einsum(
+        "bhqk,bkhd->bhqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+    return m_new, l, acc
+
+
+def _chunk_kv(k, ck):
+    b, t, g, d = k.shape
+    return k.reshape(b, t // ck, ck, g, d).swapaxes(0, 1)
+
+
+def _strip_start(qi, cq, strip, t_pad):
+    return jnp.clip(qi * cq + cq - strip, 0, t_pad - strip)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, q_chunk, kv_chunk, mesh):
+    out, _ = _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk, mesh)
+    return out
+
+
+def _geom(q, k, q_chunk, kv_chunk):
+    b, s, h, d = q.shape
+    t, g = k.shape[1], k.shape[2]
+    cq = min(q_chunk, max(s, 1))
+    ck = min(kv_chunk, t)
+    return b, s, h, d, t, g, cq, ck
+
+
+def _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk, mesh):
+    b, s, h, d, t, g, cq, ck = _geom(q, k, q_chunk, kv_chunk)
+    r = h // g
+    ax = _axes(mesh, h, b)
+    scale = 1.0 / float(np.sqrt(d))
+    qp, s_pad = _pad_seq(q, cq)
+    kp_, t_pad = _pad_seq(k, ck)
+    vp, _ = _pad_seq(v, ck)
+    nq = s_pad // cq
+    limit = t if (causal or t_pad != t) else None
+    qr = qp.reshape(b, nq, cq, h, d).transpose(1, 0, 3, 2, 4)
+    qr = constraint(qr, ax["q5"], mesh)
+    use_strip = causal and window is not None and \
+        ((window + cq + ck - 1) // ck) * ck < t_pad
+    strip = min(((window + cq + ck - 1) // ck) * ck, t_pad) if use_strip else t_pad
+
+    def per_q(qi, qc):
+        qpos = qi * cq + jnp.arange(cq)
+        if use_strip:
+            start = _strip_start(qi, cq, strip, t_pad)
+            ks = jax.lax.dynamic_slice(kp_, (0, start, 0, 0), (b, strip, g, d))
+            vs = jax.lax.dynamic_slice(vp, (0, start, 0, 0), (b, strip, g, d))
+            kpos_all = start + jnp.arange(strip)
+        else:
+            ks, vs, kpos_all = kp_, vp, jnp.arange(t_pad)
+        kc = _chunk_kv(ks, ck)
+        vc = _chunk_kv(vs, ck)
+        kpos = kpos_all.reshape(strip // ck, ck)
+
+        def body(carry, xs):
+            kcj, vcj, kpj = xs
+
+            def live(c):
+                return _fwd_block(qc, kcj, vcj, qpos, kpj, c, scale, r,
+                                  causal, window, limit, ax["sc"], mesh)
+
+            if causal:
+                # block skip (the Pallas kernel's trick, expressed as cond):
+                # blocks entirely above the diagonal or behind the window
+                # contribute nothing — skip their matmuls AND their memory
+                needed = kpj[0] <= qpos[-1]
+                if window is not None:
+                    needed = needed & (kpj[-1] > qpos[0] - window)
+                carry = jax.lax.cond(needed, live, lambda c: c, carry)
+            else:
+                carry = live(carry)
+            return carry, None
+
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kpos))
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return o, lse
+
+    _, (out_c, lse_c) = jax.lax.scan(
+        lambda c, xs: (c, per_q(xs[0], xs[1])), 0, (jnp.arange(nq), qr))
+    out_c = constraint(out_c, ax["q5"], mesh)
+    out = out_c.transpose(1, 0, 3, 2, 4).reshape(b, s_pad, h, d)[:, :s]
+    out = out.astype(q.dtype)
+    lse = lse_c.transpose(1, 0, 3, 2).reshape(b, s_pad, h)[:, :s]  # (b,s,h)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_chunk, kv_chunk, mesh, res, dout):
+    q, k, v, out, lse = res
+    b, s, h, d, t, g, cq, ck = _geom(q, k, q_chunk, kv_chunk)
+    r = h // g
+    ax = _axes(mesh, h, b)
+    scale = 1.0 / float(np.sqrt(d))
+    qp, s_pad = _pad_seq(q, cq)
+    kp_, t_pad = _pad_seq(k, ck)
+    vp, _ = _pad_seq(v, ck)
+    dop, _ = _pad_seq(dout.astype(jnp.float32), cq)
+    outp, _ = _pad_seq(out.astype(jnp.float32), cq)
+    lsep, _ = _pad_seq(lse, cq)
+    nq = s_pad // cq
+    limit = t if (causal or t_pad != t) else None
+    dvec = jnp.sum(dop * outp, axis=-1)                      # (b,s_pad,h)
+
+    qr = qp.reshape(b, nq, cq, h, d).transpose(1, 0, 3, 2, 4)
+    qr = constraint(qr, ax["q5"], mesh)
+    dor = dop.reshape(b, nq, cq, h, d).transpose(1, 0, 3, 2, 4)
+    lser = lsep.reshape(b, nq, cq, h).transpose(1, 0, 3, 2)  # (nq,b,h,cq)
+    dvr = dvec.reshape(b, nq, cq, h).transpose(1, 0, 3, 2)
+
+    use_strip = causal and window is not None and \
+        ((window + cq + ck - 1) // ck) * ck < t_pad
+    strip = min(((window + cq + ck - 1) // ck) * ck, t_pad) if use_strip else t_pad
+
+    def per_q(carry, xs):
+        dk_acc, dv_acc = carry
+        qi, qc, doc, lsec, dvc = xs
+        qpos = qi * cq + jnp.arange(cq)
+        if use_strip:
+            start = _strip_start(qi, cq, strip, t_pad)
+            ks = jax.lax.dynamic_slice(kp_, (0, start, 0, 0), (b, strip, g, d))
+            vs = jax.lax.dynamic_slice(vp, (0, start, 0, 0), (b, strip, g, d))
+            kpos_all = start + jnp.arange(strip)
+        else:
+            start = 0
+            ks, vs, kpos_all = kp_, vp, jnp.arange(t_pad)
+        kc = _chunk_kv(ks, ck)
+        vc = _chunk_kv(vs, ck)
+        kposc = kpos_all.reshape(strip // ck, ck)
+
+        def inner(dq_c, xs2):
+            kcj, vcj, kpj = xs2
+
+            def live(dq_c):
+                kj, vj = kcj, vcj
+                if r > 1:
+                    kj = jnp.repeat(kj, r, axis=2)
+                    vj = jnp.repeat(vj, r, axis=2)
+                sblk = jnp.einsum("bhqd,bkhd->bhqk", qc,
+                                  kj).astype(jnp.float32) * scale
+                sblk = constraint(sblk, ax["sc"], mesh)
+                mask = _block_mask(qpos, kpj, causal, window, limit)
+                if mask is not None:
+                    sblk = jnp.where(mask[None, None], sblk, NEG_INF)
+                p = jnp.exp(sblk - lsec[..., None])          # (b,h,cq,ck)
+                dv_blk = jnp.einsum("bhqk,bhqd->bkhd", p, doc)
+                dp = jnp.einsum("bhqd,bkhd->bhqk", doc, vj)
+                ds = p * (dp - dvc[..., None]) * scale
+                dq_c = dq_c + jnp.einsum("bhqk,bkhd->bhqd", ds, kj)
+                dk_blk = jnp.einsum("bhqk,bhqd->bkhd", ds, qc)
+                if r > 1:                                    # fold back to g
+                    dk_blk = dk_blk.reshape(b, ck, g, r, d).sum(axis=3)
+                    dv_blk = dv_blk.reshape(b, ck, g, r, d).sum(axis=3)
+                return dq_c, (dk_blk, dv_blk)
+
+            def skip(dq_c):
+                z = jnp.zeros((b, ck, g, d), jnp.float32)
+                return dq_c, (z, z)
+
+            if causal:
+                needed = kpj[0] <= qpos[-1]
+                if window is not None:
+                    needed = needed & (kpj[-1] > qpos[0] - window)
+                return jax.lax.cond(needed, live, skip, dq_c)
+            return live(dq_c)
+
+        dq0 = jnp.zeros((b, h, cq, d), jnp.float32)
+        dq_c, (dk_blks, dv_blks) = jax.lax.scan(inner, dq0, (kc, vc, kposc))
+        dk_strip = dk_blks.swapaxes(0, 1).reshape(b, strip, g, d)
+        dv_strip = dv_blks.swapaxes(0, 1).reshape(b, strip, g, d)
+        if use_strip:
+            cur_k = jax.lax.dynamic_slice(dk_acc, (0, start, 0, 0),
+                                          (b, strip, g, d))
+            cur_v = jax.lax.dynamic_slice(dv_acc, (0, start, 0, 0),
+                                          (b, strip, g, d))
+            dk_acc = jax.lax.dynamic_update_slice(dk_acc, cur_k + dk_strip,
+                                                  (0, start, 0, 0))
+            dv_acc = jax.lax.dynamic_update_slice(dv_acc, cur_v + dv_strip,
+                                                  (0, start, 0, 0))
+        else:
+            dk_acc = dk_acc + dk_strip
+            dv_acc = dv_acc + dv_strip
+        return (dk_acc, dv_acc), dq_c
+
+    dk0 = jnp.zeros((b, t_pad, g, d), jnp.float32)
+    dv0 = jnp.zeros((b, t_pad, g, d), jnp.float32)
+    (dk_acc, dv_acc), dq_c = jax.lax.scan(
+        per_q, (dk0, dv0), (jnp.arange(nq), qr, dor, lser, dvr))
+    dq = dq_c.transpose(1, 0, 3, 2, 4).reshape(b, s_pad, h, d)[:, :s]
+    dq = constraint(dq.astype(q.dtype), ax["q4"], mesh)
+    dk = dk_acc[:, :t].astype(k.dtype)
+    dv = dv_acc[:, :t].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None,
+                    q_chunk: int = Q_CHUNK, kv_chunk: int = KV_CHUNK,
+                    mesh=None):
+    """Chunked attention, q: (b,s,h,d), k/v: (b,t,g,d) → (b,s,h,d)."""
+    return _flash(q, k, v, causal, window, q_chunk, kv_chunk, mesh)

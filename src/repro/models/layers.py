@@ -1,0 +1,150 @@
+"""Shared model layers: norms, RoPE, MLP, embeddings.
+
+Params are plain nested dicts; every leaf has a parallel *logical axes*
+annotation consumed by :mod:`repro.sharding.partition`.  A ``Param`` carries
+(shape, logical axes, init scale); :func:`materialize`/:func:`abstractify`
+turn a Param tree into concrete arrays or ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.partition import constraint
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    scale: float = 1.0          # fan-in style init scale
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def abstractify(tree):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype)),
+        tree, is_leaf=is_param)
+
+
+def logical_axes(tree):
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+def materialize(tree, seed: int = 0):
+    """Concrete init (reduced smoke configs only; full configs stay abstract)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_param)
+    rng = np.random.RandomState(seed)
+    out = []
+    for p in leaves:
+        if p.scale == 0.0:
+            arr = np.zeros(p.shape, dtype=np.float32)
+        elif len(p.shape) <= 1:
+            arr = np.ones(p.shape, dtype=np.float32) * p.scale
+        else:
+            fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+            arr = rng.normal(0, p.scale / math.sqrt(max(fan_in, 1)),
+                             p.shape).astype(np.float32)
+        out.append(jnp.asarray(arr, dtype=jnp.dtype(p.dtype)))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding over the last dim; x: (..., seq, heads, head_dim)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]                                # bcast heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos - x2f * sin,
+                            x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+def swiglu(x, wi, wg, wo, act=jax.nn.silu):
+    h = act(x @ wg) * (x @ wi)
+    return h @ wo
+
+
+def mlp_params(d: int, ff: int, dtype: str) -> dict:
+    return {
+        "wi": Param((d, ff), ("embed", "ffn"), dtype=dtype),
+        "wg": Param((d, ff), ("embed", "ffn"), dtype=dtype),
+        "wo": Param((ff, d), ("ffn", "embed"), dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, mesh=None):
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    h = constraint(h, ("batch", "seq", "ffn"), mesh)
+    return h @ p["wo"]
+
+
+def embed_params(vocab: int, d: int, dtype: str) -> Param:
+    return Param((vocab, d), ("vocab", "embed"), dtype=dtype)
+
+
+def embed_lookup(table, tokens, mesh=None):
+    x = jnp.take(table, tokens, axis=0)
+    return constraint(x, ("batch", "seq", "embed"), mesh)
+
+
+def unembed(x, table, mesh=None):
+    logits = x @ table.T.astype(x.dtype)
+    return constraint(logits, ("batch", "seq", "vocab"), mesh)
+
+
+def softmax_xent(logits, labels, vocab: int):
+    """Stable CE in f32; logits (..., V), labels int (...)."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def chunked_loss(x, table, labels, chunk: int, mesh=None):
+    """LM head + CE scanned over sequence chunks: peak logits memory drops
+    from O(S·V) to O(chunk·V) per device (framework-level memory opt)."""
+    b, s, d = x.shape
+    if chunk <= 0 or s % chunk != 0 or s == chunk:
+        logits = unembed(x, table, mesh)
+        return jnp.mean(softmax_xent(logits, labels, table.shape[0]))
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, d).swapaxes(0, 1)          # (n, b, chunk, d)
+    lc = labels.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(acc, xl):
+        xi, li = xl
+        logits = unembed(xi, table, mesh)
+        return acc + jnp.sum(softmax_xent(logits, li, table.shape[0])), None
+
+    tot, _ = jax.lax.scan(body, jnp.float32(0.0), (xc, lc))
+    return tot / (b * s)

@@ -1,0 +1,105 @@
+"""Model registry: one dispatch point from ArchConfig to init/loss/serve fns.
+
+``build_forward(cfg, kind)`` returns the step callable for the run kind
+(train loss / prefill / decode); ``init_abstract`` gives ShapeDtypeStruct
+params (dry-run), ``init_params`` concrete arrays (smoke tests), and
+``logical_axes_tree`` the sharding annotations for either.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.models.layers import abstractify, logical_axes, materialize
+
+
+def _param_tree(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return E.init_encdec(cfg)
+    return T.init_lm(cfg)
+
+
+def init_abstract(cfg: ArchConfig):
+    return abstractify(_param_tree(cfg))
+
+
+def init_params(cfg: ArchConfig, seed: int = 0):
+    return materialize(_param_tree(cfg), seed)
+
+
+def logical_axes_tree(cfg: ArchConfig):
+    return logical_axes(_param_tree(cfg))
+
+
+def build_forward(cfg: ArchConfig, kind: str) -> Callable:
+    """kind: 'loss' | 'prefill' | 'decode'."""
+    if cfg.family == "encdec":
+        return {
+            "loss": E.encdec_loss,
+            "prefill": E.encdec_prefill,
+            "decode": E.encdec_decode_step,
+        }[kind]
+    return {
+        "loss": T.lm_loss,
+        "prefill": T.lm_prefill,
+        "decode": T.lm_decode_step,
+    }[kind]
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, n_frames: int = 0):
+    if cfg.family == "encdec":
+        return E.init_encdec_cache(cfg, batch, seq_len,
+                                   n_frames or cfg.n_audio_frames)
+    return T.init_lm_cache(cfg, batch, seq_len)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, seq_len: int,
+                   n_frames: int = 0):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len, n_frames))
+
+
+def cache_logical_axes(cfg: ArchConfig, batch: int, seq_len: int,
+                       n_frames: int = 0):
+    """Logical axes tree matching the cache pytree structure."""
+    from repro.models.attention import KVCache
+    cache = abstract_cache(cfg, batch, seq_len, n_frames)
+
+    def annotate(path_leaf):
+        return None
+
+    def axes_for(leaf, is_conv=False):
+        nd = len(leaf.shape)
+        if nd == 4:   # (b, s, g, hd) attention cache
+            return ("batch", "kv_seq", "kv_heads", "head_dim")
+        if nd == 5:   # stacked (L, b, s, g, hd)
+            return ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        return tuple([None] * nd)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "state":
+                    nd = len(v.shape)
+                    base = ("batch", "ssm_heads", "head_dim", "ssm_state")
+                    out[k] = base if nd == 4 else ("layers",) + base
+                elif k == "conv":
+                    nd = len(v.shape)
+                    base = ("batch", None, "conv_dim")
+                    out[k] = base if nd == 3 else ("layers",) + base
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, KVCache):
+            return KVCache(axes_for(node.k), axes_for(node.v))
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        if hasattr(node, "shape"):
+            return axes_for(node)
+        return node
+
+    return walk(cache)

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts block: top-k routing, **per-data-shard** capacity-
+bounded dispatch, batched expert SwiGLU.
+
+Dispatch is performed independently inside each data shard (the leading
+``shards`` dim below is sharded over ("pod","data") and every routing op —
+top-k, sort, cumsum-position, capacity drop, gather — is batched over it,
+so it stays device-local).  Tokens then flow to expert owners through the
+expert einsum, whose (shards × experts) sharding mismatch is exactly the
+MoE all-to-all GSPMD must insert — the same comm pattern as a manual
+GShard implementation, with none of the global-argsort replication a
+token-global sort would force.
+
+Experts shard over "experts"→model when the count divides (deepseek 64,
+jamba 16); mixtral's 8 experts use TP *inside* the expert via the
+"expert_ffn" rule override instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Param
+from repro.sharding.partition import constraint
+
+
+def moe_params(d: int, n_experts: int, d_ff_e: int, n_shared: int,
+               d_ff_shared: int, dtype: str) -> dict:
+    p = {
+        "router": Param((d, n_experts), ("embed", None), dtype="float32"),
+        "wi": Param((n_experts, d, d_ff_e), ("experts", "embed", "expert_ffn"), dtype=dtype),
+        "wg": Param((n_experts, d, d_ff_e), ("experts", "embed", "expert_ffn"), dtype=dtype),
+        "wo": Param((n_experts, d_ff_e, d), ("experts", "expert_ffn", "embed"), dtype=dtype),
+    }
+    if n_shared:
+        p["shared"] = {
+            "wi": Param((d, d_ff_shared * n_shared), ("embed", "ffn"), dtype=dtype),
+            "wg": Param((d, d_ff_shared * n_shared), ("embed", "ffn"), dtype=dtype),
+            "wo": Param((d_ff_shared * n_shared, d), ("ffn", "embed"), dtype=dtype),
+        }
+    return p
+
+
+def _data_shards(mesh, batch: int) -> int:
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    d = sizes.get("pod", 1) * sizes.get("data", 1)
+    while d > 1 and batch % d:
+        d //= 2
+    return max(d, 1)
+
+
+def moe_apply(p, x, top_k: int, capacity_factor: float = 1.25, mesh=None):
+    """x: (b, s, d) → (y: (b, s, d), aux load-balance loss)."""
+    b, s, d = x.shape
+    e = p["router"].shape[-1]
+    n_sh = _data_shards(mesh, b)
+    t = b * s
+    tl = t // n_sh                                   # tokens per data shard
+    xf = x.reshape(n_sh, tl, d)
+    xf = constraint(xf, ("batch", None, "embed"), mesh)
+
+    # router matmul in the activation dtype: its backward contributes to
+    # dxf, and an f32 matmul here forces the whole per-layer dxf all-reduce
+    # (full token activations × model shards) to move f32 on the wire —
+    # 2× the bytes of every other gradient (§Perf hillclimb #3).  Softmax
+    # and gate math stay f32.
+    logits = (xf @ p["router"].astype(xf.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)   # (n_sh, tl, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style aux loss (global means)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], e), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    cap = int(max(1, round(tl * top_k / e * capacity_factor)))
+
+    flat_e = expert_idx.reshape(n_sh, tl * top_k)         # local flatten
+    flat_g = gate_vals.reshape(n_sh, tl * top_k)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tl), top_k)[None], (n_sh, tl * top_k))
+
+    order = jnp.argsort(flat_e, axis=-1)                  # per-shard sort
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+    stok = jnp.take_along_axis(flat_tok, order, axis=-1)
+
+    onehot = jax.nn.one_hot(se, e, dtype=jnp.int32)       # (n_sh, tk, e)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos_in_e, se[..., None], axis=2)[..., 0]
+    keep = pos < cap
+
+    slot = se * cap + jnp.where(keep, pos, cap - 1)       # (n_sh, tk)
+    rows = jnp.arange(n_sh)[:, None]
+    dispatch_tok = jnp.zeros((n_sh, e * cap), jnp.int32).at[rows, slot].set(
+        jnp.where(keep, stok, 0))
+    dispatch_ok = jnp.zeros((n_sh, e * cap), bool).at[rows, slot].set(keep)
+    # inverse map: slot id per (token, choice) in ORIGINAL order — lets the
+    # combine be a gather (GSPMD shards gathers over the expert dim; the
+    # scatter form replicates the whole token grid per model shard and
+    # all-reduces it — §Perf hillclimb #3)
+    inv_slot = jnp.zeros((n_sh, tl * top_k), jnp.int32).at[rows, order].set(slot)
+    inv_ok = jnp.zeros((n_sh, tl * top_k), bool).at[rows, order].set(keep)
+
+    # gather tokens to (n_sh, e, cap, d) slots — local per shard
+    xe = jnp.take_along_axis(xf, dispatch_tok[..., None], axis=1)
+    xe = xe * dispatch_ok[..., None].astype(xe.dtype)
+    xe = xe.reshape(n_sh, e, cap, d)
+    xe = constraint(xe, ("batch", "experts", None, "embed"), mesh)
+
+    # expert SwiGLU — the (data × experts) resharding here is the MoE a2a
+    hg = jnp.einsum("xecd,edf->xecf", xe, p["wg"])
+    hi = jnp.einsum("xecd,edf->xecf", xe, p["wi"])
+    h = jax.nn.silu(hg) * hi
+    h = constraint(h, ("batch", "experts", None, "expert_ffn"), mesh)
+    ye = jnp.einsum("xecf,efd->xecd", h, p["wo"])
+    ye = constraint(ye, ("batch", "experts", None, "embed"), mesh)
+
+    # combine — gather each token's top-k slots and weight by its gate
+    yflat = ye.reshape(n_sh, e * cap, d).astype(x.dtype)
+    picked = jnp.take_along_axis(yflat, inv_slot[..., None], axis=1)
+    w = (flat_g * inv_ok).astype(x.dtype)                  # (n_sh, tl*k)
+    y = (picked * w[..., None]).reshape(n_sh, tl, top_k, d).sum(axis=2)
+
+    if "shared" in p:
+        sp = p["shared"]
+        hs = jax.nn.silu(xf @ sp["wg"]) * (xf @ sp["wi"])
+        y = y + (hs @ sp["wo"]).astype(y.dtype)
+
+    y = y.reshape(b, s, d)
+    return constraint(y, ("batch", "seq", "embed"), mesh), aux

@@ -1,0 +1,240 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked quadratic-in-chunk /
+linear-across-chunk training form, O(1)-state decode step.
+
+Shapes follow the Mamba2 paper: inner width d_in = expand*d, heads h with
+head dim p (d_in = h*p), B/C grouped (g groups, state n).  The chunked SSD:
+
+    within chunk c (length q):  Y_diag = (C B^T ∘ L) (dt·X)
+    chunk state:                S_c    = Σ_j exp(cum_end-cum_j) dt_j B_j⊗X_j
+    across chunks (lax.scan):   H_{c+1} = exp(Σ adt_c) H_c + S_c
+    off-diagonal:               Y_off  = (C H_c) ∘ exp(cum)
+
+The per-head (q,k) decay-masked matmul is the compute hot spot — the Pallas
+kernel in :mod:`repro.kernels.ssd` implements the fused diagonal block; this
+module is the pure-jnp reference path used for lowering/dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Param
+from repro.sharding.partition import constraint
+
+CONV_W = 4
+
+
+def ssm_params(d: int, *, expand: int, head_dim: int, n_state: int,
+               n_groups: int, dtype: str) -> dict:
+    d_in = expand * d
+    h = d_in // head_dim
+    conv_dim = d_in + 2 * n_groups * n_state
+    return {
+        # in_proj → [z (d_in), x (d_in), B (g·n), C (g·n), dt (h)]
+        "in_proj": Param((d, 2 * d_in + 2 * n_groups * n_state + h),
+                         ("embed", "conv_dim"), dtype=dtype),
+        "conv_w": Param((CONV_W, conv_dim), (None, "conv_dim"), dtype=dtype),
+        "conv_b": Param((conv_dim,), ("conv_dim",), scale=0.0, dtype=dtype),
+        "a_log": Param((h,), ("ssm_heads",), scale=0.0, dtype="float32"),
+        "d_skip": Param((h,), ("ssm_heads",), dtype="float32"),
+        "dt_bias": Param((h,), ("ssm_heads",), scale=0.0, dtype="float32"),
+        "norm_w": Param((d_in,), ("ffn",), scale=0.0, dtype="float32"),
+        "out_proj": Param((d_in, d), ("ffn", "embed"), dtype=dtype),
+    }
+
+
+def _split_proj(zxbcdt, d_in: int, gn: int, h: int):
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in:2 * d_in]
+    bm = zxbcdt[..., 2 * d_in:2 * d_in + gn]
+    cm = zxbcdt[..., 2 * d_in + gn:2 * d_in + 2 * gn]
+    dt = zxbcdt[..., 2 * d_in + 2 * gn:]
+    assert dt.shape[-1] == h
+    return z, x, bm, cm, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv width 4 via shifted adds (layout-friendly)."""
+    out = x * w[-1]
+    for i in range(1, CONV_W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _rms(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * (1.0 + w)).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, a, bm, cm, chunk: int, mesh=None, kernel: str = "xla",
+                return_final: bool = False):
+    """x: (b,l,h,p)  dt: (b,l,h)  a: (h,)  bm/cm: (b,l,g,n)  → y: (b,l,h,p).
+
+    ``return_final`` additionally returns the post-sequence SSM state in the
+    decode-cache layout (b, h, p, n) — used by prefill.
+    """
+    b, l, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    q = min(chunk, l)
+    c = l // q
+    assert c * q == l, (l, q)
+    r = h // g
+
+    xc = x.reshape(b, c, q, h, p)
+    dtc = dt.reshape(b, c, q, h).astype(jnp.float32)
+    bc = bm.reshape(b, c, q, g, n)
+    cc = cm.reshape(b, c, q, g, n)
+    xc = constraint(xc, ("batch", None, None, "ssm_heads", None), mesh)
+    dtc = constraint(dtc, ("batch", None, None, "ssm_heads"), mesh)
+
+    adt = dtc * a[None, None, None, :]                       # (b,c,q,h) <= 0
+    cum = jnp.cumsum(adt, axis=2)                            # (b,c,q,h)
+
+    if kernel == "pallas":
+        from repro.kernels.ssd.ops import ssd_diag_block
+        y_diag = ssd_diag_block(xc, dtc, cum, bc, cc, r)
+    else:
+        # per-group token-token scores, per-head decay mask
+        scores = jnp.einsum("bcqgn,bckgn->bcgqk", cc, bc)    # (b,c,g,q,k)
+        dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,c,q,k,h)
+        iq = jnp.arange(q)
+        causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+        lmask = jnp.where(causal, jnp.exp(dec), 0.0)         # (b,c,q,k,h)
+        m = (scores.reshape(b, c, g, 1, q, q)
+             * lmask.transpose(0, 1, 4, 2, 3).reshape(b, c, g, r, q, q))
+        dx = (dtc[..., None] * xc).astype(jnp.float32)       # (b,c,q,h,p)
+        dxg = dx.reshape(b, c, q, g, r, p)
+        y_diag = jnp.einsum("bcgrqk,bckgrp->bcqgrp", m, dxg).reshape(b, c, q, h, p)
+
+    # chunk-final states: S_c = sum_j exp(cum_end - cum_j) dt_j B_j ⊗ X_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (b,c,q,h)
+    w = (dtc * decay_to_end)                                  # (b,c,q,h)
+    bg = bc.reshape(b, c, q, g, 1, n)
+    s_c = jnp.einsum("bcqgrn,bcqgrp->bcgrnp",
+                     jnp.broadcast_to(bg, (b, c, q, g, r, n))
+                     * w.reshape(b, c, q, g, r, 1),
+                     xc.astype(jnp.float32).reshape(b, c, q, g, r, p))
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(adt, axis=2))              # (b,c,h)
+    cdg = chunk_decay.reshape(b, c, g, r)
+
+    def scanbody(hstate, inputs):
+        dcy, s = inputs                                      # (b,g,r), (b,g,r,n,p)
+        out = hstate
+        hstate = hstate * dcy[..., None, None] + s
+        return hstate, out
+
+    h0 = jnp.zeros((b, g, r, n, p), jnp.float32)
+    h_fin, hs = jax.lax.scan(scanbody, h0,
+                             (cdg.transpose(1, 0, 2, 3),
+                              s_c.transpose(1, 0, 2, 3, 4, 5)))
+    hs = hs.transpose(1, 0, 2, 3, 4, 5)                      # (b,c,g,r,n,p)
+
+    # off-diagonal: Y_off = (C · H_in) * exp(cum)
+    y_off = jnp.einsum("bcqgn,bcgrnp->bcqgrp", cc, hs)
+    y_off = y_off * jnp.exp(cum).reshape(b, c, q, g, r, 1)
+    y = y_diag.reshape(b, c, q, g, r, p) + y_off
+    y = y.reshape(b, l, h, p).astype(x.dtype)
+    y = constraint(y, ("batch", None, "ssm_heads", None), mesh)
+    if return_final:
+        final = h_fin.reshape(b, h, n, p).swapaxes(-1, -2)   # (b,h,p,n)
+        return y, final
+    return y
+
+
+def ssm_apply(p, x, *, head_dim: int, n_state: int, n_groups: int,
+              expand: int, chunk: int, mesh=None, kernel: str = "xla",
+              return_cache: bool = False):
+    """Full Mamba2 mixer on (b, l, d) → (b, l, d) [, decode cache]."""
+    b, l, d = x.shape
+    d_in = expand * d
+    h = d_in // head_dim
+    gn = n_groups * n_state
+
+    zxbcdt = x @ p["in_proj"]
+    z, xs, bm, cm, dt = _split_proj(zxbcdt, d_in, gn, h)
+    conv_in = jnp.concatenate([xs, bm, cm], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xs, bm, cm = (conv_out[..., :d_in],
+                  conv_out[..., d_in:d_in + gn],
+                  conv_out[..., d_in + gn:])
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(b, l, h, head_dim)
+    xh = constraint(xh, ("batch", "seq", "ssm_heads", "head_dim"), mesh)
+    res = ssd_chunked(xh, dtv, a,
+                      bm.reshape(b, l, n_groups, n_state),
+                      cm.reshape(b, l, n_groups, n_state),
+                      chunk, mesh, kernel, return_final=return_cache)
+    y, final = res if return_cache else (res, None)
+    y = y + p["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, l, d_in)
+    y = _rms(y, p["norm_w"]) * jax.nn.silu(z)
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    out = constraint(out, ("batch", "seq", "embed"), mesh)
+    if return_cache:
+        cache = {"state": final, "conv": conv_in[:, l - (CONV_W - 1):]}
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) state)
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(batch: int, d: int, *, expand: int, head_dim: int,
+                   n_state: int, n_groups: int, dtype) -> dict:
+    d_in = expand * d
+    h = d_in // head_dim
+    conv_dim = d_in + 2 * n_groups * n_state
+    return {
+        "state": jnp.zeros((batch, h, head_dim, n_state), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, conv_dim), dtype),
+    }
+
+
+def ssm_cache_axes() -> dict:
+    return {"state": ("batch", "ssm_heads", "head_dim", "ssm_state"),
+            "conv": ("batch", None, "conv_dim")}
+
+
+def ssm_decode(p, x, cache: dict, *, head_dim: int, n_state: int,
+               n_groups: int, expand: int, mesh=None):
+    """One-token decode; x: (b, 1, d) → (out (b,1,d), new cache)."""
+    b, _, d = x.shape
+    d_in = expand * d
+    h = d_in // head_dim
+    gn = n_groups * n_state
+
+    zxbcdt = x[:, 0] @ p["in_proj"]                          # (b, proj)
+    z, xs, bm, cm, dt = _split_proj(zxbcdt, d_in, gn, h)
+    conv_in = jnp.concatenate([xs, bm, cm], axis=-1)         # (b, conv_dim)
+    hist = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:]
+    xs = conv_out[..., :d_in]
+    bm = conv_out[..., d_in:d_in + gn].reshape(b, n_groups, n_state)
+    cm = conv_out[..., d_in + gn:].reshape(b, n_groups, n_state)
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dtv * a)                                     # (b,h)
+    xh = xs.reshape(b, h, head_dim).astype(jnp.float32)
+    r = h // n_groups
+    bh = jnp.repeat(bm, r, axis=1)                            # (b,h,n)
+    ch = jnp.repeat(cm, r, axis=1)
+    state = cache["state"] * da[..., None, None] + \
+        (dtv[..., None] * xh)[..., None] * bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(b, d_in)
+    y = _rms(y, p["norm_w"]) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None].astype(x.dtype)
+    out = constraint(out, ("batch", "seq", "embed"), mesh)
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,366 @@
+"""Decoder-only LM assembly for all LM-family architectures.
+
+Layers are grouped into the config's repeating *unit* (e.g. gemma3's
+5 local + 1 global, jamba's 7 mamba + 1 attention with alternating MoE) and
+scanned over stacked unit parameters — HLO size and compile time stay O(unit)
+instead of O(n_layers), which is what makes the 100-layer dry-run cells
+tractable.  Remainder layers (n_layers % unit) run unrolled.
+
+Three entry points per model: ``lm_loss`` (training), ``lm_prefill``
+(build KV/SSM caches), ``lm_decode_step`` (one token).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import (
+    Param, chunked_loss, embed_lookup, embed_params, mlp_apply, mlp_params,
+    rms_norm, unembed,
+)
+from repro.sharding.partition import constraint
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+def unit_len(cfg: ArchConfig) -> int:
+    u = len(cfg.layer_pattern)
+    if cfg.n_experts:
+        u = _lcm(u, cfg.moe_every)
+    return min(u, cfg.n_layers)
+
+
+def _layer_param(cfg: ArchConfig, kind: str, li: int) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    p: dict[str, Any] = {"ln1": Param((d,), ("embed",), scale=0.0, dtype="float32")}
+    if kind == "m":
+        p["mixer"] = S.ssm_params(d, expand=cfg.ssm_expand,
+                                  head_dim=cfg.ssm_head_dim,
+                                  n_state=cfg.ssm_state,
+                                  n_groups=cfg.ssm_groups, dtype=dt)
+    else:
+        p["attn"] = A.attn_params(d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                  cfg.qk_norm, dt)
+    if kind == "x":
+        p["xattn"] = A.attn_params(d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                   cfg.qk_norm, dt)
+        p["ln_x"] = Param((d,), ("embed",), scale=0.0, dtype="float32")
+    if cfg.is_moe_layer(li):
+        p["ln2"] = Param((d,), ("embed",), scale=0.0, dtype="float32")
+        p["moe"] = M.moe_params(d, cfg.n_experts, cfg.d_ff_expert,
+                                cfg.n_shared_experts, cfg.d_ff_expert, dt)
+    elif cfg.d_ff:
+        p["ln2"] = Param((d,), ("embed",), scale=0.0, dtype="float32")
+        p["mlp"] = mlp_params(d, cfg.d_ff, dt)
+    return p
+
+
+def _stack_params(tree: dict, n: int):
+    """Prepend a ("layers", n) stacking dim to every Param leaf."""
+    return jax.tree.map(
+        lambda p: Param((n,) + p.shape, ("layers",) + p.axes, p.scale, p.dtype),
+        tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+def init_lm(cfg: ArchConfig) -> dict:
+    u = unit_len(cfg)
+    n_units = cfg.n_layers // u
+    rest = cfg.n_layers % u
+    kinds = cfg.layer_kinds()
+    params: dict[str, Any] = {
+        "embed": embed_params(cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "final_norm": Param((cfg.d_model,), ("embed",), scale=0.0, dtype="float32"),
+    }
+    unit = tuple(_layer_param(cfg, kinds[j], j) for j in range(u))
+    params["unit"] = jax.tree.map(
+        lambda p: Param((n_units,) + p.shape, ("layers",) + p.axes, p.scale, p.dtype),
+        unit, is_leaf=lambda x: isinstance(x, Param))
+    params["rest"] = tuple(
+        _layer_param(cfg, kinds[n_units * u + j], n_units * u + j)
+        for j in range(rest))
+    if cfg.n_vision_tokens:
+        params["vision_norm"] = Param((cfg.d_model,), ("embed",), scale=0.0,
+                                      dtype="float32")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(cfg: ArchConfig, kind: str, li: int, p, x, positions,
+                 mesh, vision):
+    h = rms_norm(x, p["ln1"])
+    if kind == "m":
+        mix = S.ssm_apply(p["mixer"], h, head_dim=cfg.ssm_head_dim,
+                          n_state=cfg.ssm_state, n_groups=cfg.ssm_groups,
+                          expand=cfg.ssm_expand, chunk=cfg.ssm_chunk,
+                          mesh=mesh, kernel=cfg.attn_impl
+                          if cfg.attn_impl == "pallas" else "xla")
+    else:
+        win = cfg.window if kind == "l" and cfg.window else None
+        mix, _ = A.attention(p["attn"], h, positions, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                             theta=cfg.rope_theta, window=win, causal=True,
+                             mesh=mesh)
+    x = x + mix
+    if kind == "x":
+        hx = rms_norm(x, p["ln_x"])
+        x = x + A.cross_attention(p["xattn"], hx, vision, n_heads=cfg.n_heads,
+                                  n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                                  mesh=mesh)
+    aux = jnp.float32(0.0)
+    if cfg.is_moe_layer(li):
+        h2 = rms_norm(x, p["ln2"])
+        ff, aux = M.moe_apply(p["moe"], h2, cfg.top_k, cfg.capacity_factor, mesh)
+        x = x + ff
+    elif cfg.d_ff:
+        h2 = rms_norm(x, p["ln2"])
+        x = x + mlp_apply(p["mlp"], h2, mesh)
+    return x, aux
+
+
+def backbone(params, x, cfg: ArchConfig, mesh=None, vision=None):
+    """Embedded input (b, s, d) → final hidden states (b, s, d)."""
+    u = unit_len(cfg)
+    n_units = cfg.n_layers // u
+    kinds = cfg.layer_kinds()
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def unit_body(carry, unit_p):
+        h, aux = carry
+        for j in range(u):
+            h, a = _apply_layer(cfg, kinds[j], j, unit_p[j], h, positions,
+                                mesh, vision)
+            aux = aux + a
+        # sequence-parallel residual stream (Megatron-SP): the scan carry —
+        # which reverse-mode stacks once per unit — is seq-sharded over the
+        # model axis, cutting saved-activation memory by the TP degree.
+        h = constraint(h, ("batch", "attn_seq", "embed"), mesh)
+        return (h, aux), None
+
+    body = unit_body
+    if cfg.remat:
+        body = jax.checkpoint(unit_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["unit"])
+    for j, p in enumerate(params["rest"]):
+        li = n_units * u + j
+        x, a = _apply_layer(cfg, kinds[li], li, p, x, positions, mesh, vision)
+        aux = aux + a
+    return rms_norm(x, params["final_norm"]), aux
+
+
+def embed_inputs(params, batch: dict, cfg: ArchConfig, mesh=None):
+    x = embed_lookup(params["embed"], batch["tokens"], mesh)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    vision = None
+    if cfg.n_vision_tokens and "vision_embeds" in batch:
+        vision = rms_norm(batch["vision_embeds"], params["vision_norm"])
+        vision = constraint(vision, ("batch", "patches", "embed"), mesh)
+    return x, vision
+
+
+def lm_loss(params, batch: dict, cfg: ArchConfig, mesh=None):
+    """Causal-LM CE loss (+ MoE aux): batch = {tokens, labels[, vision]}."""
+    x, vision = embed_inputs(params, batch, cfg, mesh)
+    h, aux = backbone(params, x, cfg, mesh, vision)
+    loss = chunked_loss(h, params["embed"], batch["labels"],
+                        cfg.loss_chunk, mesh)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(cfg: ArchConfig, kind: str, seq_len: int) -> int:
+    if kind == "l" and cfg.window and cfg.window < seq_len:
+        return cfg.window
+    return seq_len
+
+
+def init_lm_cache(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    """Zero caches for decode at context length ``seq_len``."""
+    u = unit_len(cfg)
+    n_units = cfg.n_layers // u
+    kinds = cfg.layer_kinds()
+    dt = jnp.dtype(cfg.dtype)
+
+    def one(kind: str):
+        if kind == "m":
+            return S.init_ssm_cache(batch, cfg.d_model, expand=cfg.ssm_expand,
+                                    head_dim=cfg.ssm_head_dim,
+                                    n_state=cfg.ssm_state,
+                                    n_groups=cfg.ssm_groups, dtype=dt)
+        cl = _cache_len(cfg, kind, seq_len)
+        kv = A.init_cache(batch, cl, cfg.n_kv_heads, cfg.hd, dt)
+        if kind == "x":
+            xshape = (batch, cfg.n_vision_tokens, cfg.n_kv_heads, cfg.hd)
+            return {"self": kv, "xk": jnp.zeros(xshape, dt),
+                    "xv": jnp.zeros(xshape, dt)}
+        return kv
+
+    unit_cache = tuple(
+        jax.tree.map(lambda a: jnp.broadcast_to(a, (n_units,) + a.shape),
+                     one(kinds[j])) for j in range(u))
+    rest_cache = tuple(one(kinds[n_units * u + j])
+                       for j in range(cfg.n_layers % u))
+    return {"unit": unit_cache, "rest": rest_cache}
+
+
+def _decode_layer(cfg: ArchConfig, kind: str, li: int, p, x, cache, pos,
+                  mesh):
+    h = rms_norm(x, p["ln1"])
+    if kind == "m":
+        mix, cache = S.ssm_decode(p["mixer"], h, cache,
+                                  head_dim=cfg.ssm_head_dim,
+                                  n_state=cfg.ssm_state,
+                                  n_groups=cfg.ssm_groups,
+                                  expand=cfg.ssm_expand, mesh=mesh)
+    elif kind == "x":
+        mix, selfc = A.decode_attention(p["attn"], h, cache["self"], pos,
+                                        n_heads=cfg.n_heads,
+                                        n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                                        theta=cfg.rope_theta, mesh=mesh)
+        cache = {"self": selfc, "xk": cache["xk"], "xv": cache["xv"]}
+    else:
+        win = cfg.window if kind == "l" and cfg.window else None
+        mix, cache = A.decode_attention(p["attn"], h, cache, pos,
+                                        n_heads=cfg.n_heads,
+                                        n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                                        theta=cfg.rope_theta, window=win,
+                                        mesh=mesh)
+    x = x + mix
+    if kind == "x":
+        hx = rms_norm(x, p["ln_x"])
+        x = x + A.cross_attention(p["xattn"], hx, None, n_heads=cfg.n_heads,
+                                  n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                                  mesh=mesh, kv=(cache["xk"], cache["xv"]))
+    if cfg.is_moe_layer(li):
+        h2 = rms_norm(x, p["ln2"])
+        ff, _ = M.moe_apply(p["moe"], h2, cfg.top_k, cfg.capacity_factor, mesh)
+        x = x + ff
+    elif cfg.d_ff:
+        h2 = rms_norm(x, p["ln2"])
+        x = x + mlp_apply(p["mlp"], h2, mesh)
+    return x, cache
+
+
+def lm_decode_step(params, cache: dict, batch: dict, pos, cfg: ArchConfig,
+                   mesh=None):
+    """One new token against the cache.  batch = {tokens (b,1)[, vision]}.
+
+    Returns (logits (b, vocab), new_cache).
+    """
+    u = unit_len(cfg)
+    n_units = cfg.n_layers // u
+    kinds = cfg.layer_kinds()
+    x, _ = embed_inputs(params, batch, cfg, mesh)
+
+    def unit_body(h, pc):
+        unit_p, unit_c = pc
+        new_c = []
+        for j in range(u):
+            h, cj = _decode_layer(cfg, kinds[j], j, unit_p[j], h, unit_c[j],
+                                  pos, mesh)
+            new_c.append(cj)
+        return h, tuple(new_c)
+
+    x, new_unit_cache = jax.lax.scan(unit_body, x,
+                                     (params["unit"], cache["unit"]))
+    new_rest = []
+    for j, p in enumerate(params["rest"]):
+        li = n_units * u + j
+        x, cj = _decode_layer(cfg, kinds[li], li, p, x, cache["rest"][j],
+                              pos, mesh)
+        new_rest.append(cj)
+    x = rms_norm(x, params["final_norm"])
+    logits = unembed(x[:, 0:1], params["embed"], mesh)[:, 0]
+    return logits, {"unit": new_unit_cache, "rest": tuple(new_rest)}
+
+
+def lm_prefill(params, batch: dict, cfg: ArchConfig, mesh=None):
+    """Full-sequence forward building decode caches.
+
+    Returns (last-position logits (b, vocab), cache).  Attention caches hold
+    the full (or window-tail) K/V; SSM caches hold the final state.
+    """
+    u = unit_len(cfg)
+    n_units = cfg.n_layers // u
+    kinds = cfg.layer_kinds()
+    x, vision = embed_inputs(params, batch, cfg, mesh)
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+
+    def prefill_layer(kind, li, p, h):
+        hh = rms_norm(h, p["ln1"])
+        if kind == "m":
+            mix, cache = S.ssm_apply(p["mixer"], hh, head_dim=cfg.ssm_head_dim,
+                                     n_state=cfg.ssm_state,
+                                     n_groups=cfg.ssm_groups,
+                                     expand=cfg.ssm_expand,
+                                     chunk=cfg.ssm_chunk, mesh=mesh,
+                                     return_cache=True)
+        else:
+            win = cfg.window if kind == "l" and cfg.window else None
+            mix, (k, v) = A.attention(p["attn"], hh, positions,
+                                      n_heads=cfg.n_heads,
+                                      n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                                      theta=cfg.rope_theta, window=win,
+                                      causal=True, mesh=mesh)
+            cl = _cache_len(cfg, kind, s)
+            if cl < s:
+                # ring layout: position p lives at slot p % window
+                k, v = k[:, s - cl:], v[:, s - cl:]
+                k = jnp.roll(k, s % cl, axis=1)
+                v = jnp.roll(v, s % cl, axis=1)
+            cache = A.KVCache(k.astype(jnp.dtype(cfg.dtype)),
+                              v.astype(jnp.dtype(cfg.dtype)))
+        h = h + mix
+        if kind == "x":
+            hx = rms_norm(h, p["ln_x"])
+            h = h + A.cross_attention(p["xattn"], hx, vision,
+                                      n_heads=cfg.n_heads,
+                                      n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                                      mesh=mesh)
+            dt = jnp.dtype(cfg.dtype)
+            ck, cv = A.cross_kv(p["xattn"], vision, cfg.n_kv_heads, cfg.hd)
+            cache = {"self": cache, "xk": ck.astype(dt), "xv": cv.astype(dt)}
+        if cfg.is_moe_layer(li):
+            h2 = rms_norm(h, p["ln2"])
+            ff, _ = M.moe_apply(p["moe"], h2, cfg.top_k, cfg.capacity_factor, mesh)
+            h = h + ff
+        elif cfg.d_ff:
+            h2 = rms_norm(h, p["ln2"])
+            h = h + mlp_apply(p["mlp"], h2, mesh)
+        return h, cache
+
+    def unit_body(h, unit_p):
+        caches = []
+        for j in range(u):
+            h, c = prefill_layer(kinds[j], j, unit_p[j], h)
+            caches.append(c)
+        h = constraint(h, ("batch", "attn_seq", "embed"), mesh)
+        return h, tuple(caches)
+
+    x, unit_cache = jax.lax.scan(unit_body, x, params["unit"])
+    rest_cache = []
+    for j, p in enumerate(params["rest"]):
+        li = n_units * u + j
+        x, c = prefill_layer(kinds[li], li, p, x)
+        rest_cache.append(c)
+    x = rms_norm(x, params["final_norm"])
+    logits = unembed(x[:, -1:], params["embed"], mesh)[:, 0]
+    return logits, {"unit": unit_cache, "rest": tuple(rest_cache)}

@@ -1,0 +1,3 @@
+from repro.sharding.partition import (  # noqa: F401
+    LogicalRules, make_named_sharding, spec_for,
+)

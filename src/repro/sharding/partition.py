@@ -1,0 +1,169 @@
+"""Logical-axis partitioning rules (MaxText-style) → NamedSharding.
+
+Model code annotates every parameter/activation with *logical* axis names
+("embed", "heads", "ffn", "vocab", "batch", "seq", ...).  A
+:class:`LogicalRules` table maps logical names to mesh axes; changing the
+parallelism layout (the main lever in §Perf hillclimbing) means swapping the
+rules, not touching model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: default rules for the production meshes:
+#:   params:  TP over "model" (heads / ffn / vocab), replicated over data/pod
+#:   activations: batch over ("pod","data"), model-parallel dims over "model"
+DEFAULT_RULES: tuple[tuple[str, object], ...] = (
+    ("batch",        ("pod", "data")),
+    ("microbatch",   None),
+    ("seq",          None),
+    ("kv_seq",       "model"),      # decode: KV cache seq-sharded (flash-decode)
+    ("embed",        None),
+    ("heads",        "model"),
+    ("kv_heads",     "model"),
+    ("heads_flat",   "model"),      # flattened h·hd projection columns
+    ("kv_flat",      "model"),
+    ("qkv",          None),
+    ("head_dim",     None),
+    ("ffn",          "model"),
+    ("vocab",        "model"),
+    ("experts",      "model"),      # MoE: experts grouped over model axis
+    ("expert_ffn",   None),
+    ("layers",       None),
+    ("ssm_state",    None),
+    ("ssm_heads",    "model"),
+    ("conv_dim",     "model"),
+    ("frames",       None),
+    ("patches",      None),
+    ("fsdp",         "data"),       # optional ZeRO-style param shard axis
+    ("attn_seq",     "model"),      # context-parallel fallback when heads
+                                    # don't divide the model axis
+    ("batch_attn",   ("pod", "data", "model")),  # fully-local attention:
+                                    # batch sharded over the whole mesh
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalRules:
+    rules: tuple[tuple[str, object], ...] = DEFAULT_RULES
+
+    def mesh_axes(self, logical: str):
+        for name, axes in self.rules:
+            if name == logical:
+                return axes
+        return None
+
+    def spec(self, logical_axes: Sequence[str | None], mesh: Mesh) -> P:
+        """PartitionSpec for a tensor annotated with logical axis names.
+
+        Mesh axes absent from ``mesh`` are dropped (so the same rules work on
+        single-pod and multi-pod meshes); a mesh axis may be used at most once.
+        """
+        used: set[str] = set()
+        parts = []
+        for ax in logical_axes:
+            entry = self.mesh_axes(ax) if ax else None
+            if entry is None:
+                parts.append(None)
+                continue
+            cand = (entry,) if isinstance(entry, str) else tuple(entry)
+            picked = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+            used.update(picked)
+            if not picked:
+                parts.append(None)
+            elif len(picked) == 1:
+                parts.append(picked[0])
+            else:
+                parts.append(picked)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def with_overrides(self, **over) -> "LogicalRules":
+        new = []
+        seen = set(over)
+        for name, axes in self.rules:
+            new.append((name, over[name]) if name in over else (name, axes))
+        for name in over:
+            if name not in {n for n, _ in self.rules}:
+                new.append((name, over[name]))
+        del seen
+        return LogicalRules(tuple(new))
+
+
+def spec_for(logical_axes: Sequence[str | None], mesh: Mesh,
+             rules: LogicalRules | None = None) -> P:
+    return (rules or LogicalRules()).spec(logical_axes, mesh)
+
+
+def make_named_sharding(logical_axes: Sequence[str | None], mesh: Mesh,
+                        rules: LogicalRules | None = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical_axes, mesh, rules))
+
+
+def tree_shardings(tree_logical, mesh: Mesh, rules: LogicalRules | None = None):
+    """Map a pytree of logical-axis tuples to a pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda la: make_named_sharding(la, mesh, rules), tree_logical,
+        is_leaf=lambda x: isinstance(x, (tuple, list))
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def _filter_divisible(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim (e.g. 4 KV
+    heads cannot shard 16-way; GSPMD would reject the constraint)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            parts.append(entry)
+            continue
+        cand = (entry,) if isinstance(entry, str) else tuple(entry)
+        total = 1
+        kept = []
+        for a in cand:
+            if shape[i] % (total * sizes[a]) == 0:
+                kept.append(a)
+                total *= sizes[a]
+        parts.append(None if not kept else
+                     (kept[0] if len(kept) == 1 else tuple(kept)))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constraint(x, logical_axes: Sequence[str | None], mesh: Mesh | None = None,
+               rules: LogicalRules | None = None):
+    """jax.lax.with_sharding_constraint with logical axes (no-op off-mesh).
+
+    Mesh axes that do not evenly divide a dim are dropped per-dim, so the
+    same model code works at full scale and in reduced smoke configs.
+    """
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = spec_for(logical_axes, mesh, rules)
+    spec = _filter_divisible(spec, tuple(x.shape), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_for_shape(shape: tuple[int, ...],
+                       logical_axes: Sequence[str | None], mesh: Mesh,
+                       rules: LogicalRules | None = None) -> NamedSharding:
+    """NamedSharding with per-dim divisibility filtering (for in_shardings)."""
+    spec = spec_for(logical_axes, mesh, rules)
+    return NamedSharding(mesh, _filter_divisible(spec, tuple(shape), mesh))
+
+
+def _current_mesh() -> Mesh | None:
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None

@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see
+the real single CPU device; only tests that need a small mesh spawn with
+the forced host device count via the ``mesh_env`` marker / subprocess."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

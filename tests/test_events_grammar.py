@@ -1,0 +1,67 @@
+"""Event model + grammar data-structure tests (paper §2.2, §2.5)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.events import (
+    CommEvent, ComputeEvent, cluster_compute_events, decode_relative_perm,
+    encode_relative_perm,
+)
+from repro.core.grammar import compress_events, raw_trace_bytes
+
+
+def test_relative_perm_shift_roundtrip():
+    size = 12
+    perm = [(i, (i + 3) % size) for i in range(size)]
+    enc = encode_relative_perm(perm, size)
+    assert enc == ("shift", 3)
+    assert sorted(decode_relative_perm(enc, size)) == sorted(perm)
+
+
+def test_relative_perm_partial():
+    size = 8
+    perm = [(i, i + 1) for i in range(size - 1)]  # non-periodic boundary
+    enc = encode_relative_perm(perm, size)
+    assert enc[0] == "shift" and enc[1] == 1 and len(enc) == 3
+    assert sorted(decode_relative_perm(enc, size)) == sorted(perm)
+
+
+@given(st.integers(2, 16), st.data())
+@settings(max_examples=200, deadline=None)
+def test_relative_perm_roundtrip_property(size, data):
+    srcs = data.draw(st.lists(st.integers(0, size - 1), unique=True,
+                              min_size=0, max_size=size))
+    dsts = data.draw(st.permutations(srcs))
+    perm = list(zip(srcs, dsts))
+    enc = encode_relative_perm(perm, size)
+    assert sorted(decode_relative_perm(enc, size)) == sorted(perm)
+
+
+def test_same_shift_same_key():
+    """Paper Fig. 2: neighbour exchanges collapse to one terminal."""
+    size = 12
+    e1 = CommEvent("ppermute", (128,), "float32", ("x",),
+                   encode_relative_perm([(i, (i + 1) % size) for i in range(size)], size))
+    e2 = CommEvent("ppermute", (128,), "float32", ("x",),
+                   encode_relative_perm([((i + 5) % size, (i + 6) % size) for i in range(size)], size))
+    assert e1.key() == e2.key()
+
+
+def test_cluster_compute_events():
+    evs = [ComputeEvent((1e9, 1e6, 1e8, 0., 0., 0.)),
+           ComputeEvent((1.02e9, 1.01e6, 1.01e8, 0., 0., 0.)),
+           ComputeEvent((5e9, 5e6, 5e8, 0., 0., 0.))]
+    out, reps = cluster_compute_events(evs, rel_tol=0.05)
+    assert out[0].cluster_id == out[1].cluster_id != out[2].cluster_id
+    assert len(reps) == 2
+
+
+def test_compress_events_lossless():
+    rng = np.random.RandomState(0)
+    evs = []
+    for _ in range(50):
+        evs.append(CommEvent("psum", (8, 8), "float32", ("x",)))
+        evs.append(ComputeEvent((1e6, 1e3, 1e5, 0., 0., 0.)))
+    g = compress_events(evs)
+    assert [g.table[i].key() for i in g.expand_ids()] == [e.key() for e in evs]
+    assert g.encoded_size_bytes() < raw_trace_bytes(evs) / 5
+    assert g.expanded_length() == len(evs)

@@ -1,0 +1,143 @@
+"""HLO cost parser + partitioning rule tests."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import (
+    analyze, parse_module, shape_bytes, shape_elems, while_trip_count,
+)
+
+_SIMPLE_HLO = textwrap.dedent("""\
+    HloModule test
+
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8] get-tuple-element(%p), index=1
+      %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,8]) tuple(%ni, %d)
+    }
+
+    %add (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    %cond (p: (s32[], f32[8,8])) -> pred[] {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+      %x = f32[8,8] parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,8]) tuple(%zero, %x)
+      %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+      %ar = f32[8,8] all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+      ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_shape_parsing():
+    assert shape_bytes("f32[8,8]") == 256
+    assert shape_bytes("bf16[4,4]{1,0}") == 32
+    assert shape_bytes("(f32[2], s32[3])") == 20
+    assert shape_elems("pred[]") == 1
+
+
+def test_loop_aware_flops_and_collectives():
+    cost = analyze(_SIMPLE_HLO)
+    assert cost.flops == 12 * 2 * 8 ** 3          # 12 trips x one 8^3 dot
+    assert cost.collective_bytes == 256           # one all-reduce operand
+    assert cost.collective_by_kind["all-reduce"] == 256
+
+
+def test_trip_count_detection():
+    comps = parse_module(_SIMPLE_HLO)
+    comps.pop("__entry__", None)
+    assert while_trip_count(comps, "cond") == 12
+
+
+def test_real_module_scan_vs_unrolled():
+    """Parser equality on real XLA output (subprocess: needs >1 device)."""
+    prog = textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.launch.hlo_cost import analyze
+        mesh = jax.make_mesh((2,2), ("data","model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        def layer(x, w): return jnp.tanh(x @ w)
+        def scanned(x, ws):
+            y, _ = jax.lax.scan(lambda c, w: (layer(c, w), None), x, ws)
+            return y
+        def unrolled(x, ws):
+            for i in range(6): x = layer(x, ws[i])
+            return x
+        x = jax.ShapeDtypeStruct((32, 128), jnp.float32,
+                                 sharding=NamedSharding(mesh, P("data")))
+        ws = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32,
+                                  sharding=NamedSharding(mesh, P(None, None, "model")))
+        fs = analyze(jax.jit(scanned).lower(x, ws).compile().as_text()).flops
+        fu = analyze(jax.jit(unrolled).lower(x, ws).compile().as_text()).flops
+        assert abs(fs - fu) / fu < 1e-6, (fs, fu)
+        print("OK", fs)
+    """)
+    proc = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                          text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+
+
+def test_partition_rules():
+    prog = textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_test_mesh
+        from repro.sharding.partition import (LogicalRules, sharding_for_shape,
+                                              spec_for)
+        mesh = make_test_mesh(2, 4)
+        rules = LogicalRules()
+        # heads divide -> sharded; non-dividing dim dropped
+        s = sharding_for_shape((16, 8, 64), ("batch", "heads", None), mesh)
+        assert s.spec == jax.sharding.PartitionSpec("data", "model")
+        s = sharding_for_shape((16, 6, 64), ("batch", "heads", None), mesh)
+        assert s.spec == jax.sharding.PartitionSpec("data"), s.spec
+        # override mechanism
+        r2 = rules.with_overrides(embed="data")
+        assert r2.mesh_axes("embed") == "data"
+        print("OK")
+    """)
+    proc = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                          text=True, timeout=240)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+
+
+def test_attn_mode_chain():
+    prog = textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        from repro.launch.mesh import make_test_mesh
+        from repro.models.flash import attn_mode
+        mesh = make_test_mesh(2, 4)
+        assert attn_mode(mesh, 8, 4) == "heads"     # 8 % 4 == 0
+        assert attn_mode(mesh, 6, 16) == "batch"    # 16 % 8 == 0
+        assert attn_mode(mesh, 6, 4) == "cp"        # nothing divides
+        assert attn_mode(None, 3, 1) == "heads"     # off-mesh
+        print("OK")
+    """)
+    proc = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                          text=True, timeout=240)
+    assert proc.returncode == 0, proc.stderr[-2000:]
