@@ -20,9 +20,9 @@ def stencil_program(n: int = 8, length: int = 12):
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
 
-    mesh = jax.make_mesh((n,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n,), ("x",))
 
     def step(u, w):
         def body(c, _):
@@ -39,8 +39,8 @@ def stencil_program(n: int = 8, length: int = 12):
         (u, _), rs = jax.lax.scan(body, (u, w), None, length=length)
         return u, rs
 
-    f = jax.shard_map(step, mesh=mesh, in_specs=(P(None, "x"), P()),
-                      out_specs=(P(None, "x"), P()))
+    f = shard_map(step, mesh=mesh, in_specs=(P(None, "x"), P()),
+                  out_specs=(P(None, "x"), P()))
     args = (jnp.ones((256, 128 * n)), jnp.ones((128, 128)) * 0.01)
     return f, args, {"x": n}
 
@@ -52,9 +52,9 @@ def allreduce_train_program(n: int = 8, layers: int = 6):
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
 
-    mesh = jax.make_mesh((n,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n,), ("x",))
 
     def step(x, ws):
         def body(c, w):
@@ -64,8 +64,8 @@ def allreduce_train_program(n: int = 8, layers: int = 6):
         out, _ = jax.lax.scan(body, x, ws)
         return jax.lax.psum(out.sum(), "x")
 
-    f = jax.shard_map(step, mesh=mesh, in_specs=(P("x"), P()),
-                      out_specs=P())
+    f = shard_map(step, mesh=mesh, in_specs=(P("x"), P()),
+                  out_specs=P())
     args = (jnp.ones((16 * n, 512)), jnp.ones((layers, 512, 512)) * 0.01)
     return f, args, {"x": n}
 

@@ -12,6 +12,7 @@ def run() -> list[dict]:
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
     from repro.core.synthesize import synthesize
     from repro.core.replay import init_replay_state
     from repro.launch.hlo_cost import analyze
@@ -23,8 +24,7 @@ def run() -> list[dict]:
         res = synthesize(fn, *args, axis_sizes=axes, name=f"pd_{name}")
         n = list(axes.values())[0]
         axis = list(axes.keys())[0]
-        mesh = jax.make_mesh((n,), (axis,),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((n,), (axis,))
         comm = DeviceComm(axes)
         mod = res.proxy.module
         st = init_replay_state(mod)
@@ -32,10 +32,10 @@ def run() -> list[dict]:
         def proxy_rank(st):
             return mod.run_rank(st, comm, 0)
 
-        sm = jax.shard_map(proxy_rank, mesh=mesh,
-                           in_specs=(jax.tree.map(lambda _: P(), st),),
-                           out_specs=jax.tree.map(lambda _: P(), st),
-                           check_vma=False)
+        sm = shard_map(proxy_rank, mesh=mesh,
+                       in_specs=(jax.tree.map(lambda _: P(), st),),
+                       out_specs=jax.tree.map(lambda _: P(), st),
+                       check_vma=False)
         proxy_hlo = jax.jit(sm).lower(st).compile().as_text()
         orig_hlo = jax.jit(fn).lower(*args).compile().as_text()
         pc = analyze(proxy_hlo)

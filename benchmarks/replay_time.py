@@ -2,7 +2,13 @@
 
 On this CPU host the original program and the proxy both execute for real;
 we compare wall times and the time-vs-events-executed staircase (sequence
-similarity, Fig. 8)."""
+similarity, Fig. 8).
+
+Also benchmarks the batched multi-rank replay engine (§3.3): a 16-rank
+synthetic trace replayed per-rank (the old baseline: one jitted dispatch
+per rank) vs batched by control-flow signature group (one compiled
+executable per group).  Reported as ``replay_speedup`` — the acceptance
+target is ≥ 3×."""
 from __future__ import annotations
 
 import time
@@ -11,11 +17,52 @@ import numpy as np
 
 from benchmarks.common import PROGRAMS
 
+_BATCH_RANKS = 16
+
+
+def _batched_replay_rows() -> list[dict]:
+    from repro.core.events import CommEvent, ComputeEvent
+    from repro.core.synthesize import synthesize
+
+    comm = CommEvent("psum", (16,), "float32", ("x",))
+    perm = CommEvent("ppermute", (4, 4), "bfloat16", ("x",), ("shift", 1))
+    comp = ComputeEvent((2.1e7, 3.3e5, 1.1e7, 8.2e3, 0., 0.))
+    traces = []
+    for r in range(_BATCH_RANKS):
+        tr = [comp, comm, comp, perm] * 6
+        if r == 0:
+            tr = tr + [comm]     # heterogeneous rank → second signature group
+        traces.append(tr)
+    res = synthesize(rank_traces=traces, axis_sizes={"x": _BATCH_RANKS},
+                     name="rt_batched")
+
+    t_per_rank = res.proxy.time_all(iters=3, batched=False)
+    t_batched = res.proxy.time_all(iters=3, batched=True)
+    # distinct per-rank states: vmapped group sweep vs its own baseline
+    t_vmapped = res.proxy.time_all(iters=3, batched=True, per_rank_seeds=True)
+    t_seeded = res.proxy.time_all(iters=3, batched=False, per_rank_seeds=True)
+    fid = res.fidelity(sample_ranks=None)
+    fid_per_rank = res.proxy.fidelity(res.rank_traces, sample_ranks=None,
+                                      batched=False)
+    return [{
+        "program": f"batched_replay_{_BATCH_RANKS}ranks",
+        "n_signature_groups": res.stats["n_signature_groups"],
+        "per_rank_sweep_ms": round(t_per_rank * 1e3, 3),
+        "batched_sweep_ms": round(t_batched * 1e3, 3),
+        "vmapped_sweep_ms": round(t_vmapped * 1e3, 3),
+        "per_rank_seeded_sweep_ms": round(t_seeded * 1e3, 3),
+        "replay_speedup": round(t_per_rank / max(t_batched, 1e-12), 2),
+        "vmapped_speedup": round(t_seeded / max(t_vmapped, 1e-12), 2),
+        "ranks_per_sec_batched": round(_BATCH_RANKS / max(t_batched, 1e-12), 1),
+        "fidelity_delta_vs_per_rank": float(
+            np.max(np.abs(fid.delta - fid_per_rank.delta))),
+    }]
+
 
 def run() -> list[dict]:
     import jax
     from repro.core.synthesize import synthesize
-    rows = []
+    rows = _batched_replay_rows()
     for name, builder in PROGRAMS.items():
         fn, args, axes = builder(8)
         jfn = jax.jit(fn)

@@ -14,10 +14,11 @@ import jax                     # noqa: E402
 import jax.numpy as jnp        # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro.compat import make_mesh, shard_map  # noqa: E402
 from repro.core.synthesize import synthesize  # noqa: E402
 
 N = 8
-mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((N,), ("x",))
 
 
 def stencil_step(u, w):
@@ -39,9 +40,9 @@ def stencil_step(u, w):
 
 
 def main():
-    f = jax.shard_map(stencil_step, mesh=mesh,
-                      in_specs=(P(None, "x"), P()),
-                      out_specs=(P(None, "x"), P()))
+    f = shard_map(stencil_step, mesh=mesh,
+                  in_specs=(P(None, "x"), P()),
+                  out_specs=(P(None, "x"), P()))
     u = jnp.ones((256, 128 * N))
     w = jnp.ones((128, 128)) * 0.01
 
@@ -57,9 +58,16 @@ def main():
     print(f"  mean relative error: {fid.mean:.4f}")
     print(fid.heatmap_csv())
 
-    print("\n=== replaying rank 0 ===")
-    result.proxy.run_local(ranks=[0])
-    print(f"  replay wall time: {result.proxy.time_local(0, iters=3)*1e3:.2f} ms")
+    print("\n=== replaying all ranks (batched by signature group) ===")
+    states = result.proxy.run_all()
+    n_groups = len(result.proxy.signature_groups())
+    print(f"  {len(states)} ranks replayed in {n_groups} signature group(s)")
+    t_batched = result.proxy.time_all(iters=3)
+    t_per_rank = result.proxy.time_all(iters=3, batched=False)
+    print(f"  full sweep: batched {t_batched*1e3:.2f} ms"
+          f" vs per-rank {t_per_rank*1e3:.2f} ms"
+          f" ({t_per_rank / max(t_batched, 1e-12):.1f}x)")
+    print(f"  single-rank replay: {result.proxy.time_local(0, iters=3)*1e3:.2f} ms")
     print(f"\ngenerated proxy source: {result.proxy.module.__proxy_path__}")
 
 

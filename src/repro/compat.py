@@ -1,0 +1,128 @@
+"""JAX cross-version compatibility shims — the single home for API drift.
+
+The repo pins no exact JAX version; the container currently ships 0.4.37
+while much of the code was written against the ≥ 0.5 surface.  Every
+version-sensitive call goes through this module so future drift has one
+place to land:
+
+* :func:`make_mesh` — ``jax.make_mesh`` grew an ``axis_types`` kwarg (and
+  ``jax.sharding.AxisType``) after 0.4.x; we pass it only when supported.
+* :func:`shard_map` — ``jax.shard_map`` is ``jax.experimental.shard_map``
+  on 0.4.x, and the ``check_vma`` kwarg used to be spelled ``check_rep``.
+* :func:`tree_flatten_with_path` — ``jax.tree.flatten_with_path`` is
+  missing on 0.4.x; ``jax.tree_util.tree_flatten_with_path`` exists on both.
+* :func:`ensure_batching_rules` — 0.4.x lacks the ``optimization_barrier``
+  batching rule (added upstream later); the batched replay engine vmaps
+  over a rank axis and needs it.  Registered once at import.
+
+Policy: shims are feature-detected (``inspect.signature`` / ``getattr``),
+never version-compared, so they keep working as JAX moves.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+_MAKE_MESH_PARAMS = frozenset(inspect.signature(jax.make_mesh).parameters)
+
+
+def default_axis_types(n_axes: int):
+    """``(AxisType.Auto,) * n`` when the enum exists, else None."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n_axes
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types: Any = "auto",
+              devices=None):
+    """Version-safe ``jax.make_mesh``.
+
+    ``axis_types="auto"`` (the default) requests ``AxisType.Auto`` for every
+    axis when the running JAX supports axis types, and silently omits the
+    argument when it does not — which is exactly the old behaviour.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if "axis_types" in _MAKE_MESH_PARAMS:
+        if axis_types == "auto":
+            axis_types = default_axis_types(len(tuple(axis_names)))
+        if axis_types is not None:
+            kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+_SHARD_MAP_IMPL: Callable = getattr(jax, "shard_map", None)
+if _SHARD_MAP_IMPL is None:  # 0.4.x
+    from jax.experimental.shard_map import shard_map as _SHARD_MAP_IMPL
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_SHARD_MAP_IMPL).parameters)
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None, **kwargs):
+    """Version-safe ``shard_map``: maps ``check_vma`` to ``check_rep`` on
+    older JAX (same semantics: per-output replication checking)."""
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kwargs["check_rep"] = check_vma
+    return _SHARD_MAP_IMPL(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# pytree paths
+# ---------------------------------------------------------------------------
+
+
+def tree_flatten_with_path(tree, is_leaf=None):
+    """``jax.tree.flatten_with_path`` on new JAX, ``jax.tree_util`` on old."""
+    fwp = getattr(jax.tree, "flatten_with_path", None)
+    if fwp is not None:
+        return fwp(tree, is_leaf=is_leaf)
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf)
+
+
+# ---------------------------------------------------------------------------
+# missing batching rules (vmap support for the batched replay engine)
+# ---------------------------------------------------------------------------
+
+_BATCHING_DONE = False
+
+
+def ensure_batching_rules() -> None:
+    """Register the ``optimization_barrier`` batching rule when missing.
+
+    The rule is the identity on batch dims (the barrier is semantically the
+    identity function); upstream JAX added the same rule after 0.4.x.
+    Idempotent and a no-op on versions that already have it.
+    """
+    global _BATCHING_DONE
+    if _BATCHING_DONE:
+        return
+    _BATCHING_DONE = True
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+    except ImportError:  # pragma: no cover - internals moved; newer JAX has the rule
+        return
+    if optimization_barrier_p not in batching.primitive_batchers:
+        def _barrier_batch_rule(args, dims):
+            return optimization_barrier_p.bind(*args), dims
+
+        batching.primitive_batchers[optimization_barrier_p] = _barrier_batch_rule
+
+
+ensure_batching_rules()

@@ -20,7 +20,7 @@ reproduces the original program's collective schedule.
 from __future__ import annotations
 
 import textwrap
-from typing import Mapping
+from typing import Mapping, Sequence
 
 from repro.core.events import CommEvent, ComputeEvent, is_comm
 from repro.core.interproc import MergedProgram
@@ -118,12 +118,14 @@ def generate_source(merged: MergedProgram,
 
     # -- main rules with rank-set guards ----------------------------------------
     guards_meta: list[list[str]] = []
+    cluster_runs: list[list[frozenset | None]] = []   # None == unguarded run
     for ci, (main, cranks) in enumerate(zip(merged.mains, merged.cluster_ranks)):
         w(f"def main{ci}(st, comm, rank):")
         if not main:
             w("    return st")
             w("")
             guards_meta.append([])
+            cluster_runs.append([])
             continue
         meta = []
         # group consecutive symbols sharing a rank set (Alg. 2 lines 15-18)
@@ -149,6 +151,7 @@ def generate_source(merged: MergedProgram,
         w("    return st")
         w("")
         guards_meta.append(meta)
+        cluster_runs.append([None if rs >= cranks else rs for rs, _ in runs])
 
     # -- driver + signature -------------------------------------------------------
     w("CLUSTER_RANKS = (")
@@ -160,6 +163,20 @@ def generate_source(merged: MergedProgram,
     w("_GUARDS = (")
     for meta in guards_meta:
         w("    (" + ", ".join(meta) + ("," if len(meta) == 1 else "") + "),")
+    w(")")
+    w("")
+
+    # -- signature-group metadata (batched replay, §3.3) -----------------------
+    # Ranks sharing a control-flow signature execute byte-identical programs,
+    # so the replay engine can stack their states and run one compiled
+    # executable for the whole group.  Precomputed here so replay never has
+    # to probe program_signature rank by rank.
+    sig_groups = compute_signature_groups(merged.cluster_ranks, cluster_runs,
+                                          merged.n_ranks)
+    w("#: (signature, ranks) pairs; every rank appears in exactly one group.")
+    w("SIGNATURE_GROUPS = (")
+    for sig, ranks in sig_groups:
+        w(f"    ({sig!r}, {_fmt_ranktuple(ranks)}),")
     w(")")
     w("")
     w(textwrap.dedent("""\
@@ -181,6 +198,41 @@ def generate_source(merged: MergedProgram,
             return tuple(sig)
     """))
     return "\n".join(L)
+
+
+def _fmt_ranktuple(s: Sequence[int]) -> str:
+    """Compact ordered-tuple literal: arithmetic progressions (the common
+    SPMD group shape) render as ``tuple(range(...))`` so a thousand-rank
+    group costs O(1) generated source, not O(n)."""
+    s = list(s)
+    if len(s) >= 3:
+        step = s[1] - s[0]
+        if step > 0 and all(b - a == step for a, b in zip(s, s[1:])):
+            return (f"tuple(range({s[0]}, {s[-1] + 1}))" if step == 1
+                    else f"tuple(range({s[0]}, {s[-1] + 1}, {step}))")
+    return repr(tuple(s))
+
+
+def compute_signature_groups(cluster_ranks: Sequence[frozenset],
+                             cluster_runs: Sequence[Sequence[frozenset | None]],
+                             n_ranks: int,
+                             ) -> list[tuple[tuple, list[int]]]:
+    """Group ranks by control-flow signature (mirrors ``program_signature``).
+
+    A rank's signature is the tuple of ``(cluster_id, matched_guard_runs)``
+    over the clusters containing it — the exact per-rank trace key of the
+    generated module.  Groups preserve rank order; signatures are ordered by
+    first rank seen, so output is deterministic.
+    """
+    groups: dict[tuple, list[int]] = {}
+    for rank in range(n_ranks):
+        sig = []
+        for ci, (cranks, runs) in enumerate(zip(cluster_ranks, cluster_runs)):
+            if rank in cranks:
+                sig.append((ci, tuple(i for i, rs in enumerate(runs)
+                                      if rs is None or rank in rs)))
+        groups.setdefault(tuple(sig), []).append(rank)
+    return list(groups.items())
 
 
 def _topo_order(rules: dict[int, list]) -> list[int]:

@@ -45,9 +45,12 @@ DATA_MOVEMENT_PRIMS = {
     "pvary", "sharding_constraint", "reshard",
 }
 
-#: zero-cost bookkeeping primitives
+#: zero-cost bookkeeping primitives.  ``pbroadcast`` is the pre-0.5 spelling
+#: of ``pvary`` — the replication marker shard_map's check_rep machinery
+#: inserts after collectives; it lowers to a no-op and must not be recorded
+#: as a communication event (version drift handled like repro.compat).
 FREE_PRIMS = {
-    "stop_gradient", "axis_index", "sharding_cast", "pvary",
+    "stop_gradient", "axis_index", "sharding_cast", "pvary", "pbroadcast",
     "symbolic_zeros", "empty", "debug_callback", "name",
     "optimization_barrier",
 }
@@ -64,7 +67,6 @@ COLLECTIVE_PRIMS = {
     "reduce_scatter": "reduce_scatter",
     "all_to_all": "all_to_all",
     "ppermute": "ppermute",
-    "pbroadcast": "broadcast",
 }
 
 #: higher-order primitives carrying sub-jaxprs that the walker must enter

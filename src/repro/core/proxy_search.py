@@ -136,6 +136,24 @@ def _refine_integer(y: np.ndarray, a: np.ndarray, rhs: np.ndarray,
 _UNROLLS = (1, 8, 64, 512, 4096)
 
 
+def _nnls_robust(a: np.ndarray, rhs: np.ndarray) -> np.ndarray:
+    """NNLS that cannot fail: scipy's active-set solver with a generous
+    iteration budget, falling back to bounded least squares when the
+    weighted system is ill-conditioned enough to make it cycle (seen on
+    tiny sub-block-sized targets).  The integer refinement downstream
+    polishes either answer."""
+    from scipy.optimize import lsq_linear, nnls
+
+    try:
+        try:
+            y, _ = nnls(a, rhs, maxiter=max(30 * a.shape[1], 300))
+        except TypeError:       # scipy < 1.12: no maxiter kwarg
+            y, _ = nnls(a, rhs)
+    except RuntimeError:
+        y = np.maximum(lsq_linear(a, rhs, bounds=(0.0, np.inf)).x, 0.0)
+    return y
+
+
 def fit_combination(t: np.ndarray, b: np.ndarray | None = None,
                     max_count: float = 2 ** 40) -> FitResult:
     """Exact weighted-NNLS fit + integer refinement with constraint repair.
@@ -145,8 +163,6 @@ def fit_combination(t: np.ndarray, b: np.ndarray | None = None,
     turns, so the turn count (= serialization metric) stays commensurate
     with the target's scan_steps (paper: multiple block instances share the
     block-11 loop body)."""
-    from scipy.optimize import nnls
-
     t = np.asarray(t, dtype=np.float64)
     if b is None:
         b = B.calibration_matrix()
@@ -156,7 +172,7 @@ def fit_combination(t: np.ndarray, b: np.ndarray | None = None,
         bs = substituted_matrix(b, u)
         a = bs * w[:, None]
         rhs = t * w
-        y, _ = nnls(a, rhs)
+        y = _nnls_robust(a, rhs)
         y = np.minimum(y, max_count)
         # integer projection in the substituted basis keeps coupling exact
         yi = _refine_integer(y, a, rhs)
@@ -238,3 +254,15 @@ def rel_error(t: np.ndarray, pred: np.ndarray) -> np.ndarray:
     t = np.asarray(t, dtype=np.float64)
     pred = np.asarray(pred, dtype=np.float64)
     return np.abs(pred - t) / np.maximum(np.abs(t), _EPS)
+
+
+def rel_error_matrix(targets: np.ndarray, preds: np.ndarray) -> np.ndarray:
+    """Batched δ matrix (paper eq. 8 numerator): ``|pred - t| / |t|`` over a
+    (n_metrics, n_ranks) stack, with rows-by-column where the target metric
+    is absent (t <= 0) defined as 0 — a metric the original never excites
+    contributes no error.  Used by the vectorized fidelity path in
+    :mod:`repro.core.replay`."""
+    targets = np.asarray(targets, dtype=np.float64)
+    delta = rel_error(targets, preds)
+    delta[targets <= 0] = 0.0
+    return delta

@@ -6,12 +6,27 @@ a loop that executed 10^6 times costs O(1) code and O(1) trace — mirroring
 the grammar's a^i symbols.
 
 :class:`ProxyProgram` wraps a generated module:
-  * ``run_local(rank)`` executes the proxy on this host (LocalSim comm),
-    jit-compiling once per distinct control-flow signature;
+
+  * ``run_local(rank)`` executes ranks one at a time on this host (LocalSim
+    comm), jit-compiling once per distinct control-flow signature;
+  * ``run_all(ranks)`` is the **batched multi-rank engine**: ranks are
+    grouped by control-flow signature (the generated module precomputes
+    ``SIGNATURE_GROUPS``), per-rank states are stacked along a leading rank
+    axis, and one ``vmap``-ed compiled executable replays a whole group at
+    once — one trace + one dispatch per group instead of per rank;
   * ``rank_metrics(rank)`` re-traces the generated code with the *same*
     jaxpr cost walker used on the original program — the measurement behind
-    the paper's Table 3 relative-error columns;
-  * ``fidelity(original)`` computes δ̄ = mean_{m,p} |A-B|/A (paper eq. 8).
+    the paper's Table 3 relative-error columns.  Results are cached per
+    (signature, state shapes): ranks in a group are byte-identical programs,
+    so one walker trace covers them all;
+  * ``fidelity(original)`` computes δ̄ = mean_{m,p} |A-B|/A (paper eq. 8),
+    vectorized across all ranks in one pass.
+
+Compile caching: every compiled executable (per-rank and batched) is keyed
+by (signature, comm backend, batch size, state shapes) and kept on the
+instance, so repeated ``run_all`` / ``fidelity`` / ``rank_metrics`` calls
+never re-trace.  ``cache_stats()`` exposes trace/hit counters for tests and
+benchmarks.
 """
 from __future__ import annotations
 
@@ -28,7 +43,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro import compat  # noqa: F401  (registers vmap rules on old JAX)
 from repro.core import blocks
+from repro.core import proxy_search
 from repro.core.events import Event, METRIC_NAMES, N_METRICS, is_comm
 from repro.core.tracer import trace_fn
 from repro.sharding.collectives import LocalSim
@@ -92,25 +109,126 @@ class ProxyProgram:
         self.merged = merged
         self.combos = combos
         self.axis_sizes = dict(axis_sizes or {})
-        self._compiled: dict = {}
+        self._compiled: dict = {}          # (sig, comm, shapes) -> per-rank fn
+        self._compiled_batched: dict = {}  # (sig, comm, n, shapes) -> vmapped fn
+        self._metrics_cache: dict = {}     # (sig, shapes) -> np.ndarray
+        self._sig_by_rank: dict | None = None
+        self._shapes_key_cache = None      # filled by _shapes_key()
+        self._counters = {"jit_traces": 0, "metric_traces": 0,
+                          "batch_cache_hits": 0, "batch_cache_misses": 0}
+
+    # -- signature grouping ----------------------------------------------------
+
+    def signature_of(self, rank: int):
+        """Control-flow signature of ``rank`` (hashable jit/cache key)."""
+        if self._sig_by_rank is None:
+            groups = getattr(self.module, "SIGNATURE_GROUPS", None) or ()
+            self._sig_by_rank = {r: sig for sig, ranks in groups for r in ranks}
+        sig = self._sig_by_rank.get(rank)
+        if sig is None:
+            sig = self.module.program_signature(rank)
+            self._sig_by_rank[rank] = sig
+        return sig
+
+    def _validate_ranks(self, ranks: Sequence[int]) -> None:
+        bad = [r for r in ranks if not 0 <= r < self.merged.n_ranks]
+        if bad:
+            raise ValueError(f"ranks out of range: {bad} "
+                             f"(proxy has {self.merged.n_ranks} ranks)")
+
+    def signature_groups(self, ranks: Sequence[int] | None = None,
+                         ) -> list[tuple[tuple, list[int]]]:
+        """(signature, ranks) pairs covering ``ranks`` (default: all).
+
+        Uses the generation-time ``SIGNATURE_GROUPS`` constant when the
+        module has one; falls back to probing ``program_signature`` so
+        pre-metadata modules keep working.
+        """
+        groups = getattr(self.module, "SIGNATURE_GROUPS", None)
+        if groups is None:
+            by_sig: dict[tuple, list[int]] = {}
+            all_ranks = range(self.merged.n_ranks) if ranks is None else ranks
+            for r in all_ranks:
+                by_sig.setdefault(self.module.program_signature(r), []).append(r)
+            return list(by_sig.items())
+        if ranks is None:
+            return [(sig, list(rs)) for sig, rs in groups]
+        want = set(ranks)
+        out = [(sig, [r for r in rs if r in want]) for sig, rs in groups]
+        out = [(sig, rs) for sig, rs in out if rs]
+        missing = want - {r for _, rs in out for r in rs}
+        if missing:
+            raise ValueError(
+                f"ranks not in any signature group: {sorted(missing)} "
+                f"(proxy has {self.merged.n_ranks} ranks)")
+        return out
+
+    def _shapes_key(self) -> tuple:
+        """State-shape fingerprint: part of every compile-cache key.
+
+        Constant for this instance today (block geometry and COMM_BUFFERS
+        are module-level), but kept in the key as the contract guard for
+        the §3.3 cache spec — (signature, block shapes) — so a future
+        configurable block geometry invalidates instead of aliasing."""
+        if self._shapes_key_cache is None:
+            st = jax.eval_shape(lambda: init_replay_state(self.module))
+            self._shapes_key_cache = tuple(
+                sorted((k, tuple(v.shape), str(v.dtype)) for k, v in st.items()))
+        return self._shapes_key_cache
 
     # -- execution -------------------------------------------------------------
 
+    @staticmethod
+    def _comm_key(comm):
+        """Compile-cache component for the comm backend.  A plain LocalSim
+        is stateless at execution time, so all instances share compiled
+        programs — the fresh ``LocalSim()`` each ``run_local``/``fidelity``
+        call constructs must not force a re-trace.  Anything else (DeviceComm,
+        counting subclasses) is keyed by identity."""
+        return LocalSim if type(comm) is LocalSim else id(comm)
+
     def _fn_for_rank(self, rank: int, comm):
-        sig = self.module.program_signature(rank)
-        key = (sig, id(comm))
+        sig = self.signature_of(rank)
+        key = (sig, self._comm_key(comm), self._shapes_key())
         if key not in self._compiled:
             mod = self.module
-            self._compiled[key] = jax.jit(
-                lambda st: mod.run_rank(st, comm, rank))
+            counters = self._counters
+
+            def traced(st):
+                counters["jit_traces"] += 1   # trace-time side effect
+                return mod.run_rank(st, comm, rank)
+
+            self._compiled[key] = jax.jit(traced)
         return self._compiled[key]
+
+    def _fn_for_group(self, sig, rep_rank: int, n: int, comm):
+        """Compiled executable replaying ``n`` stacked ranks of one group."""
+        key = (sig, self._comm_key(comm), n, self._shapes_key())
+        fn = self._compiled_batched.get(key)
+        if fn is None:
+            self._counters["batch_cache_misses"] += 1
+            mod = self.module
+            counters = self._counters
+
+            def traced(stacked):
+                counters["jit_traces"] += 1   # trace-time side effect
+                return jax.vmap(lambda st: mod.run_rank(st, comm, rep_rank))(stacked)
+
+            fn = jax.jit(traced)
+            self._compiled_batched[key] = fn
+        else:
+            self._counters["batch_cache_hits"] += 1
+        return fn
 
     def run_local(self, ranks: Sequence[int] | None = None, seed: int = 0,
                   comm=None) -> dict:
         """Execute ranks sequentially on this host; returns final state of
         the last rank (values are meaningless — this is a performance proxy)."""
         comm = comm or LocalSim()
-        ranks = range(self.merged.n_ranks) if ranks is None else ranks
+        if ranks is None:
+            ranks = range(self.merged.n_ranks)
+        else:
+            self._validate_ranks(ranks)
         st = init_replay_state(self.module, seed)
         out = st
         for r in ranks:
@@ -118,8 +236,72 @@ class ProxyProgram:
         jax.block_until_ready(out)
         return out
 
+    def run_all(self, ranks: Sequence[int] | None = None, seed: int = 0,
+                comm=None, batched: bool = True,
+                per_rank_seeds: bool = False) -> dict[int, dict]:
+        """Replay every rank; returns ``{rank: final state}``.
+
+        ``batched=True`` (default) replays one signature group per compiled
+        call instead of one rank at a time:
+
+        * with the default shared seed, every rank of a group is a
+          byte-identical execution (same program, same initial state — the
+          SPMD redundancy that made the grammars mergeable in the first
+          place), so the group's program runs **once** and the result is
+          shared by all its ranks;
+        * with ``per_rank_seeds=True`` each rank gets a distinct initial
+          state (``seed + rank``); states are stacked on a leading rank
+          axis and the group program is ``vmap``-ed over it — still one
+          trace + one dispatch per group.
+
+        ``batched=False`` is the per-rank baseline path (identical results;
+        benchmarked against in benchmarks/replay_time.py).
+        """
+        comm = comm or LocalSim()
+        if ranks is not None:
+            self._validate_ranks(ranks)
+        out = {}
+        if not batched:
+            st = None if per_rank_seeds else init_replay_state(self.module, seed)
+            for r in (range(self.merged.n_ranks) if ranks is None else ranks):
+                out[r] = self._fn_for_rank(r, comm)(
+                    init_replay_state(self.module, seed + r)
+                    if per_rank_seeds else st)
+            for v in out.values():
+                jax.block_until_ready(v)
+            return out
+        for fn, arg, grp in self._group_work(ranks, seed, comm, per_rank_seeds):
+            res = fn(arg)
+            if per_rank_seeds:
+                for i, r in enumerate(grp):
+                    out[r] = jax.tree.map(lambda a, i=i: a[i], res)
+            else:
+                for r in grp:   # identical input + program -> identical output
+                    out[r] = dict(res)      # fresh dict: don't alias ranks
+        for v in out.values():
+            jax.block_until_ready(v)
+        return out
+
+    def _group_work(self, ranks, seed: int, comm, per_rank_seeds: bool,
+                    ) -> list[tuple]:
+        """One ``(compiled_fn, input_state, group_ranks)`` unit per signature
+        group — the shared work plan of :meth:`run_all` and :meth:`time_all`."""
+        st = None if per_rank_seeds else init_replay_state(self.module, seed)
+        work = []
+        for sig, grp in self.signature_groups(ranks):
+            if per_rank_seeds:
+                stacked = jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[init_replay_state(self.module, seed + r) for r in grp])
+                work.append((self._fn_for_group(sig, grp[0], len(grp), comm),
+                             stacked, grp))
+            else:
+                work.append((self._fn_for_rank(grp[0], comm), st, grp))
+        return work
+
     def time_local(self, rank: int = 0, iters: int = 1, seed: int = 0) -> float:
         """Wall-clock seconds of one rank's replay (compiled, warm)."""
+        self._validate_ranks([rank])
         comm = LocalSim()
         fn = self._fn_for_rank(rank, comm)
         st = init_replay_state(self.module, seed)
@@ -129,28 +311,83 @@ class ProxyProgram:
             jax.block_until_ready(fn(st))
         return (time.perf_counter() - t0) / iters
 
+    def time_all(self, ranks: Sequence[int] | None = None, iters: int = 1,
+                 seed: int = 0, batched: bool = True,
+                 per_rank_seeds: bool = False) -> float:
+        """Warm wall-clock seconds of one full multi-rank replay sweep.
+
+        Mirrors :meth:`run_all`'s three modes: per-rank baseline
+        (``batched=False``), group-deduplicated (default), and group-vmapped
+        (``per_rank_seeds=True``).
+        """
+        comm = LocalSim()
+        ranks = list(range(self.merged.n_ranks) if ranks is None else ranks)
+        self._validate_ranks(ranks)
+        if batched:
+            work = [(fn, arg) for fn, arg, _ in
+                    self._group_work(ranks, seed, comm, per_rank_seeds)]
+        else:
+            st = None if per_rank_seeds else init_replay_state(self.module, seed)
+            work = [(self._fn_for_rank(r, comm),
+                     init_replay_state(self.module, seed + r)
+                     if per_rank_seeds else st) for r in ranks]
+
+        def sweep():
+            out = None
+            for fn, arg in work:
+                out = fn(arg)
+            jax.block_until_ready(out)
+
+        sweep()  # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            sweep()
+        return (time.perf_counter() - t0) / iters
+
+    def cache_stats(self) -> dict[str, int]:
+        """Trace/cache counters (jit_traces counts actual re-traces)."""
+        return dict(self._counters,
+                    compiled_per_rank=len(self._compiled),
+                    compiled_batched=len(self._compiled_batched),
+                    cached_metric_groups=len(self._metrics_cache))
+
     # -- measurement -------------------------------------------------------------
 
-    def rank_metrics(self, rank: int) -> np.ndarray:
-        """Walker-measured 6-metric total of this rank's generated program."""
+    def rank_metrics(self, rank: int, use_cache: bool = True) -> np.ndarray:
+        """Walker-measured 6-metric total of this rank's generated program.
+
+        Cached per (signature, state shapes): ranks sharing a control-flow
+        signature run byte-identical programs, so repeated ``fidelity`` /
+        ``rank_metrics`` calls never re-trace a group already measured.
+        """
+        key = (self.signature_of(rank), self._shapes_key())
+        if use_cache and key in self._metrics_cache:
+            return self._metrics_cache[key]
         st = jax.eval_shape(lambda: init_replay_state(self.module))
         comm = LocalSim()
+        self._counters["metric_traces"] += 1
         tr = trace_fn(lambda s: self.module.run_rank(s, comm, rank), st)
-        return tr.total_compute()
+        out = tr.total_compute()
+        self._metrics_cache[key] = out
+        return out
 
     def expand_rank_ids(self, rank: int) -> list[int]:
         return self.merged.expand_rank(rank)
 
     def fidelity(self, original_rank_traces: Sequence[Sequence[Event]],
                  original_rank_keys: Sequence[Sequence[str]] | None = None,
-                 sample_ranks: int | None = None) -> FidelityReport:
+                 sample_ranks: int | None = None,
+                 batched: bool = True) -> FidelityReport:
         """Compare proxy vs original per rank (paper §3.3.1).
 
         Compute metrics: walker totals of generated code vs the original
-        trace's compute totals.  Communication: the merged grammar must
-        expand to the original event *key* sequence exactly (losslessness;
-        keys, not local ids — heterogeneous ranks intern in different
-        orders).
+        trace's compute totals, assembled for all sampled ranks in one
+        vectorized pass (proxy totals come from the per-signature metrics
+        cache — one walker trace per group, not per rank).  Communication:
+        the merged grammar must expand to the original event *key* sequence
+        exactly (losslessness; keys, not local ids — heterogeneous ranks
+        intern in different orders).  ``batched=False`` forces the original
+        per-rank/per-trace path (the parity baseline in tests).
         """
         n_ranks = len(original_rank_traces)
         ranks = list(range(n_ranks))
@@ -165,14 +402,13 @@ class ProxyProgram:
                 if list(original_rank_keys[r]) != got:
                     lossless = False
                     break
-        delta = np.zeros((N_METRICS, len(ranks)))
+        a = np.zeros((N_METRICS, len(ranks)))
         for col, r in enumerate(ranks):
-            a = np.zeros(N_METRICS)
             for ev in original_rank_traces[r]:
                 if not is_comm(ev):
-                    a += ev.vector
-            b = self.rank_metrics(r)
-            delta[:, col] = np.abs(a - b) / np.maximum(np.abs(a), 1e-30)
-            delta[a <= 0, col] = 0.0  # metric absent in original and (near) proxy
+                    a[:, col] += ev.vector
+        b = np.stack([self.rank_metrics(r, use_cache=batched) for r in ranks],
+                     axis=1)
+        delta = proxy_search.rel_error_matrix(a, b)
         return FidelityReport(delta=delta, comm_lossless=lossless,
                               mean=float(delta.mean()))

@@ -42,11 +42,14 @@ class SynthesisResult:
     def source(self) -> str:
         return self.proxy.source
 
-    def fidelity(self, sample_ranks: int | None = 16) -> FidelityReport:
+    def fidelity(self, sample_ranks: int | None = 16,
+                 batched: bool = True) -> FidelityReport:
+        """δ̄ report; ``batched`` uses the vectorized per-signature-group
+        path (identical numbers, one walker trace per group)."""
         keys = [[g.table[i].key() for i in ids]
                 for g, ids in zip(self.grammars, self.rank_ids)]
         return self.proxy.fidelity(self.rank_traces, keys,
-                                   sample_ranks=sample_ranks)
+                                   sample_ranks=sample_ranks, batched=batched)
 
 
 def compress_rank_traces(rank_traces: Sequence[Sequence[Event]],
@@ -154,6 +157,7 @@ def synthesize(fn: Callable | None = None, *args,
     stats = {
         "n_ranks": len(rank_traces),
         "n_events": n_events,
+        "n_signature_groups": len(module.SIGNATURE_GROUPS),
         "n_unique_terminals": len(merged.table),
         "n_rules": len(merged.rules),
         "trace_bytes": trace_bytes,

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat  # noqa: F401  (optimization_barrier vmap rule on old JAX)
 from repro.core.events import CommEvent, decode_relative_perm
 from repro.core import tracer as _tracer
 
@@ -91,9 +92,29 @@ class LocalSim:
     point, like an MPI call is), with negligible compute — the paper replays
     communication on the real network; on this CPU container the network
     fidelity is asserted on the lowered HLO of the DeviceComm path instead.
+
+    Batched rank axis: the sequence point is shape-agnostic, so the same
+    backend serves the per-rank path and the ``vmap``-ed signature-group
+    path of :meth:`repro.core.replay.ProxyProgram.run_all`, where every
+    pool buffer carries a leading rank dimension (the required vmap rule
+    for ``optimization_barrier`` is registered by :mod:`repro.compat`).
+
+    ``trace_events`` counts ``do`` calls *at trace time* (one per comm call
+    site per program trace — loop bodies count once, like the grammar's
+    run-length symbols).  Caveat: plain ``LocalSim`` instances are
+    interchangeable to the replay compile cache (keyed by class, so fresh
+    instances reuse warm executables and trigger **no** new traces); to
+    count exactly, pass an identity-keyed *subclass* instance to a fresh
+    ``ProxyProgram`` — see ``CountingSim`` in tests/test_replay_batched.py,
+    where equal per-signature counts between the batched and per-rank paths
+    serve as a cheap losslessness probe.
     """
 
+    def __init__(self):
+        self.trace_events = 0
+
     def do(self, st: dict, buf: str, *, kind: str, axes, detail, shape, dtype):
+        self.trace_events += 1
         st = dict(st)
         # a pure sequence point: orders the replay like the MPI call does,
         # contributes zero compute metrics (it is not the comm being modeled)

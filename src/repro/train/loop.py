@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.configs.registry import rules_for
 from repro.models.model import build_forward, init_params, logical_axes_tree
@@ -120,7 +121,7 @@ def make_manual_dp_train_step(cfg: ArchConfig, mesh,
     def batch_spec(x):
         return P(data_axis)
 
-    step = jax.shard_map(
+    step = shard_map(
         local_step, mesh=mesh,
         in_specs=(pspec, pspec, pspec, P(data_axis)),
         out_specs=(pspec, pspec, pspec, pspec),

@@ -20,11 +20,11 @@ def test_device_comm_all_kinds_execute():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.sharding.collectives import DeviceComm
         from repro.launch.hlo_cost import analyze
 
-        mesh = jax.make_mesh((8,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("x",))
         comm = DeviceComm({"x": 8})
         st = {"b0": jnp.full((16, 8), 0.5, jnp.float32)}
 
@@ -41,10 +41,10 @@ def test_device_comm_all_kinds_execute():
                          detail=("shift", 1), shape=(16, 8), dtype="float32")
             return st
 
-        sm = jax.shard_map(prog, mesh=mesh,
-                           in_specs=(jax.tree.map(lambda _: P(), st),),
-                           out_specs=jax.tree.map(lambda _: P(), st),
-                           check_vma=False)
+        sm = shard_map(prog, mesh=mesh,
+                       in_specs=(jax.tree.map(lambda _: P(), st),),
+                       out_specs=jax.tree.map(lambda _: P(), st),
+                       check_vma=False)
         compiled = jax.jit(sm).lower(st).compile()
         got = compiled({"b0": jnp.full((16, 8), 0.5, jnp.float32)})
         import numpy as np
@@ -105,27 +105,27 @@ def test_proxy_replay_on_mesh_runs():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.core.synthesize import synthesize
         from repro.core.replay import init_replay_state
         from repro.sharding.collectives import DeviceComm
 
-        mesh = jax.make_mesh((8,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("x",))
 
         def f(u):
             left = jax.lax.ppermute(u, "x", [(i, (i+1) % 8) for i in range(8)])
             u = jnp.tanh((u + left) @ jnp.ones((128, 128)) * 0.01)
             return jax.lax.psum(u.sum(), "x")
 
-        g = jax.shard_map(f, mesh=mesh, in_specs=P(None, "x"), out_specs=P())
+        g = shard_map(f, mesh=mesh, in_specs=P(None, "x"), out_specs=P())
         res = synthesize(g, jnp.ones((64, 1024)), name="mesh_replay")
         comm = DeviceComm({"x": 8})
         mod = res.proxy.module
         st = init_replay_state(mod)
-        sm = jax.shard_map(lambda s: mod.run_rank(s, comm, 0), mesh=mesh,
-                           in_specs=(jax.tree.map(lambda _: P(), st),),
-                           out_specs=jax.tree.map(lambda _: P(), st),
-                           check_vma=False)
+        sm = shard_map(lambda s: mod.run_rank(s, comm, 0), mesh=mesh,
+                       in_specs=(jax.tree.map(lambda _: P(), st),),
+                       out_specs=jax.tree.map(lambda _: P(), st),
+                       check_vma=False)
         got = jax.jit(sm)(st)
         for leaf in jax.tree.leaves(got):
             assert np.isfinite(np.asarray(leaf, np.float32)).all()

@@ -1,5 +1,10 @@
 """Event model + grammar data-structure tests (paper §2.2, §2.5)."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.events import (

@@ -74,9 +74,9 @@ def test_real_module_scan_vs_unrolled():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import make_mesh
         from repro.launch.hlo_cost import analyze
-        mesh = jax.make_mesh((2,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2,2), ("data","model"))
         def layer(x, w): return jnp.tanh(x @ w)
         def scanned(x, ws):
             y, _ = jax.lax.scan(lambda c, w: (layer(c, w), None), x, ws)

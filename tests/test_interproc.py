@@ -1,5 +1,10 @@
 """Inter-process compression tests (paper §2.6, Algorithm 1)."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.events import CommEvent, ComputeEvent

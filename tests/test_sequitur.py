@@ -1,6 +1,9 @@
 """Property + unit tests for the space-optimized Sequitur (paper §2.5.2)."""
 import numpy as np
 import pytest
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sequitur import Sequitur, compress

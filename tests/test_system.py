@@ -17,10 +17,10 @@ _PROG = textwrap.dedent("""
     import jax, jax.numpy as jnp
     import numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
     from repro.core.synthesize import synthesize
 
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("x",))
 
     def stencil_step(u, w):
         def scanbody(c, _):
@@ -37,8 +37,8 @@ _PROG = textwrap.dedent("""
         (u, _), rs = jax.lax.scan(scanbody, (u, w), None, length=12)
         return u, rs
 
-    f = jax.shard_map(stencil_step, mesh=mesh,
-                      in_specs=(P(None, "x"), P()), out_specs=(P(None, "x"), P()))
+    f = shard_map(stencil_step, mesh=mesh,
+                  in_specs=(P(None, "x"), P()), out_specs=(P(None, "x"), P()))
     u = jnp.ones((256, 1024))
     w = jnp.ones((128, 128)) * 0.01
     res = synthesize(f, u, w, name="systest")

@@ -51,9 +51,8 @@ def test_gather_metric():
 
 
 def _shard_map_prog():
-    import os
-    mesh = jax.make_mesh((jax.device_count(),), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map
+    mesh = make_mesh((jax.device_count(),), ("x",))
     n = jax.device_count()
     from jax.sharding import PartitionSpec as P
 
@@ -62,7 +61,7 @@ def _shard_map_prog():
         u = jnp.tanh(u + left)
         return jax.lax.psum(u.sum(), "x")
 
-    return jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P()), n
+    return shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P()), n
 
 
 def test_shard_map_collectives_and_axis_sizes():
@@ -83,8 +82,8 @@ def test_per_rank_traces_shift_dedup():
 
 
 def test_scan_with_collectives_unrolls_events():
-    mesh = jax.make_mesh((jax.device_count(),), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map
+    mesh = make_mesh((jax.device_count(),), ("x",))
     from jax.sharding import PartitionSpec as P
 
     def f(u):
@@ -93,7 +92,7 @@ def test_scan_with_collectives_unrolls_events():
         u, _ = jax.lax.scan(body, u, None, length=7)
         return u
 
-    g = jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+    g = shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
     tr = trace_fn(g, jnp.ones((8 * jax.device_count(),)))
     assert len(tr.comm_events()) == 7
 
@@ -109,15 +108,15 @@ def test_trace_session_interposition():
 
 
 def test_instrumented_wrappers_record():
+    from repro.compat import make_mesh, shard_map
     from repro.sharding import collectives as C
-    mesh = jax.make_mesh((jax.device_count(),), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((jax.device_count(),), ("x",))
     from jax.sharding import PartitionSpec as P
 
     def f(u):
         return C.psum(u.sum(), "x")
 
-    g = jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P())
+    g = shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P())
     with TraceSession(n_ranks=jax.device_count()) as sess:
         jax.jit(g)(jnp.ones((8 * jax.device_count(),)))
     assert any(is_comm(e) and e.kind == "psum" for e in sess.rank_streams[0])
