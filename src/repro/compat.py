@@ -14,6 +14,12 @@ place to land:
 * :func:`ensure_batching_rules` — 0.4.x lacks the ``optimization_barrier``
   batching rule (added upstream later); the batched replay engine vmaps
   over a rank axis and needs it.  Registered once at import.
+* :func:`collective_batching_audit` — the mesh-sharded replay engine vmaps
+  a rank axis through *real* collectives inside ``shard_map``; this audits
+  that every collective primitive the replay emits has a batching rule on
+  the running JAX.  On floor 0.4.x all of them do (``optimization_barrier``
+  was the only gap, patched above) — the audit is the guard that keeps it
+  that way as JAX moves.
 
 Policy: shims are feature-detected (``inspect.signature`` / ``getattr``),
 never version-compared, so they keep working as JAX moves.
@@ -123,6 +129,50 @@ def ensure_batching_rules() -> None:
             return optimization_barrier_p.bind(*args), dims
 
         batching.primitive_batchers[optimization_barrier_p] = _barrier_batch_rule
+
+
+#: lax collective primitives the replay comm backends can emit (DeviceComm
+#: kinds → primitive names as spelled in jax internals).
+_REPLAY_COLLECTIVE_PRIMS = (
+    "psum", "pmax", "pmin", "all_gather", "reduce_scatter", "all_to_all",
+    "ppermute",
+)
+
+
+def collective_batching_audit() -> list[str]:
+    """Names of replay collectives *missing* a vmap batching rule.
+
+    The mesh-sharded sweep stacks a signature group's per-rank states and
+    ``vmap``-s them through ``DeviceComm`` inside ``shard_map``; that is
+    only sound when every collective primitive has a batching rule (the
+    rank axis is then folded into the real collective).  Returns the names
+    that lack one — empty on every supported JAX, asserted by tests; a
+    future JAX that drops a rule fails loudly there instead of silently
+    falling back to a per-rank loop.
+
+    Deliberately pessimistic: a primitive that cannot be *found* (public
+    ``jax.lax.<name>_p`` first, then the ``jax._src.lax.parallel``
+    internals) is reported as missing too — "internals moved" must surface
+    in the audit test, not hollow it out.
+    """
+    import jax.lax
+    from jax.interpreters import batching
+    try:
+        from jax._src.lax import parallel as _par
+    except ImportError:  # pragma: no cover - internals moved
+        _par = None
+    registries = []
+    for reg_name in ("primitive_batchers", "fancy_primitive_batchers"):
+        reg = getattr(batching, reg_name, None)
+        if isinstance(reg, dict):        # axis_primitive_batchers is a
+            registries.append(reg)       # write-only proxy — skip non-dicts
+    missing = []
+    for name in _REPLAY_COLLECTIVE_PRIMS:
+        prim = getattr(jax.lax, f"{name}_p",
+                       getattr(_par, f"{name}_p", None) if _par else None)
+        if prim is None or not any(prim in reg for reg in registries):
+            missing.append(name)
+    return missing
 
 
 ensure_batching_rules()

@@ -119,6 +119,7 @@ def generate_source(merged: MergedProgram,
     # -- main rules with rank-set guards ----------------------------------------
     guards_meta: list[list[str]] = []
     cluster_runs: list[list[frozenset | None]] = []   # None == unguarded run
+    cluster_run_syms: list[list[tuple[frozenset, list]]] = []  # runs w/ symbols
     for ci, (main, cranks) in enumerate(zip(merged.mains, merged.cluster_ranks)):
         w(f"def main{ci}(st, comm, rank):")
         if not main:
@@ -126,6 +127,7 @@ def generate_source(merged: MergedProgram,
             w("")
             guards_meta.append([])
             cluster_runs.append([])
+            cluster_run_syms.append([])
             continue
         meta = []
         # group consecutive symbols sharing a rank set (Alg. 2 lines 15-18)
@@ -152,6 +154,7 @@ def generate_source(merged: MergedProgram,
         w("")
         guards_meta.append(meta)
         cluster_runs.append([None if rs >= cranks else rs for rs, _ in runs])
+        cluster_run_syms.append(runs)
 
     # -- driver + signature -------------------------------------------------------
     w("CLUSTER_RANKS = (")
@@ -170,13 +173,22 @@ def generate_source(merged: MergedProgram,
     # Ranks sharing a control-flow signature execute byte-identical programs,
     # so the replay engine can stack their states and run one compiled
     # executable for the whole group.  Precomputed here so replay never has
-    # to probe program_signature rank by rank.
+    # to probe program_signature rank by rank.  Each group also carries a
+    # device-count hint: the number of mesh devices that fully reproduces the
+    # collective span of the group's program (product of the traced sizes of
+    # every mesh axis its comm terminals touch; 1 for comm-free groups).  The
+    # mesh sweep scheduler in repro.core.replay partitions devices
+    # proportionally to these hints.
     sig_groups = compute_signature_groups(merged.cluster_ranks, cluster_runs,
                                           merged.n_ranks)
-    w("#: (signature, ranks) pairs; every rank appears in exactly one group.")
+    run_axes = [[_syms_comm_axes(syms, merged.rules, merged.table)
+                 for _, syms in runs] for runs in cluster_run_syms]
+    w("#: (signature, ranks, device_hint) triples; every rank appears in")
+    w("#: exactly one group.")
     w("SIGNATURE_GROUPS = (")
     for sig, ranks in sig_groups:
-        w(f"    ({sig!r}, {_fmt_ranktuple(ranks)}),")
+        hint = group_device_hint(sig, run_axes, axis_sizes)
+        w(f"    ({sig!r}, {_fmt_ranktuple(ranks)}, {hint}),")
     w(")")
     w("")
     w(textwrap.dedent("""\
@@ -211,6 +223,52 @@ def _fmt_ranktuple(s: Sequence[int]) -> str:
             return (f"tuple(range({s[0]}, {s[-1] + 1}))" if step == 1
                     else f"tuple(range({s[0]}, {s[-1] + 1}, {step}))")
     return repr(tuple(s))
+
+
+def _syms_comm_axes(syms: Sequence[tuple], rules: Mapping[int, list],
+                    table) -> frozenset:
+    """Mesh axes touched by the comm terminals reachable from ``syms``
+    (transitively through non-terminal references)."""
+    axes: set[str] = set()
+    seen: set[int] = set()
+
+    def visit_rule(rid: int) -> None:
+        if rid in seen:
+            return
+        seen.add(rid)
+        for kind, ref, _ in rules[rid]:
+            if kind == "t":
+                visit_term(ref)
+            else:
+                visit_rule(ref)
+
+    def visit_term(gid: int) -> None:
+        ev = table.events[gid]
+        if is_comm(ev):
+            axes.update(ev.axes)
+
+    for kind, ref, _ in syms:
+        if kind == "t":
+            visit_term(ref)
+        else:
+            visit_rule(ref)
+    return frozenset(axes)
+
+
+def group_device_hint(sig: tuple, cluster_run_axes: Sequence[Sequence[frozenset]],
+                      axis_sizes: Mapping[str, int]) -> int:
+    """Devices that fully reproduce the collective span of a signature group:
+    the product of the traced sizes of every mesh axis the group's comm
+    terminals touch (1 for comm-free groups, or when an axis size is
+    unknown)."""
+    axes: set[str] = set()
+    for ci, run_ids in sig:
+        for i in run_ids:
+            axes |= cluster_run_axes[ci][i]
+    hint = 1
+    for a in sorted(axes):
+        hint *= max(int(axis_sizes.get(a, 1)), 1)
+    return max(hint, 1)
 
 
 def compute_signature_groups(cluster_ranks: Sequence[frozenset],

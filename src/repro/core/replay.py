@@ -14,6 +14,12 @@ the grammar's a^i symbols.
     ``SIGNATURE_GROUPS``), per-rank states are stacked along a leading rank
     axis, and one ``vmap``-ed compiled executable replays a whole group at
     once — one trace + one dispatch per group instead of per rank;
+  * ``run_all(ranks, mesh=...)`` is the **mesh-sharded sweep**: signature
+    groups are placed on disjoint device subsets of a mesh
+    (:func:`plan_mesh_sweep`, driven by the per-group device hints the
+    generated module carries), each group replays its real collectives via
+    ``DeviceComm`` inside a single ``shard_map`` dispatch with the rank axis
+    ``vmap``-folded through them, and groups are dispatched asynchronously;
   * ``rank_metrics(rank)`` re-traces the generated code with the *same*
     jaxpr cost walker used on the original program — the measurement behind
     the paper's Table 3 relative-error columns.  Results are cached per
@@ -32,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib.util
+import math
 import sys
 import tempfile
 import time
@@ -42,13 +49,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import PartitionSpec
 
 from repro import compat  # noqa: F401  (registers vmap rules on old JAX)
 from repro.core import blocks
 from repro.core import proxy_search
 from repro.core.events import Event, METRIC_NAMES, N_METRICS, is_comm
 from repro.core.tracer import trace_fn
-from repro.sharding.collectives import LocalSim
+from repro.sharding.collectives import DeviceComm, LocalSim
 
 _UNROLL_LIMIT = 4
 
@@ -85,12 +93,133 @@ def init_replay_state(module, seed: int = 0) -> dict:
     return st
 
 
+# ---------------------------------------------------------------------------
+# mesh sweep scheduling (device-parallel signature-group replay)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlacement:
+    """One signature group pinned to a mesh device subset.
+
+    ``device_ids`` are flat indices into ``mesh.devices``; ``axis_sizes`` is
+    the group's sub-mesh geometry (same axis names as the traced program,
+    sizes shrunk to the subset).  Hashable: used as a compile-cache key
+    component so executables are cached *per placement*."""
+    sig: tuple
+    ranks: tuple[int, ...]
+    device_ids: tuple[int, ...]
+    axis_sizes: tuple[tuple[str, int], ...]
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.device_ids)
+
+    def key(self) -> tuple:
+        return (self.device_ids, self.axis_sizes)
+
+
+def submesh_axis_sizes(n_devices: int, axis_sizes: dict[str, int],
+                       ) -> dict[str, int]:
+    """Shrink a traced mesh geometry onto ``n_devices``.
+
+    Keeps the axis names and order; each axis gets ``gcd(traced_size,
+    devices_still_unassigned)`` so the product always divides ``n_devices``
+    exactly and every collective still spans a nonempty axis.  A comm-free
+    program (no traced axes) gets a single unit axis so ``shard_map`` has a
+    mesh to run under.
+    """
+    out: dict[str, int] = {}
+    rem = max(int(n_devices), 1)
+    for a, s in axis_sizes.items():
+        g = math.gcd(max(int(s), 1), rem)
+        out[a] = g
+        rem //= g
+    if not out:
+        out = {"x": 1}
+    return out
+
+
+def plan_mesh_sweep(groups: Sequence[tuple[tuple, Sequence[int]]],
+                    hints: dict[tuple, int],
+                    axis_sizes: dict[str, int],
+                    n_devices: int) -> list[GroupPlacement]:
+    """Partition ``n_devices`` mesh devices among signature groups.
+
+    Pure function of its inputs (deterministic; no jax state touched):
+
+    * every group gets at least one device and never more than its hint —
+      extra devices beyond the traced collective span would sit idle;
+    * shares are proportional to the per-group device hints, leftovers go
+      to the groups furthest below their hint;
+    * device subsets are contiguous and disjoint while supply lasts; with
+      more groups than devices, groups wrap round-robin onto single devices
+      (dispatches then serialize per device, which is still correct);
+    * each subset is trimmed to the realizable sub-mesh size
+      (:func:`submesh_axis_sizes`), so the placement's geometry always
+      multiplies out to exactly ``len(device_ids)``.
+    """
+    n_devices = max(int(n_devices), 1)
+    groups = [(sig, list(rs)) for sig, rs in groups]
+    if not groups:
+        return []
+    want = [max(int(hints.get(sig, 1)), 1) for sig, _ in groups]
+    n = len(groups)
+    if n >= n_devices:
+        alloc = [1] * n
+        starts = [i % n_devices for i in range(n)]
+    else:
+        total = sum(want)
+        alloc = [min(w, max(1, (n_devices * w) // total)) for w in want]
+        # bumping zero-share groups to 1 device can oversubscribe the mesh
+        # (e.g. hints [100,1,1,1,1,1,1] on 8 devices); shave the largest
+        # shares back until the plan fits (every group keeps >= 1)
+        while sum(alloc) > n_devices:
+            i = alloc.index(max(alloc))
+            alloc[i] -= 1
+        # hand leftovers to the groups furthest below their hint
+        while sum(alloc) < n_devices:
+            gaps = [w - a for w, a in zip(want, alloc)]
+            if max(gaps) <= 0:
+                break
+            i = gaps.index(max(gaps))
+            alloc[i] += 1
+        # shrink each share to the largest realizable sub-mesh size (a
+        # 7-device share of a 16-wide axis would otherwise collapse to 1)
+        alloc = [_realizable(a, axis_sizes) for a in alloc]
+        starts = []
+        cur = 0
+        for a in alloc:
+            starts.append(cur)
+            cur += a
+    out = []
+    for (sig, rs), a, s0 in zip(groups, alloc, starts):
+        out.append(GroupPlacement(
+            sig=sig, ranks=tuple(rs),
+            device_ids=tuple(range(s0, s0 + a)),
+            axis_sizes=tuple(submesh_axis_sizes(a, axis_sizes).items())))
+    return out
+
+
+def _realizable(n_devices: int, axis_sizes: dict[str, int]) -> int:
+    """Largest ``v <= n_devices`` whose sub-mesh geometry multiplies out to
+    exactly ``v`` (1 always qualifies)."""
+    for v in range(max(int(n_devices), 1), 0, -1):
+        p = 1
+        for s in submesh_axis_sizes(v, axis_sizes).values():
+            p *= s
+        if p == v:
+            return v
+    return 1
+
+
 @dataclasses.dataclass
 class FidelityReport:
     """Per-(metric, rank) relative errors (paper Table 3 / Fig. 4)."""
     delta: np.ndarray          # (n_metrics, n_ranks)
     comm_lossless: bool        # event-id sequences reproduced exactly
     mean: float                # δ̄, paper eq. 8
+    mesh_checked: bool = False  # a mesh-sharded sweep executed finitely
 
     def heatmap_csv(self) -> str:
         lines = ["metric," + ",".join(f"rank{p}" for p in range(self.delta.shape[1]))]
@@ -112,6 +241,8 @@ class ProxyProgram:
         self._compiled: dict = {}          # (sig, comm, shapes) -> per-rank fn
         self._compiled_batched: dict = {}  # (sig, comm, n, shapes) -> vmapped fn
         self._metrics_cache: dict = {}     # (sig, shapes) -> np.ndarray
+        self._mesh_comms: dict = {}        # placement key -> DeviceComm
+        self._submeshes: dict = {}         # (mesh id, placement key) -> Mesh
         self._sig_by_rank: dict | None = None
         self._shapes_key_cache = None      # filled by _shapes_key()
         self._counters = {"jit_traces": 0, "metric_traces": 0,
@@ -123,7 +254,8 @@ class ProxyProgram:
         """Control-flow signature of ``rank`` (hashable jit/cache key)."""
         if self._sig_by_rank is None:
             groups = getattr(self.module, "SIGNATURE_GROUPS", None) or ()
-            self._sig_by_rank = {r: sig for sig, ranks in groups for r in ranks}
+            # entries are (sig, ranks) or (sig, ranks, device_hint)
+            self._sig_by_rank = {r: g[0] for g in groups for r in g[1]}
         sig = self._sig_by_rank.get(rank)
         if sig is None:
             sig = self.module.program_signature(rank)
@@ -141,8 +273,9 @@ class ProxyProgram:
         """(signature, ranks) pairs covering ``ranks`` (default: all).
 
         Uses the generation-time ``SIGNATURE_GROUPS`` constant when the
-        module has one; falls back to probing ``program_signature`` so
-        pre-metadata modules keep working.
+        module has one (entries may be ``(sig, ranks)`` or
+        ``(sig, ranks, device_hint)``); falls back to probing
+        ``program_signature`` so pre-metadata modules keep working.
         """
         groups = getattr(self.module, "SIGNATURE_GROUPS", None)
         if groups is None:
@@ -152,9 +285,9 @@ class ProxyProgram:
                 by_sig.setdefault(self.module.program_signature(r), []).append(r)
             return list(by_sig.items())
         if ranks is None:
-            return [(sig, list(rs)) for sig, rs in groups]
+            return [(g[0], list(g[1])) for g in groups]
         want = set(ranks)
-        out = [(sig, [r for r in rs if r in want]) for sig, rs in groups]
+        out = [(g[0], [r for r in g[1] if r in want]) for g in groups]
         out = [(sig, rs) for sig, rs in out if rs]
         missing = want - {r for _, rs in out for r in rs}
         if missing:
@@ -220,6 +353,124 @@ class ProxyProgram:
             self._counters["batch_cache_hits"] += 1
         return fn
 
+    # -- mesh-sharded sweep (device-parallel signature groups) -----------------
+
+    def group_device_hints(self) -> dict[tuple, int]:
+        """Per-signature device-count hints from the generated module.
+
+        Modules generated before the hint metadata (2-tuple groups) fall
+        back to the full traced mesh size — the span every collective would
+        need in the worst case."""
+        default = 1
+        for s in self.axis_sizes.values():
+            default *= max(int(s), 1)
+        out: dict[tuple, int] = {}
+        for g in getattr(self.module, "SIGNATURE_GROUPS", None) or ():
+            out[g[0]] = int(g[2]) if len(g) > 2 else default
+        return out
+
+    def mesh_sweep_plan(self, mesh, ranks: Sequence[int] | None = None,
+                        ) -> list[GroupPlacement]:
+        """Deterministic placement of signature groups onto ``mesh``'s
+        devices (see :func:`plan_mesh_sweep`)."""
+        return plan_mesh_sweep(self.signature_groups(ranks),
+                               self.group_device_hints(), self.axis_sizes,
+                               int(np.asarray(mesh.devices).size))
+
+    def _submesh_for(self, mesh, placement: GroupPlacement):
+        devs = list(np.asarray(mesh.devices).flat)
+        # keyed by the actual devices, not id(mesh): two Mesh objects over
+        # the same device set share sub-meshes, and a recycled object id
+        # can never resurrect a stale placement
+        key = (tuple(d.id for d in devs), placement.key())
+        sub = self._submeshes.get(key)
+        if sub is None:
+            sizes = dict(placement.axis_sizes)
+            sub = compat.make_mesh(
+                tuple(sizes.values()), tuple(sizes),
+                devices=[devs[i] for i in placement.device_ids])
+            self._submeshes[key] = sub
+        return sub
+
+    def _mesh_comm(self, placement: GroupPlacement) -> DeviceComm:
+        """One DeviceComm per placement: its ``axis_sizes`` are the sub-mesh
+        geometry, and reusing the instance keeps the identity-keyed compile
+        cache warm across sweeps."""
+        comm = self._mesh_comms.get(placement.key())
+        if comm is None:
+            comm = DeviceComm(dict(placement.axis_sizes))
+            self._mesh_comms[placement.key()] = comm
+        return comm
+
+    def _fn_for_group_mesh(self, sig, rep_rank: int, n: int | None,
+                           placement: GroupPlacement, mesh):
+        """Compiled ``shard_map`` executable for one placed group.
+
+        ``n`` is the stacked rank count (``None`` = unbatched: one rank's
+        state, the sequential-mesh baseline).  Cached per (signature, mesh
+        devices, placement, n, state shapes) — a group moved to a different
+        mesh, device subset, or sub-mesh geometry compiles afresh instead
+        of aliasing.
+        """
+        mesh_ids = tuple(d.id for d in np.asarray(mesh.devices).flat)
+        key = (sig, "mesh", n, mesh_ids, placement.key(), self._shapes_key())
+        fn = self._compiled_batched.get(key)
+        if fn is None:
+            self._counters["batch_cache_misses"] += 1
+            mod = self.module
+            counters = self._counters
+            comm = self._mesh_comm(placement)
+            submesh = self._submesh_for(mesh, placement)
+            spec = jax.tree.map(lambda _: PartitionSpec(),
+                                jax.eval_shape(lambda: init_replay_state(mod)))
+
+            def traced(st):
+                counters["jit_traces"] += 1   # trace-time side effect
+                if n is None:
+                    return mod.run_rank(st, comm, rep_rank)
+                return jax.vmap(lambda s: mod.run_rank(s, comm, rep_rank))(st)
+
+            fn = jax.jit(compat.shard_map(
+                traced, mesh=submesh, in_specs=(spec,), out_specs=spec,
+                check_vma=False))
+            self._compiled_batched[key] = fn
+        else:
+            self._counters["batch_cache_hits"] += 1
+        return fn
+
+    def _group_work_mesh(self, ranks, seed: int, per_rank_seeds: bool,
+                         mesh, batched: bool = True) -> list[tuple]:
+        """``(fn, input_state, group_ranks, stacked)`` units for a mesh sweep.
+
+        ``batched=True`` emits exactly one unit — one ``shard_map``
+        dispatch — per signature group: the group's ranks are stacked on a
+        leading axis and ``vmap``-ed through the real collectives (or, with
+        a shared seed, the byte-identical program runs once and the result
+        is shared).  ``batched=False`` is the sequential mesh baseline: one
+        dispatch per rank on the *same* placement, so results are
+        comparable bit-for-bit."""
+        work = []
+        for pl in self.mesh_sweep_plan(mesh, ranks):
+            grp = list(pl.ranks)
+            if batched and per_rank_seeds:
+                stacked = jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[init_replay_state(self.module, seed + r) for r in grp])
+                work.append((self._fn_for_group_mesh(pl.sig, grp[0], len(grp),
+                                                     pl, mesh),
+                             stacked, grp, True))
+            elif batched:
+                work.append((self._fn_for_group_mesh(pl.sig, grp[0], None,
+                                                     pl, mesh),
+                             init_replay_state(self.module, seed), grp, False))
+            else:
+                fn = self._fn_for_group_mesh(pl.sig, grp[0], None, pl, mesh)
+                for r in grp:
+                    st = init_replay_state(
+                        self.module, seed + r if per_rank_seeds else seed)
+                    work.append((fn, st, [r], False))
+        return work
+
     def run_local(self, ranks: Sequence[int] | None = None, seed: int = 0,
                   comm=None) -> dict:
         """Execute ranks sequentially on this host; returns final state of
@@ -238,7 +489,7 @@ class ProxyProgram:
 
     def run_all(self, ranks: Sequence[int] | None = None, seed: int = 0,
                 comm=None, batched: bool = True,
-                per_rank_seeds: bool = False) -> dict[int, dict]:
+                per_rank_seeds: bool = False, mesh=None) -> dict[int, dict]:
         """Replay every rank; returns ``{rank: final state}``.
 
         ``batched=True`` (default) replays one signature group per compiled
@@ -248,7 +499,12 @@ class ProxyProgram:
           byte-identical execution (same program, same initial state — the
           SPMD redundancy that made the grammars mergeable in the first
           place), so the group's program runs **once** and the result is
-          shared by all its ranks;
+          shared by all its ranks.  Each rank gets its own result *dict*,
+          but the leaf arrays of a group deliberately alias (one buffer, n
+          references): ``jax.Array`` leaves are immutable — rebinding one
+          rank's entry never touches its siblings, and ``np.asarray`` views
+          of them are read-only — so the sharing is observable only as
+          reduced memory, not as cross-rank mutation;
         * with ``per_rank_seeds=True`` each rank gets a distinct initial
           state (``seed + rank``); states are stacked on a leading rank
           axis and the group program is ``vmap``-ed over it — still one
@@ -256,10 +512,22 @@ class ProxyProgram:
 
         ``batched=False`` is the per-rank baseline path (identical results;
         benchmarked against in benchmarks/replay_time.py).
+
+        ``mesh=`` switches to the **mesh-sharded sweep**: signature groups
+        are placed on disjoint device subsets of ``mesh`` (see
+        :meth:`mesh_sweep_plan`), each group executes its real collectives
+        via :class:`DeviceComm` inside one ``shard_map`` dispatch, and all
+        groups are dispatched asynchronously before any result is gathered.
+        ``comm`` is ignored in mesh mode (the backend is derived from the
+        placement); ``batched=False`` gives the sequential mesh baseline
+        (one dispatch per rank on the same placement).
         """
-        comm = comm or LocalSim()
         if ranks is not None:
             self._validate_ranks(ranks)
+        if mesh is not None:
+            return self._run_all_mesh(ranks, seed, batched, per_rank_seeds,
+                                      mesh)
+        comm = comm or LocalSim()
         out = {}
         if not batched:
             st = None if per_rank_seeds else init_replay_state(self.module, seed)
@@ -277,9 +545,30 @@ class ProxyProgram:
                     out[r] = jax.tree.map(lambda a, i=i: a[i], res)
             else:
                 for r in grp:   # identical input + program -> identical output
-                    out[r] = dict(res)      # fresh dict: don't alias ranks
+                    # fresh dict per rank; leaves alias on purpose (immutable)
+                    out[r] = dict(res)
         for v in out.values():
             jax.block_until_ready(v)
+        return out
+
+    def _run_all_mesh(self, ranks, seed: int, batched: bool,
+                      per_rank_seeds: bool, mesh) -> dict[int, dict]:
+        """Mesh-sharded sweep body: dispatch every placed group first (jax
+        dispatch is asynchronous — groups on disjoint device subsets overlap),
+        gather/unstack after, block once at the end."""
+        pending = []
+        for fn, arg, grp, stacked in self._group_work_mesh(
+                ranks, seed, per_rank_seeds, mesh, batched):
+            pending.append((fn(arg), grp, stacked))
+        out: dict[int, dict] = {}
+        for res, grp, stacked in pending:
+            if stacked:
+                for i, r in enumerate(grp):
+                    out[r] = jax.tree.map(lambda a, i=i: a[i], res)
+            else:
+                for r in grp:
+                    out[r] = dict(res)
+        jax.block_until_ready(out)
         return out
 
     def _group_work(self, ranks, seed: int, comm, per_rank_seeds: bool,
@@ -313,17 +602,22 @@ class ProxyProgram:
 
     def time_all(self, ranks: Sequence[int] | None = None, iters: int = 1,
                  seed: int = 0, batched: bool = True,
-                 per_rank_seeds: bool = False) -> float:
+                 per_rank_seeds: bool = False, mesh=None) -> float:
         """Warm wall-clock seconds of one full multi-rank replay sweep.
 
-        Mirrors :meth:`run_all`'s three modes: per-rank baseline
-        (``batched=False``), group-deduplicated (default), and group-vmapped
-        (``per_rank_seeds=True``).
+        Mirrors :meth:`run_all`'s modes: per-rank baseline
+        (``batched=False``), group-deduplicated (default), group-vmapped
+        (``per_rank_seeds=True``), and — with ``mesh=`` — the mesh-sharded
+        sweep (real collectives, one dispatch per placed group; the
+        ``batched=False`` variant times the sequential mesh baseline).
         """
-        comm = LocalSim()
         ranks = list(range(self.merged.n_ranks) if ranks is None else ranks)
         self._validate_ranks(ranks)
-        if batched:
+        comm = LocalSim()
+        if mesh is not None:
+            work = [(fn, arg) for fn, arg, _, _ in self._group_work_mesh(
+                ranks, seed, per_rank_seeds, mesh, batched)]
+        elif batched:
             work = [(fn, arg) for fn, arg, _ in
                     self._group_work(ranks, seed, comm, per_rank_seeds)]
         else:
@@ -377,7 +671,7 @@ class ProxyProgram:
     def fidelity(self, original_rank_traces: Sequence[Sequence[Event]],
                  original_rank_keys: Sequence[Sequence[str]] | None = None,
                  sample_ranks: int | None = None,
-                 batched: bool = True) -> FidelityReport:
+                 batched: bool = True, mesh=None) -> FidelityReport:
         """Compare proxy vs original per rank (paper §3.3.1).
 
         Compute metrics: walker totals of generated code vs the original
@@ -388,6 +682,13 @@ class ProxyProgram:
         exactly (losslessness; keys, not local ids — heterogeneous ranks
         intern in different orders).  ``batched=False`` forces the original
         per-rank/per-trace path (the parity baseline in tests).
+
+        ``mesh=`` additionally executes one mesh-sharded sweep (real
+        collectives via :class:`DeviceComm`, reusing the placement-keyed
+        compile cache) and records whether every pool buffer came back
+        finite in ``report.mesh_checked``.  δ̄ itself is placement-invariant
+        by construction — walker metrics are keyed by (signature, state
+        shapes) only — so mesh and local reports carry bit-identical deltas.
         """
         n_ranks = len(original_rank_traces)
         ranks = list(range(n_ranks))
@@ -410,5 +711,12 @@ class ProxyProgram:
         b = np.stack([self.rank_metrics(r, use_cache=batched) for r in ranks],
                      axis=1)
         delta = proxy_search.rel_error_matrix(a, b)
+        mesh_checked = False
+        if mesh is not None:
+            states = self._run_all_mesh(ranks, 0, True, False, mesh)
+            mesh_checked = all(
+                bool(np.isfinite(np.asarray(leaf, np.float32)).all())
+                for st in states.values() for leaf in jax.tree.leaves(st))
         return FidelityReport(delta=delta, comm_lossless=lossless,
-                              mean=float(delta.mean()))
+                              mean=float(delta.mean()),
+                              mesh_checked=mesh_checked)

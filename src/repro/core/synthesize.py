@@ -99,10 +99,16 @@ def synthesize(fn: Callable | None = None, *args,
                name: str = "proxy",
                rel_tol: float = 0.05,
                threshold: float = 0.5,
-               solver: str = "nnls",
+               solver: str = "auto",
                count_scale: float = 1.0,
                out_dir=None) -> SynthesisResult:
     """Synthesize a proxy-app from a step function or pre-recorded traces.
+
+    ``solver="auto"`` (default) picks the block-combination solver by
+    terminal count: exact NNLS for small traces, the batched-PGD device
+    solver above :data:`repro.core.proxy_search.PGD_TERMINAL_THRESHOLD`
+    distinct compute terminals (``"nnls"``/``"pgd"`` force either); the
+    resolved name lands in ``stats["solver"]``.
 
     ``count_scale`` < 1 shrinks the fitted block counts (and hence replay
     time) proportionally — the proxy then represents a 1/count_scale
@@ -131,6 +137,7 @@ def synthesize(fn: Callable | None = None, *args,
                            else ev.vector) * count_scale
             targets.append(t)
             gids.append(gid)
+    solver = proxy_search.choose_solver(len(targets), solver)
     if solver == "pgd" and targets:
         xs = proxy_search.fit_batch_pgd(np.stack(targets))
         from repro.core.blocks import calibration_matrix
@@ -164,6 +171,7 @@ def synthesize(fn: Callable | None = None, *args,
         "grammar_bytes": grammar_bytes,
         "compression_ratio": trace_bytes / max(grammar_bytes, 1),
         "source_lines": source.count("\n") + 1,
+        "solver": solver,
         "mean_fit_rel_err": float(np.mean(fit_errs)) if fit_errs else 0.0,
         "max_fit_rel_err": float(np.max(fit_errs)) if fit_errs else 0.0,
     }

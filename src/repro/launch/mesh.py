@@ -28,3 +28,18 @@ def make_test_mesh(data: int = 2, model: int = 2):
 
 def make_dp_mesh(n: int):
     return _mk((n,), ("data",))
+
+
+def make_replay_mesh(axis_sizes: dict[str, int], devices=None):
+    """Mesh whose axes mirror a traced program's ``axis_sizes`` — the shape
+    a synthesized proxy's ``DeviceComm`` collectives expect.
+
+    ``devices`` restricts the mesh to an explicit device subset (the mesh
+    sweep scheduler in :mod:`repro.core.replay` builds per-group sub-meshes
+    this way); by default all local devices back the mesh, so the axis
+    sizes must multiply out to ``jax.device_count()``.  Shrink a traced
+    geometry onto fewer devices with
+    :func:`repro.core.replay.submesh_axis_sizes` first.
+    """
+    return make_mesh(tuple(axis_sizes.values()), tuple(axis_sizes),
+                     devices=devices)

@@ -128,7 +128,21 @@ class DeviceComm:
     ``axis_sizes`` must match the mesh the proxy runs under.  The payload
     tensor fed to the collective has exactly the traced shape/dtype; the
     result is folded back (mean over gathered dim / broadcast) so the pool
-    buffer shape is stable.
+    buffer shape is stable — shape *and* dtype of ``st[buf]`` are invariant
+    through ``do`` for every collective kind, which is what keeps the proxy
+    state a fixed pytree under ``fori_loop`` and ``vmap`` alike.
+
+    Batched rank axis: ``do`` is ``vmap``-compatible over a leading rank
+    dimension, mirroring :class:`LocalSim`.  Inside ``shard_map``, the mesh
+    replay engine stacks a whole signature group's states and ``vmap``-s
+    ``run_rank`` over them; JAX's collective batching rules fold the rank
+    axis through the *real* collectives (one batched all-reduce instead of
+    n sequential ones), so an entire group replays in a single dispatch.
+    Every branch below — including the non-divisible ``reduce_scatter`` /
+    ``all_to_all`` fallbacks and all :func:`_detail_to_perm` decode paths —
+    is audited for this (see :func:`repro.compat.collective_batching_audit`
+    and tests/test_replay_mesh.py: batched-vs-sequential replay is
+    bit-identical for every kind).
     """
 
     def __init__(self, axis_sizes: dict[str, int]):

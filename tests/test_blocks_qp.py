@@ -1,15 +1,15 @@
-"""Proxy-block calibration + QP search tests (paper §2.4)."""
+"""Proxy-block calibration + QP search unit tests (paper §2.4).
+
+Hypothesis-based property tests live in test_blocks_qp_prop.py so this
+module always runs, dependency or not."""
 import jax
 import numpy as np
 import pytest
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis (see requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
 
 from repro.core import blocks as B
 from repro.core.proxy_search import (
-    fit_batch_pgd, fit_combination, rel_error, substituted_matrix,
+    PGD_TERMINAL_THRESHOLD, choose_solver, fit_batch_pgd, fit_combination,
+    rel_error, substituted_matrix,
 )
 from repro.core.tracer import compute_cost
 
@@ -110,15 +110,11 @@ def test_pgd_matches_nnls():
         assert np.all(err[t > 0] < 0.25), (x, err)
 
 
-@given(st.lists(st.integers(0, 1000), min_size=9, max_size=9),
-       st.integers(0, 500), st.integers(0, 500))
-@settings(max_examples=30, deadline=None)
-def test_fit_property_block_mixes(body, x10, slack):
-    x = np.array(body + [x10, sum(body) + slack], dtype=float)
-    b = B.calibration_matrix()
-    t = b @ x
-    if not np.any(t > 0):
-        return
-    fit = fit_combination(t)
-    err = rel_error(t, fit.predicted)
-    assert np.all(err[t > 0] < 0.05)
+def test_solver_auto_crossover():
+    """Pin the pgd-by-default crossover: nnls at or below the terminal-count
+    threshold, pgd strictly above, explicit choices untouched."""
+    assert choose_solver(PGD_TERMINAL_THRESHOLD) == "nnls"
+    assert choose_solver(PGD_TERMINAL_THRESHOLD + 1) == "pgd"
+    assert choose_solver(0) == "nnls"
+    assert choose_solver(10_000, solver="nnls") == "nnls"
+    assert choose_solver(1, solver="pgd") == "pgd"

@@ -1,0 +1,28 @@
+"""Hypothesis property tests for the QP block-combination search.
+
+Split from test_blocks_qp.py so the plain unit tests there always run;
+this module (alone) skips when hypothesis is absent."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocks as B
+from repro.core.proxy_search import fit_combination, rel_error
+
+
+@given(st.lists(st.integers(0, 1000), min_size=9, max_size=9),
+       st.integers(0, 500), st.integers(0, 500))
+@settings(max_examples=30, deadline=None)
+def test_fit_property_block_mixes(body, x10, slack):
+    x = np.array(body + [x10, sum(body) + slack], dtype=float)
+    b = B.calibration_matrix()
+    t = b @ x
+    if not np.any(t > 0):
+        return
+    fit = fit_combination(t)
+    err = rel_error(t, fit.predicted)
+    assert np.all(err[t > 0] < 0.05)

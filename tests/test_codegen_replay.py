@@ -64,6 +64,28 @@ def test_rank_metrics_match_combo_prediction():
     assert np.all(np.abs(got - want) / np.maximum(want, 1.0) < 0.05)
 
 
+def test_solver_auto_crossover_in_synthesize():
+    """solver="auto" (the default) resolves by distinct-compute-terminal
+    count: exact NNLS below the threshold, batched PGD above it."""
+    from repro.core.proxy_search import PGD_TERMINAL_THRESHOLD
+
+    small = synthesize(rank_traces=_mk_traces(), axis_sizes={"x": 4})
+    assert small.stats["solver"] == "nnls"
+
+    # one rank, > threshold mutually-distinct compute events (1.5x apart
+    # beats the 5% clustering tolerance) → every event is its own terminal
+    base = np.array([2.1e6, 3.3e4, 1.1e6, 8.2e2, 0., 0.])
+    big_trace = [ComputeEvent(tuple(base * 1.5 ** i))
+                 for i in range(PGD_TERMINAL_THRESHOLD + 1)]
+    big = synthesize(rank_traces=[big_trace], axis_sizes={})
+    assert big.stats["n_unique_terminals"] > PGD_TERMINAL_THRESHOLD
+    assert big.stats["solver"] == "pgd"
+    # explicit choice still wins
+    forced = synthesize(rank_traces=[big_trace[:3]], axis_sizes={},
+                        solver="pgd")
+    assert forced.stats["solver"] == "pgd"
+
+
 def test_count_scale():
     res = synthesize(rank_traces=_mk_traces(), axis_sizes={"x": 4},
                      count_scale=0.25)

@@ -1,0 +1,23 @@
+"""Hypothesis property tests for the event model (paper §2.2).
+
+Split from test_events_grammar.py so the plain unit tests there always
+run; this module (alone) skips when hypothesis is absent."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.events import decode_relative_perm, encode_relative_perm
+
+
+@given(st.integers(2, 16), st.data())
+@settings(max_examples=200, deadline=None)
+def test_relative_perm_roundtrip_property(size, data):
+    srcs = data.draw(st.lists(st.integers(0, size - 1), unique=True,
+                              min_size=0, max_size=size))
+    dsts = data.draw(st.permutations(srcs))
+    perm = list(zip(srcs, dsts))
+    enc = encode_relative_perm(perm, size)
+    assert sorted(decode_relative_perm(enc, size)) == sorted(perm)

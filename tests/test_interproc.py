@@ -1,13 +1,8 @@
-"""Inter-process compression tests (paper §2.6, Algorithm 1)."""
-import numpy as np
-import pytest
+"""Inter-process compression unit tests (paper §2.6, Algorithm 1).
 
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis (see requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
-
-from repro.core.events import CommEvent, ComputeEvent
+Hypothesis-based property tests live in test_interproc_prop.py so this
+module always runs, dependency or not."""
+from repro.core.events import ComputeEvent
 from repro.core.grammar import TerminalTable, from_sequitur
 from repro.core.interproc import (
     difference_degree, levenshtein, merge_grammars, merge_main_rules,
@@ -86,17 +81,3 @@ def test_high_difference_no_merge():
              tuple(("t", i + 100, 1) for i in range(10))]
     merged, ranks = merge_main_rules(mains, threshold=0.3)
     assert len(merged) == 2
-
-
-@given(st.lists(st.lists(st.integers(0, 5), min_size=1, max_size=30),
-                min_size=1, max_size=8))
-@settings(max_examples=60, deadline=None)
-def test_merge_lossless_property(rank_seqs):
-    """Losslessness for arbitrary per-rank sequences at any threshold."""
-    gs = [_grammar(seq) for seq in rank_seqs]
-    for threshold in (0.0, 0.5, 1.0):
-        merged = merge_grammars(gs, threshold=threshold)
-        for r, g in enumerate(gs):
-            got = merged.expand_rank(r)
-            assert [merged.table[i].key() for i in got] == \
-                [g.table[i].key() for i in g.expand_ids()]

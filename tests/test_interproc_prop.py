@@ -1,0 +1,38 @@
+"""Hypothesis property tests for inter-process merging (paper §2.6).
+
+Split from test_interproc.py so the plain unit tests there always run;
+this module (alone) skips when hypothesis is absent."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.events import ComputeEvent
+from repro.core.grammar import TerminalTable, from_sequitur
+from repro.core.interproc import merge_grammars
+from repro.core.sequitur import Sequitur
+
+
+def _grammar(ids):
+    table = TerminalTable()
+    s = Sequitur()
+    for i in ids:
+        ev = ComputeEvent((float(i + 1), 0, 0, 0, 0, 0), cluster_id=i)
+        s.push(table.intern(ev))
+    return from_sequitur(s, table)
+
+
+@given(st.lists(st.lists(st.integers(0, 5), min_size=1, max_size=30),
+                min_size=1, max_size=8))
+@settings(max_examples=60, deadline=None)
+def test_merge_lossless_property(rank_seqs):
+    """Losslessness for arbitrary per-rank sequences at any threshold."""
+    gs = [_grammar(seq) for seq in rank_seqs]
+    for threshold in (0.0, 0.5, 1.0):
+        merged = merge_grammars(gs, threshold=threshold)
+        for r, g in enumerate(gs):
+            got = merged.expand_rank(r)
+            assert [merged.table[i].key() for i in got] == \
+                [g.table[i].key() for i in g.expand_ids()]

@@ -58,15 +58,18 @@ def test_signature_groups_metadata():
     res = _synth()
     mod = res.proxy.module
     groups = mod.SIGNATURE_GROUPS
-    seen = [r for _, ranks in groups for r in ranks]
+    seen = [r for _, ranks, _ in groups for r in ranks]
     assert sorted(seen) == list(range(8))            # exact cover
-    for sig, ranks in groups:
+    for sig, ranks, hint in groups:
         for r in ranks:
             assert mod.program_signature(r) == sig
+        # every group's program touches axis "x" (size 8) → hint 8
+        assert hint == 8
     # rank 0 (extra event) is alone; everyone else shares one group
-    sizes = sorted(len(rs) for _, rs in groups)
+    sizes = sorted(len(rs) for _, rs, _ in groups)
     assert sizes == [1, 7]
     assert res.stats["n_signature_groups"] == 2
+    assert res.proxy.group_device_hints() == {sig: 8 for sig, _, _ in groups}
 
 
 def test_run_all_rejects_out_of_range_ranks():
@@ -147,6 +150,24 @@ def test_event_counts_per_rank_vs_batched():
         _fresh_proxy(res).run_all(ranks=grp, per_rank_seeds=True, comm=c_group)
         assert c_single.trace_events > 0
         assert c_group.trace_events == c_single.trace_events
+
+
+def test_run_all_group_results_isolated_across_ranks():
+    """Shared-seed groups share result *leaves* (immutable, documented) but
+    never result *dicts*: rebinding one rank's buffer — the only mutation
+    JAX permits — must leave its group siblings untouched."""
+    res = _synth()
+    out = res.proxy.run_all()
+    grp = next(rs for _, rs in res.proxy.signature_groups() if len(rs) > 1)
+    r0, r1 = grp[0], grp[1]
+    key = sorted(out[r1])[0]
+    before = np.asarray(out[r1][key], np.float32).copy()
+    out[r0][key] = jnp.zeros_like(out[r0][key]) - 123.0
+    np.testing.assert_array_equal(np.asarray(out[r1][key], np.float32), before)
+    # leaf aliasing is safe: numpy views of jax buffers are read-only, so
+    # in-place mutation cannot corrupt a sibling behind the dict's back
+    view = np.asarray(out[r1][key])
+    assert not view.flags.writeable
 
 
 def test_localsim_accepts_batched_rank_axis():

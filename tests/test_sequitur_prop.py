@@ -1,0 +1,51 @@
+"""Hypothesis property tests for the space-optimized Sequitur (§2.5.2).
+
+Split from test_sequitur.py so the plain unit tests there always run;
+this module (alone) skips when hypothesis is absent."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sequitur import Sequitur, compress
+
+
+def expand_equals(seq):
+    s = compress(seq)
+    assert s.expand() == list(seq)
+    return s
+
+
+@given(st.lists(st.integers(0, 3), max_size=120))
+@settings(max_examples=300, deadline=None)
+def test_lossless_property(seq):
+    """Core invariant: grammar expansion reproduces the input exactly."""
+    expand_equals(seq)
+
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 9)), max_size=40))
+@settings(max_examples=200, deadline=None)
+def test_lossless_runs_property(runs):
+    """push_run with arbitrary (symbol, count) sequences stays lossless."""
+    s = Sequitur()
+    expect = []
+    for sym, cnt in runs:
+        s.push_run(sym, cnt)
+        expect.extend([sym] * cnt)
+    assert s.expand() == expect
+
+
+@given(st.integers(1, 6), st.integers(1, 30), st.integers(0, 5))
+@settings(max_examples=100, deadline=None)
+def test_loop_grammar_size_constant(body_len, reps, tail):
+    """A repeated loop body compresses to size independent of rep count."""
+    rng = np.random.RandomState(body_len * 977 + tail)
+    body = list(rng.randint(0, 50, body_len))
+    seq = body * reps + list(rng.randint(0, 50, tail))
+    s = expand_equals(seq)
+    s_many = expand_equals(body * (reps + 64) + list(rng.randint(0, 50, tail)))
+    # growing the loop count must not grow the grammar by more than O(1)
+    assert s_many.size() <= s.size() + 4
