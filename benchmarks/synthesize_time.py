@@ -1,0 +1,162 @@
+"""Synthesis front-end wall-clock: per-event baseline vs columnar trace IR.
+
+Two tiers:
+
+1. **frontend_64ranks** — a 64-rank synthetic trace (~51k events, 8
+   near-identical compute variants, per-rank heterogeneity every 16th
+   rank) compressed by the per-event reference
+   (:mod:`repro.core.frontend_reference`) and by the columnar path
+   (:class:`repro.core.trace_ir.TraceStore` + ``compress_store``).  The
+   outputs are asserted bit-identical; ``frontend_speedup`` is the
+   acceptance number (target ≥ 5× including event-list ingestion;
+   ``compress_speedup`` excludes ingestion — the real pipeline traces
+   straight into the store and never pays it).
+
+2. **corpus_zoo** — ``synthesize_corpus`` over three model-zoo scenarios
+   vs the per-scenario ``synthesize`` loop (same pgd solver): corpus makes
+   **one** batched-PGD dispatch against one per scenario, shares one
+   terminal table, and per-scenario δ̄ must be unchanged
+   (``max_delta_diff`` = 0.0).
+
+``python -m benchmarks.synthesize_time --smoke`` runs a reduced corpus
+(2 scenarios, 4 ranks) with hard asserts — the CI corpus smoke job.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+_CORPUS_SCENARIOS = ("transformer-dp", "ssm-decode", "moe-ep")
+
+
+def _synthetic_traces(n_ranks: int = 64, reps: int = 200):
+    from repro.core.events import CommEvent, ComputeEvent
+
+    comm = CommEvent("psum", (16,), "float32", ("x",))
+    perm = CommEvent("ppermute", (4, 4), "bfloat16", ("x",), ("shift", 1))
+    base = np.array([2.1e7, 3.3e5, 1.1e7, 8.2e3, 0., 0.])
+    comps = [ComputeEvent(tuple(base * (1 + 0.004 * i))) for i in range(8)]
+    traces = []
+    for r in range(n_ranks):
+        tr = []
+        for i in range(reps):
+            tr += [comps[i % 8], comm, comps[(i + 3) % 8], perm]
+        if r % 16 == 0:
+            tr = tr + [comm]
+        traces.append(tr)
+    return traces
+
+
+def _frontend_row(n_ranks: int = 64) -> dict:
+    from repro.core import frontend_reference as ref
+    from repro.core.trace_ir import TraceStore, compress_store
+
+    traces = _synthetic_traces(n_ranks)
+    n_events = sum(len(t) for t in traces)
+
+    t0 = time.perf_counter()
+    g2, m2, ids2, _ = ref.compress_rank_traces_reference(traces)
+    t_ref = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    store = TraceStore.from_rank_traces(traces, {"x": n_ranks})
+    t_ingest = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    g1, m1, ids1, _ = compress_store(store)
+    t_col = time.perf_counter() - t0
+
+    assert ids1 == ids2, "columnar rank ids diverge from reference"
+    assert m1.rules == m2.rules and m1.mains == m2.mains
+    assert [e.key() for e in m1.table.events] == \
+        [e.key() for e in m2.table.events]
+    return {
+        "program": f"frontend_{n_ranks}ranks",
+        "n_events": n_events,
+        "reference_ms": round(t_ref * 1e3, 1),
+        "columnar_ms": round(t_col * 1e3, 1),
+        "ingest_ms": round(t_ingest * 1e3, 1),
+        "frontend_speedup": round(t_ref / (t_col + t_ingest), 2),
+        "compress_speedup": round(t_ref / t_col, 2),
+        "bit_identical": True,
+    }
+
+
+def _corpus_rows(scenarios=_CORPUS_SCENARIOS, n_ranks=None, steps=None,
+                 ) -> list[dict]:
+    from repro.configs.registry import build_scenario
+    from repro.core.synthesize import synthesize, synthesize_corpus
+
+    kw = {}
+    if n_ranks:
+        kw["n_ranks"] = n_ranks
+    if steps:
+        kw["steps"] = steps
+    stores = {n: build_scenario(n, **kw) for n in scenarios}
+
+    t0 = time.perf_counter()
+    corp = synthesize_corpus([(n, st) for n, st in stores.items()])
+    t_corpus = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    loop = {n: synthesize(store=st, name=n.replace("-", "_"), solver="pgd")
+            for n, st in stores.items()}
+    t_loop = time.perf_counter() - t0
+
+    delta_diffs = []
+    for n in scenarios:
+        f_loop = loop[n].fidelity(sample_ranks=None)
+        f_corp = corp.results[n].fidelity(sample_ranks=None)
+        assert f_loop.comm_lossless and f_corp.comm_lossless, n
+        delta_diffs.append(abs(f_loop.mean - f_corp.mean))
+    # per-scenario fidelity must be unchanged by corpus-level synthesis —
+    # hard assert in the full run too, not just --smoke
+    assert float(np.max(delta_diffs)) == 0.0, delta_diffs
+    assert corp.stats["n_solver_calls"] == 1
+    rep = corp.report(sample_ranks=None)
+    return [{
+        "program": f"corpus_zoo_{len(scenarios)}scenarios",
+        "corpus_ms": round(t_corpus * 1e3, 1),
+        "loop_ms": round(t_loop * 1e3, 1),
+        "corpus_speedup": round(t_loop / max(t_corpus, 1e-12), 2),
+        "solver_dispatches_corpus": corp.stats["n_solver_calls"],
+        "solver_dispatches_loop": len(scenarios),
+        "n_corpus_terminals": corp.stats["n_corpus_terminals"],
+        "n_shared_terminals": corp.stats["n_shared_terminals"],
+        "corpus_compression_ratio":
+            round(corp.stats["corpus_compression_ratio"], 2),
+        "mean_delta": round(rep["mean_delta"], 4),
+        "max_delta_diff_vs_loop": float(np.max(delta_diffs)),
+        "all_comm_lossless": rep["all_comm_lossless"],
+    }]
+
+
+def run() -> list[dict]:
+    return [_frontend_row()] + _corpus_rows()
+
+
+def smoke() -> None:
+    """CI corpus smoke: 2 small scenarios, hard asserts."""
+    rows = _corpus_rows(("transformer-dp", "ssm-decode"), n_ranks=4, steps=2)
+    row = rows[0]
+    print(", ".join(f"{k}={v}" for k, v in row.items()))
+    assert row["solver_dispatches_corpus"] == 1, row
+    assert row["max_delta_diff_vs_loop"] == 0.0, row
+    assert row["all_comm_lossless"], row
+    front = _frontend_row(n_ranks=16)
+    print(", ".join(f"{k}={v}" for k, v in front.items()))
+    assert front["bit_identical"]
+    print("corpus smoke OK")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced corpus path with hard asserts (CI)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for r in run():
+            print(", ".join(f"{k}={v}" for k, v in r.items()))

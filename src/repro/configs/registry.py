@@ -1,12 +1,23 @@
-"""Architecture registry + dry-run input specs.
+"""Architecture registry + dry-run input specs + the scenario zoo.
 
 ``get(arch_id)`` resolves the assigned ids; ``input_specs(cfg, shape, mesh)``
 returns (args, in_shardings) of ShapeDtypeStructs for the step function of
 the shape's kind — the no-allocation stand-ins the multi-pod dry-run lowers
 against.
+
+``SCENARIOS``/:func:`build_scenario` register the **model-zoo workloads**
+corpus-level synthesis runs over (``repro.core.synthesize.
+synthesize_corpus``): one traced scenario per model family
+(transformer / flash / ssm / moe / encdec), each combining real compute
+costs — the jaxpr walker over the family's smoke-config step functions,
+no allocation, no devices — with the family's canonical parallelism
+schedule recorded through :class:`repro.core.tracer.TraceSession` (the
+PMPI-interposition analog).  Builders return columnar
+:class:`~repro.core.trace_ir.TraceStore` traces.
 """
 from __future__ import annotations
 
+import dataclasses
 import importlib
 
 import jax
@@ -124,3 +135,180 @@ def input_specs(arch_id: str, shape_name: str, mesh, *, with_opt: bool = True):
     cache = cache_specs(cfg, shape, mesh, rules)
     pos = jax.ShapeDtypeStruct((), jnp.int32)
     return cfg, (params, cache, batch, pos)
+
+
+# ---------------------------------------------------------------------------
+# scenario zoo (corpus-level synthesis targets)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One model-zoo workload: which architecture's step functions provide
+    the (real, jaxpr-walked) compute costs, and which parallelism schedule
+    shapes the recorded communication pattern."""
+    name: str
+    arch_id: str
+    family: str          # transformer | flash | ssm | moe | encdec
+    parallelism: str
+    n_ranks: int         # default trace width
+    steps: int           # default steps / microbatches / decode tokens
+
+
+SCENARIOS: dict[str, ScenarioSpec] = {
+    "transformer-dp": ScenarioSpec(
+        "transformer-dp", "qwen3-8b", "transformer", "data_parallel", 8, 4),
+    "flash-ring": ScenarioSpec(
+        "flash-ring", "gemma3-4b", "flash", "ring_attention", 8, 2),
+    "ssm-decode": ScenarioSpec(
+        "ssm-decode", "mamba2-2.7b", "ssm", "tp_decode", 8, 6),
+    "moe-ep": ScenarioSpec(
+        "moe-ep", "deepseek-moe-16b", "moe", "expert_parallel", 8, 4),
+    "encdec-pipeline": ScenarioSpec(
+        "encdec-pipeline", "whisper-large-v3", "encdec", "pipeline", 8, 4),
+}
+
+SCENARIO_IDS = tuple(SCENARIOS)
+
+
+def _batch_sds(cfg: ArchConfig, b: int, s: int, kind: str) -> dict:
+    """Unsharded ShapeDtypeStruct batch (tracing needs shapes only).
+    Modalities follow :func:`batch_specs`' rule: decode steps never carry
+    them (prefill populated the cache)."""
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if kind == "loss":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.n_vision_tokens and kind != "decode":
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_vision_tokens, cfg.d_model), dt)
+    if cfg.n_audio_frames and kind != "decode":
+        out["audio_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_audio_frames, cfg.d_model), dt)
+    return out
+
+
+def _model_costs(cfg: ArchConfig, kinds=("train", "prefill", "decode"),
+                 b: int = 2, s: int = 8) -> dict[str, tuple]:
+    """Real 6-metric costs of the family's step functions: train
+    (fwd+bwd), prefill, and one decode step — jaxpr-walked, no devices."""
+    from repro.core.tracer import compute_cost
+    from repro.models.model import abstract_cache, build_forward, init_abstract
+
+    params = init_abstract(cfg)
+    out: dict[str, tuple] = {}
+    if "train" in kinds:
+        loss = build_forward(cfg, "loss")
+        out["train"] = tuple(compute_cost(
+            lambda p, bt: jax.value_and_grad(lambda q: loss(q, bt, cfg))(p),
+            params, _batch_sds(cfg, b, s, "loss")))
+    if "prefill" in kinds:
+        prefill = build_forward(cfg, "prefill")
+        out["prefill"] = tuple(compute_cost(
+            lambda p, bt: prefill(p, bt, cfg), params,
+            _batch_sds(cfg, b, s, "prefill")))
+    if "decode" in kinds:
+        decode = build_forward(cfg, "decode")
+        cache = abstract_cache(cfg, b, 4 * s)
+        dbatch = dict(_batch_sds(cfg, b, 1, "decode"))
+        out["decode"] = tuple(compute_cost(
+            lambda p, c, bt, pos: decode(p, c, bt, pos, cfg),
+            params, cache, dbatch, jax.ShapeDtypeStruct((), jnp.int32)))
+    return out
+
+
+def build_scenario(name: str, n_ranks: int | None = None,
+                   steps: int | None = None):
+    """Trace one zoo scenario into a columnar
+    :class:`~repro.core.trace_ir.TraceStore`."""
+    from repro.core.events import CommEvent, ComputeEvent
+    from repro.core.tracer import TraceSession
+
+    spec = SCENARIOS[name]
+    n = spec.n_ranks if n_ranks is None else n_ranks
+    steps = spec.steps if steps is None else steps
+    cfg = smoke(get(spec.arch_id))
+    kinds = {"transformer": ("train",), "flash": ("prefill",),
+             "ssm": ("decode",), "moe": ("train", "prefill"),
+             "encdec": ("prefill", "decode")}[spec.family]
+    costs = _model_costs(cfg, kinds)
+    d = cfg.d_model
+
+    if spec.family == "transformer":
+        # data-parallel training: step compute + bucketed gradient psums
+        g1 = CommEvent("psum", (d, cfg.d_ff), "float32", ("dp",))
+        g2 = CommEvent("psum", (cfg.padded_vocab, d), "float32", ("dp",))
+        with TraceSession(n, {"dp": n}) as sess:
+            for _ in range(steps):
+                sess.emit(None, ComputeEvent(costs["train"]))
+                sess.emit(None, g1)
+                sess.emit(None, g2)
+        return sess.to_store()
+
+    if spec.family == "flash":
+        # ring-attention prefill: per hop, one flash chunk + KV-block shift
+        from repro.models.flash import flash_attention
+        from repro.core.tracer import compute_cost
+        b, s, h, g, hd = 2, 16, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = jax.ShapeDtypeStruct((b, s, h, hd), jnp.float32)
+        kv = jax.ShapeDtypeStruct((b, s, g, hd), jnp.float32)
+        chunk = tuple(compute_cost(
+            lambda q, k, v: flash_attention(q, k, v, causal=False,
+                                            q_chunk=8, kv_chunk=8),
+            q, kv, kv))
+        shift = CommEvent("ppermute", (b, s, g, hd), "float32", ("ring",),
+                          ("shift", 1))
+        with TraceSession(n, {"ring": n}) as sess:
+            for _ in range(steps):
+                for _hop in range(n - 1):
+                    sess.emit(None, ComputeEvent(chunk))
+                    sess.emit(None, shift)
+                sess.emit(None, ComputeEvent(costs["prefill"]))
+                sess.emit(None, CommEvent("all_gather", (b, s // 2 or 1, d),
+                                          "float32", ("ring",), (0,)))
+        return sess.to_store()
+
+    if spec.family == "ssm":
+        # tensor-parallel decode: one SSM decode step + logits psum per token
+        logits = CommEvent("psum", (2, cfg.padded_vocab), "float32", ("mp",))
+        with TraceSession(n, {"mp": n}) as sess:
+            for _ in range(steps):
+                sess.emit(None, ComputeEvent(costs["decode"]))
+                sess.emit(None, logits)
+        return sess.to_store()
+
+    if spec.family == "moe":
+        # expert-parallel training: token dispatch/combine all_to_alls
+        # around the expert compute, then the gradient psum
+        tok = (2 * 8 // n or 1, d)
+        disp = CommEvent("all_to_all", tok, "float32", ("ep",), (0, 0))
+        grads = CommEvent("psum", (d, cfg.d_ff_expert or cfg.d_ff),
+                          "float32", ("ep",))
+        with TraceSession(n, {"ep": n}) as sess:
+            for _ in range(steps):
+                sess.emit(None, ComputeEvent(costs["prefill"]))
+                sess.emit(None, disp)
+                sess.emit(None, ComputeEvent(costs["train"]))
+                sess.emit(None, disp)
+                sess.emit(None, grads)
+        return sess.to_store()
+
+    if spec.family == "encdec":
+        # two-stage pipeline: encoder ranks prefill and ship activations to
+        # their decoder peer; decoder ranks run decode steps (heterogeneous
+        # per-rank mains — the Algorithm 1 clustering case)
+        half = max(n // 2, 1)
+        act = CommEvent("ppermute", (2, 8, d), "float32", ("stage",),
+                        ("shift", half))
+        with TraceSession(n, {"stage": n}) as sess:
+            for _ in range(steps):
+                for r in range(half):
+                    peer = r + half
+                    sess.emit([r], ComputeEvent(costs["prefill"]))
+                    if peer < n:
+                        sess.emit([r, peer], act)
+                        sess.emit([peer], ComputeEvent(costs["decode"]))
+            sess.emit(None, CommEvent("psum", (d,), "float32", ("stage",)))
+        return sess.to_store()
+
+    raise KeyError(f"unknown scenario family {spec.family!r}")

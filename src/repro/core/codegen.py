@@ -43,12 +43,18 @@ def _fmt_rankset(rs: frozenset, n_ranks: int) -> str:
 def generate_source(merged: MergedProgram,
                     combos: Mapping[int, tuple],
                     name: str = "proxy",
-                    axis_sizes: Mapping[str, int] | None = None) -> str:
+                    axis_sizes: Mapping[str, int] | None = None,
+                    count_scale: float = 1.0) -> str:
     """Emit the proxy-app module source.
 
     ``combos[gid]`` is ``(x, unroll)`` — the 11-int loop-turn vector and the
     block-instances-per-turn factor — for the compute terminal with global
     id ``gid`` (one per compute-event cluster, paper §2.4).
+
+    ``count_scale`` is the time-dilation factor the block counts were
+    fitted with; the per-group device hints in ``SIGNATURE_GROUPS`` scale
+    with it (see :func:`group_device_hint`), so a 1/20-dilated proxy does
+    not claim the full traced collective span per group.
     """
     axis_sizes = dict(axis_sizes or {})
     L: list[str] = []
@@ -187,7 +193,7 @@ def generate_source(merged: MergedProgram,
     w("#: exactly one group.")
     w("SIGNATURE_GROUPS = (")
     for sig, ranks in sig_groups:
-        hint = group_device_hint(sig, run_axes, axis_sizes)
+        hint = group_device_hint(sig, run_axes, axis_sizes, count_scale)
         w(f"    ({sig!r}, {_fmt_ranktuple(ranks)}, {hint}),")
     w(")")
     w("")
@@ -256,11 +262,18 @@ def _syms_comm_axes(syms: Sequence[tuple], rules: Mapping[int, list],
 
 
 def group_device_hint(sig: tuple, cluster_run_axes: Sequence[Sequence[frozenset]],
-                      axis_sizes: Mapping[str, int]) -> int:
+                      axis_sizes: Mapping[str, int],
+                      count_scale: float = 1.0) -> int:
     """Devices that fully reproduce the collective span of a signature group:
     the product of the traced sizes of every mesh axis the group's comm
     terminals touch (1 for comm-free groups, or when an axis size is
-    unknown)."""
+    unknown).
+
+    ``count_scale`` < 1 scales the hint down proportionally (floor 1): a
+    time-dilated proxy replays 1/count_scale of the traced work, so tiny
+    groups should share sub-meshes instead of idling devices sized for the
+    full span (the sweep scheduler packs unit-hint groups together — see
+    :func:`repro.core.replay.plan_mesh_sweep`)."""
     axes: set[str] = set()
     for ci, run_ids in sig:
         for i in run_ids:
@@ -268,7 +281,10 @@ def group_device_hint(sig: tuple, cluster_run_axes: Sequence[Sequence[frozenset]
     hint = 1
     for a in sorted(axes):
         hint *= max(int(axis_sizes.get(a, 1)), 1)
-    return max(hint, 1)
+    hint = max(hint, 1)
+    if count_scale < 1.0:
+        hint = max(1, int(round(hint * count_scale)))
+    return hint
 
 
 def compute_signature_groups(cluster_ranks: Sequence[frozenset],

@@ -41,8 +41,9 @@ _DTYPE_BYTES = {
 
 
 def dtype_bytes(dtype: Any) -> int:
-    return _DTYPE_BYTES.get(str(np.dtype(dtype).name) if not isinstance(dtype, str) else dtype,
-                            _DTYPE_BYTES.get(str(dtype), 4))
+    """Payload bytes per element; unknown dtypes default to 4."""
+    name = dtype if isinstance(dtype, str) else np.dtype(dtype).name
+    return _DTYPE_BYTES.get(name, 4)
 
 
 # ---------------------------------------------------------------------------
@@ -159,50 +160,62 @@ def is_compute(ev: Event) -> bool:
 # ---------------------------------------------------------------------------
 
 
-def _quantize(vec: np.ndarray, rel_tol: float) -> tuple[int, ...]:
-    """Log-space bucketing: two metric vectors land in the same bucket when
-    every metric agrees within a multiplicative factor of ~(1 + rel_tol)."""
-    width = math.log1p(rel_tol)
-    out = []
-    for v in vec:
-        if v <= 0:
-            out.append(-1)
-        else:
-            out.append(int(math.floor(math.log(v + 1.0) / width)))
-    return tuple(out)
+def cluster_vectors(metrics: np.ndarray, rel_tol: float = 0.05,
+                    ) -> tuple[np.ndarray, dict[int, np.ndarray]]:
+    """Columnar clustering of 6-metric vectors: the vectorized hot path.
 
+    ``metrics`` is ``(n_events, N_METRICS)`` float64.  Two passes, both
+    deterministic in stream order:
 
-def cluster_compute_events(
-    events: Iterable[ComputeEvent], rel_tol: float = 0.05
-) -> tuple[list[ComputeEvent], dict[int, np.ndarray]]:
-    """Assign cluster ids; each cluster's representative vector is the mean.
+    1. log-space bucketing — each element quantizes to
+       ``floor(log(v + 1) / log1p(rel_tol))`` (``-1`` for non-positive
+       metrics), buckets are numbered by first appearance, and per-bucket
+       sums accumulate in stream order (``np.add.at`` is an unbuffered
+       in-order accumulation, so the float64 addition order matches the
+       per-event loop it replaced bit for bit);
+    2. a greedy merge of buckets whose mean vectors agree within
+       ``rel_tol`` on every metric, in bucket-id order — so near-identical
+       events straddling a bucket boundary still unify (the paper's
+       "threshold to cluster similar computation events").
 
-    Two passes: log-space bucketing (O(n)), then a greedy merge of buckets
-    whose representatives agree within ``rel_tol`` on every metric — so
-    near-identical events straddling a bucket boundary still unify (the
-    paper's "threshold to cluster similar computation events").
+    Returns ``(cluster_ids, reps)``: one cluster id per input row and the
+    weighted-mean representative vector per cluster.
     """
-    buckets: dict[tuple[int, ...], int] = {}
-    sums: dict[int, np.ndarray] = {}
-    counts: dict[int, int] = {}
-    assigned: list[tuple[ComputeEvent, int]] = []
-    for ev in events:
-        q = _quantize(ev.vector, rel_tol)
-        if q not in buckets:
-            buckets[q] = len(buckets)
-        bid = buckets[q]
-        sums[bid] = sums.get(bid, 0) + ev.vector
-        counts[bid] = counts.get(bid, 0) + 1
-        assigned.append((ev, bid))
+    metrics = np.asarray(metrics, dtype=np.float64)
+    if metrics.ndim != 2 or metrics.shape[1] != N_METRICS:
+        raise ValueError(f"expected (n, {N_METRICS}) metrics array")
+    n = metrics.shape[0]
+    if n == 0:
+        return np.zeros(0, dtype=np.int64), {}
+
+    width = math.log1p(rel_tol)
+    q = np.full(metrics.shape, -1, dtype=np.int64)
+    pos = metrics > 0
+    # np.log is assumed to agree with the scalar libm log the per-event
+    # original used — true on every platform we run, and pinned per
+    # platform by the frontend_reference parity tests (a 1-ULP divergence
+    # at a bucket boundary would fail them loudly, not silently)
+    q[pos] = np.floor(np.log(metrics[pos] + 1.0) / width).astype(np.int64)
+
+    uq, first, inv = np.unique(q, axis=0, return_index=True,
+                               return_inverse=True)
+    inv = inv.reshape(-1)   # some numpy versions return (n, 1) for axis=0
+    order = np.argsort(first, kind="stable")   # buckets by first appearance
+    bucket_of = np.empty(len(uq), dtype=np.int64)
+    bucket_of[order] = np.arange(len(uq))
+    bucket_ids = bucket_of[inv]
+
+    n_buckets = len(uq)
+    sums = np.zeros((n_buckets, N_METRICS), dtype=np.float64)
+    np.add.at(sums, bucket_ids, metrics)
+    counts = np.bincount(bucket_ids, minlength=n_buckets)
 
     # merge close buckets (greedy, deterministic by bucket id)
-    bids = sorted(sums)
-    bucket_rep = {b: sums[b] / counts[b] for b in bids}
-    remap: dict[int, int] = {}
+    remap = np.empty(n_buckets, dtype=np.int64)
     cluster_reps: list[np.ndarray] = []
     cluster_w: list[int] = []
-    for b in bids:
-        v = bucket_rep[b]
+    for b in range(n_buckets):
+        v = sums[b] / counts[b]
         placed = False
         for cid, rep in enumerate(cluster_reps):
             denom = np.maximum(np.maximum(np.abs(rep), np.abs(v)), 1e-30)
@@ -216,9 +229,26 @@ def cluster_compute_events(
         if not placed:
             remap[b] = len(cluster_reps)
             cluster_reps.append(v.copy())
-            cluster_w.append(counts[b])
+            cluster_w.append(int(counts[b]))
 
-    out = [dataclasses.replace(ev, cluster_id=remap[bid])
-           for ev, bid in assigned]
     reps = {cid: rep for cid, rep in enumerate(cluster_reps)}
+    return remap[bucket_ids], reps
+
+
+def cluster_compute_events(
+    events: Iterable[ComputeEvent], rel_tol: float = 0.05
+) -> tuple[list[ComputeEvent], dict[int, np.ndarray]]:
+    """Assign cluster ids; each cluster's representative vector is the mean.
+
+    Event-list front-end over :func:`cluster_vectors` (the columnar trace
+    IR path in :mod:`repro.core.trace_ir` calls it directly on the stored
+    metrics array and never materializes events).
+    """
+    events = list(events)
+    if not events:
+        return [], {}
+    metrics = np.stack([ev.vector for ev in events])
+    cids, reps = cluster_vectors(metrics, rel_tol)
+    out = [dataclasses.replace(ev, cluster_id=int(c))
+           for ev, c in zip(events, cids)]
     return out, reps

@@ -104,6 +104,19 @@ def merge_terminal_tables(tables: Sequence[TerminalTable],
     return glob, maps
 
 
+def corpus_terminal_table(programs: Sequence[MergedProgram],
+                          ) -> tuple[TerminalTable, list[dict[int, int]]]:
+    """§2.6.1 applied once more, across scenarios: union the merged tables
+    of several synthesized programs into one corpus-level terminal table.
+
+    Compute terminals keyed by joint cluster id (``X|<cid>``) and identical
+    comm terminals unify across scenarios, so one block-combination fit per
+    corpus terminal covers every scenario that uses it.  Returns the global
+    table plus one per-scenario ``{scenario gid -> corpus gid}`` map.
+    """
+    return merge_terminal_tables([p.table for p in programs])
+
+
 # ---------------------------------------------------------------------------
 # §2.6.2 non-terminal merge (bottom-up by depth, structural hashing)
 # ---------------------------------------------------------------------------

@@ -70,6 +70,23 @@ def rep(fn, n: int, st: dict, comm) -> dict:
     return lax.fori_loop(0, n, lambda i, s: fn(s, comm), st)
 
 
+def load_saved_module(path, name: str | None = None):
+    """Re-import a previously generated proxy module from disk.
+
+    Generated proxies are plain Python files (``module.__proxy_path__``);
+    together with ``TraceStore.save``/``load`` this makes the pipeline
+    fully offline: trace → store ``.npz`` → synthesize → proxy ``.py`` →
+    reload and replay anywhere, no re-synthesis required."""
+    path = Path(path)
+    name = name or path.stem
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod
+    spec.loader.exec_module(mod)
+    mod.__proxy_path__ = str(path)
+    return mod
+
+
 def load_module(source: str, name: str = "generated_proxy",
                 out_dir: str | Path | None = None):
     """Write generated source to a file and import it as a module."""
@@ -77,12 +94,7 @@ def load_module(source: str, name: str = "generated_proxy",
     out_dir.mkdir(parents=True, exist_ok=True)
     path = out_dir / f"{name}.py"
     path.write_text(source)
-    spec = importlib.util.spec_from_file_location(name, path)
-    mod = importlib.util.module_from_spec(spec)
-    sys.modules[name] = mod
-    spec.loader.exec_module(mod)
-    mod.__proxy_path__ = str(path)
-    return mod
+    return load_saved_module(path, name)
 
 
 def init_replay_state(module, seed: int = 0) -> dict:
@@ -140,10 +152,42 @@ def submesh_axis_sizes(n_devices: int, axis_sizes: dict[str, int],
     return out
 
 
+def _proportional_alloc(want: Sequence[int], n_devices: int,
+                        axis_sizes: dict[str, int],
+                        ) -> tuple[list[int], list[int]]:
+    """Hint-proportional contiguous device shares (requires
+    ``len(want) <= n_devices``); returns (alloc, starts)."""
+    total = sum(want)
+    alloc = [min(w, max(1, (n_devices * w) // total)) for w in want]
+    # bumping zero-share groups to 1 device can oversubscribe the mesh
+    # (e.g. hints [100,1,1,1,1,1,1] on 8 devices); shave the largest
+    # shares back until the plan fits (every group keeps >= 1)
+    while sum(alloc) > n_devices:
+        i = alloc.index(max(alloc))
+        alloc[i] -= 1
+    # hand leftovers to the groups furthest below their hint
+    while sum(alloc) < n_devices:
+        gaps = [w - a for w, a in zip(want, alloc)]
+        if max(gaps) <= 0:
+            break
+        i = gaps.index(max(gaps))
+        alloc[i] += 1
+    # shrink each share to the largest realizable sub-mesh size (a
+    # 7-device share of a 16-wide axis would otherwise collapse to 1)
+    alloc = [_realizable(a, axis_sizes) for a in alloc]
+    starts = []
+    cur = 0
+    for a in alloc:
+        starts.append(cur)
+        cur += a
+    return alloc, starts
+
+
 def plan_mesh_sweep(groups: Sequence[tuple[tuple, Sequence[int]]],
                     hints: dict[tuple, int],
                     axis_sizes: dict[str, int],
-                    n_devices: int) -> list[GroupPlacement]:
+                    n_devices: int,
+                    share_unit_groups: bool = False) -> list[GroupPlacement]:
     """Partition ``n_devices`` mesh devices among signature groups.
 
     Pure function of its inputs (deterministic; no jax state touched):
@@ -157,7 +201,12 @@ def plan_mesh_sweep(groups: Sequence[tuple[tuple, Sequence[int]]],
       (dispatches then serialize per device, which is still correct);
     * each subset is trimmed to the realizable sub-mesh size
       (:func:`submesh_axis_sizes`), so the placement's geometry always
-      multiplies out to exactly ``len(device_ids)``.
+      multiplies out to exactly ``len(device_ids)``;
+    * with ``share_unit_groups=True``, two or more unit-hint groups (the
+      ``count_scale``-dilated tiny groups whose scaled hints collapsed to
+      1) are packed onto **one shared device** instead of claiming one
+      each — their dispatches serialize there while the freed devices go
+      to groups still below their hint.
     """
     n_devices = max(int(n_devices), 1)
     groups = [(sig, list(rs)) for sig, rs in groups]
@@ -169,29 +218,22 @@ def plan_mesh_sweep(groups: Sequence[tuple[tuple, Sequence[int]]],
         alloc = [1] * n
         starts = [i % n_devices for i in range(n)]
     else:
-        total = sum(want)
-        alloc = [min(w, max(1, (n_devices * w) // total)) for w in want]
-        # bumping zero-share groups to 1 device can oversubscribe the mesh
-        # (e.g. hints [100,1,1,1,1,1,1] on 8 devices); shave the largest
-        # shares back until the plan fits (every group keeps >= 1)
-        while sum(alloc) > n_devices:
-            i = alloc.index(max(alloc))
-            alloc[i] -= 1
-        # hand leftovers to the groups furthest below their hint
-        while sum(alloc) < n_devices:
-            gaps = [w - a for w, a in zip(want, alloc)]
-            if max(gaps) <= 0:
-                break
-            i = gaps.index(max(gaps))
-            alloc[i] += 1
-        # shrink each share to the largest realizable sub-mesh size (a
-        # 7-device share of a 16-wide axis would otherwise collapse to 1)
-        alloc = [_realizable(a, axis_sizes) for a in alloc]
-        starts = []
-        cur = 0
-        for a in alloc:
-            starts.append(cur)
-            cur += a
+        unit = [i for i, w in enumerate(want) if w == 1]
+        big = [i for i, w in enumerate(want) if w > 1]
+        # pack only under device scarcity (demand above supply): with spare
+        # devices, unit groups keep one each and run in parallel — packing
+        # would serialize them for no one's benefit
+        if share_unit_groups and len(unit) >= 2 and big \
+                and n_devices >= 2 and sum(want) > n_devices:
+            big_alloc, big_starts = _proportional_alloc(
+                [want[i] for i in big], n_devices - 1, axis_sizes)
+            alloc = [1] * n
+            starts = [n_devices - 1] * n     # unit groups share the last dev
+            for i, a, s0 in zip(big, big_alloc, big_starts):
+                alloc[i] = a
+                starts[i] = s0
+        else:
+            alloc, starts = _proportional_alloc(want, n_devices, axis_sizes)
     out = []
     for (sig, rs), a, s0 in zip(groups, alloc, starts):
         out.append(GroupPlacement(
@@ -370,12 +412,16 @@ class ProxyProgram:
         return out
 
     def mesh_sweep_plan(self, mesh, ranks: Sequence[int] | None = None,
+                        share_unit_groups: bool = True,
                         ) -> list[GroupPlacement]:
         """Deterministic placement of signature groups onto ``mesh``'s
-        devices (see :func:`plan_mesh_sweep`)."""
+        devices (see :func:`plan_mesh_sweep`).  Unit-hint groups —
+        typically ``count_scale``-dilated tiny groups — share one device
+        by default instead of idling devices each."""
         return plan_mesh_sweep(self.signature_groups(ranks),
                                self.group_device_hints(), self.axis_sizes,
-                               int(np.asarray(mesh.devices).size))
+                               int(np.asarray(mesh.devices).size),
+                               share_unit_groups=share_unit_groups)
 
     def _submesh_for(self, mesh, placement: GroupPlacement):
         devs = list(np.asarray(mesh.devices).flat)
@@ -674,10 +720,14 @@ class ProxyProgram:
                  batched: bool = True, mesh=None) -> FidelityReport:
         """Compare proxy vs original per rank (paper §3.3.1).
 
-        Compute metrics: walker totals of generated code vs the original
-        trace's compute totals, assembled for all sampled ranks in one
-        vectorized pass (proxy totals come from the per-signature metrics
-        cache — one walker trace per group, not per rank).  Communication:
+        ``original_rank_traces`` is either per-rank Event lists or a
+        columnar :class:`~repro.core.trace_ir.TraceStore` (preferred: the
+        original totals then come from one vectorized pass with no Event
+        materialization).  Compute metrics: walker totals of generated
+        code vs the original trace's compute totals, assembled for all
+        sampled ranks in one vectorized pass (proxy totals come from the
+        per-signature metrics cache — one walker trace per group, not per
+        rank).  Communication:
         the merged grammar must expand to the original event *key* sequence
         exactly (losslessness; keys, not local ids — heterogeneous ranks
         intern in different orders).  ``batched=False`` forces the original
@@ -690,7 +740,15 @@ class ProxyProgram:
         by construction — walker metrics are keyed by (signature, state
         shapes) only — so mesh and local reports carry bit-identical deltas.
         """
-        n_ranks = len(original_rank_traces)
+        if hasattr(original_rank_traces, "compute_totals"):
+            # columnar TraceStore: per-rank totals in one vectorized pass,
+            # bit-identical to the per-event accumulation (np.add.at sums
+            # in stream order) — no Event materialization
+            totals = original_rank_traces.compute_totals()
+            n_ranks = original_rank_traces.n_ranks
+        else:
+            totals = None
+            n_ranks = len(original_rank_traces)
         ranks = list(range(n_ranks))
         if sample_ranks and n_ranks > sample_ranks:
             step = max(n_ranks // sample_ranks, 1)
@@ -703,11 +761,14 @@ class ProxyProgram:
                 if list(original_rank_keys[r]) != got:
                     lossless = False
                     break
-        a = np.zeros((N_METRICS, len(ranks)))
-        for col, r in enumerate(ranks):
-            for ev in original_rank_traces[r]:
-                if not is_comm(ev):
-                    a[:, col] += ev.vector
+        if totals is not None:
+            a = totals[ranks].T
+        else:
+            a = np.zeros((N_METRICS, len(ranks)))
+            for col, r in enumerate(ranks):
+                for ev in original_rank_traces[r]:
+                    if not is_comm(ev):
+                        a[:, col] += ev.vector
         b = np.stack([self.rank_metrics(r, use_cache=batched) for r in ranks],
                      axis=1)
         delta = proxy_search.rel_error_matrix(a, b)

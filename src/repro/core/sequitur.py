@@ -106,6 +106,22 @@ class Sequitur:
         for s in syms:
             self.push(s)
 
+    def push_ids(self, ids) -> None:
+        """Ingest a pre-interned terminal-id array (the columnar trace IR
+        hands sequences over as numpy int arrays).
+
+        Ids are converted to plain Python ints in one bulk ``tolist()``
+        call before the push loop: numpy scalars hash like ints but leak
+        into digram keys and frozen rule bodies (breaking ``to_json`` and
+        bit-exact rule comparisons), and per-element ``int()`` conversion
+        is the slowest part of the loop.  The grammar produced is
+        bit-identical to ``push_many`` over the same sequence.
+        """
+        if hasattr(ids, "tolist"):
+            ids = ids.tolist()
+        for s in ids:
+            self.push(s)
+
     def expand(self) -> list[int]:
         """Expand the grammar back into the original sequence (lossless)."""
         out: list[int] = []

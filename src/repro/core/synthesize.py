@@ -1,31 +1,44 @@
 """Top-level proxy-app synthesis pipeline (paper Fig. 1).
 
-    trace → cluster compute events → per-rank Sequitur grammars →
-    inter-process merge → QP block-combination search → code generation
+    trace → columnar TraceStore → joint compute-event clustering →
+    per-rank Sequitur grammars (signature-deduped) → inter-process merge →
+    QP block-combination search → code generation
 
 One call::
 
     result = synthesize(step_fn, *specs, axis_sizes={"data": 16})
     result.proxy.run_local()
     print(result.stats["compression_ratio"], result.fidelity.mean)
+
+The front half runs on the columnar trace IR (:mod:`repro.core.trace_ir`):
+compute metrics live in one ``(n_events, 6)`` array, comm events are
+interned ids, and clustering/interning are vectorized — bit-identical to
+the per-event reference (:mod:`repro.core.frontend_reference`) and
+measured in ``benchmarks/synthesize_time.py``.
+
+:func:`synthesize_corpus` lifts the pipeline to a *corpus* of scenarios
+(the model-zoo workloads registered in :mod:`repro.configs.registry`):
+compute events cluster jointly across scenarios, the per-scenario merged
+tables union into one corpus terminal table, and every block-combination
+fit solves in a single batched-PGD device call — one solve for the whole
+zoo instead of one per scenario.
 """
 from __future__ import annotations
 
 import dataclasses
+from pathlib import Path
 from typing import Callable, Sequence
 
 import numpy as np
 
 from repro.core import proxy_search
-from repro.core.events import (
-    ComputeEvent, Event, cluster_compute_events, is_comm,
-)
-from repro.core.grammar import Grammar, TerminalTable, from_sequitur, raw_trace_bytes
-from repro.core.interproc import MergedProgram, merge_grammars
+from repro.core.events import Event, cluster_vectors, is_comm
+from repro.core.grammar import Grammar, TerminalTable
+from repro.core.interproc import MergedProgram, corpus_terminal_table
 from repro.core.codegen import generate_source
 from repro.core.replay import FidelityReport, ProxyProgram, load_module
-from repro.core.sequitur import Sequitur
-from repro.core.tracer import Trace, per_rank_traces, trace_fn
+from repro.core.trace_ir import TraceStore, compress_store
+from repro.core.tracer import trace_fn_store
 
 
 @dataclasses.dataclass
@@ -33,7 +46,7 @@ class SynthesisResult:
     proxy: ProxyProgram
     merged: MergedProgram
     grammars: list[Grammar]
-    rank_traces: list[list[Event]]
+    store: TraceStore
     rank_ids: list[list[int]]
     fits: dict[int, proxy_search.FitResult]
     stats: dict
@@ -42,13 +55,25 @@ class SynthesisResult:
     def source(self) -> str:
         return self.proxy.source
 
+    @property
+    def rank_traces(self) -> list[list[Event]]:
+        """Materialized per-rank event lists (lazy: the pipeline itself
+        never needs them; tests and benchmarks do)."""
+        cached = getattr(self, "_rank_traces_cache", None)
+        if cached is None:
+            cached = self.store.to_rank_traces()
+            self._rank_traces_cache = cached
+        return cached
+
     def fidelity(self, sample_ranks: int | None = 16,
                  batched: bool = True) -> FidelityReport:
         """δ̄ report; ``batched`` uses the vectorized per-signature-group
-        path (identical numbers, one walker trace per group)."""
+        path (identical numbers, one walker trace per group).  The
+        original side reads straight from the columnar store — no Event
+        materialization."""
         keys = [[g.table[i].key() for i in ids]
                 for g, ids in zip(self.grammars, self.rank_ids)]
-        return self.proxy.fidelity(self.rank_traces, keys,
+        return self.proxy.fidelity(self.store, keys,
                                    sample_ranks=sample_ranks, batched=batched)
 
 
@@ -61,109 +86,61 @@ def compress_rank_traces(rank_traces: Sequence[Sequence[Event]],
 
     Joint clustering across ranks is the paper's "inter-process merging of
     computing terminals has been completed in the process of processing
-    computing events" (§2.6.1).
+    computing events" (§2.6.1).  Thin wrapper: ingests the event lists
+    into a :class:`TraceStore` and runs the columnar front half.
     """
-    flat: list[ComputeEvent] = []
-    index: list[list[int]] = []
-    for tr in rank_traces:
-        idx = []
-        for ev in tr:
-            if not is_comm(ev):
-                idx.append(len(flat))
-                flat.append(ev)
-            else:
-                idx.append(-1)
-        index.append(idx)
-    clustered, reps = cluster_compute_events(flat, rel_tol)
-
-    grammars: list[Grammar] = []
-    rank_ids: list[list[int]] = []
-    for tr, idx in zip(rank_traces, index):
-        table = TerminalTable()
-        seq = Sequitur()
-        ids = []
-        for ev, fi in zip(tr, idx):
-            ev2 = clustered[fi] if fi >= 0 else ev
-            tid = table.intern(ev2)
-            ids.append(tid)
-            seq.push(tid)
-        grammars.append(from_sequitur(seq, table))
-        rank_ids.append(ids)
-    merged = merge_grammars(grammars, threshold)
-    return grammars, merged, rank_ids, reps
+    store = TraceStore.from_rank_traces(rank_traces)
+    return compress_store(store, rel_tol, threshold)
 
 
-def synthesize(fn: Callable | None = None, *args,
-               rank_traces: Sequence[Sequence[Event]] | None = None,
-               axis_sizes: dict[str, int] | None = None,
-               name: str = "proxy",
-               rel_tol: float = 0.05,
-               threshold: float = 0.5,
-               solver: str = "auto",
-               count_scale: float = 1.0,
-               out_dir=None) -> SynthesisResult:
-    """Synthesize a proxy-app from a step function or pre-recorded traces.
+def _fit_terminals(table: TerminalTable, reps: dict[int, np.ndarray],
+                   solver: str, count_scale: float,
+                   ) -> tuple[dict[int, proxy_search.FitResult],
+                              dict[int, tuple], str]:
+    """QP block-combination search, one fit per unique compute terminal.
 
-    ``solver="auto"`` (default) picks the block-combination solver by
-    terminal count: exact NNLS for small traces, the batched-PGD device
-    solver above :data:`repro.core.proxy_search.PGD_TERMINAL_THRESHOLD`
-    distinct compute terminals (``"nnls"``/``"pgd"`` force either); the
-    resolved name lands in ``stats["solver"]``.
-
-    ``count_scale`` < 1 shrinks the fitted block counts (and hence replay
-    time) proportionally — the proxy then represents a 1/count_scale
-    time-dilated execution; useful to keep CPU-host replay benchmarks fast.
-    """
-    if rank_traces is None:
-        if fn is None:
-            raise ValueError("need fn or rank_traces")
-        template: Trace = trace_fn(fn, *args, axis_sizes=axis_sizes)
-        axis_sizes = dict(template.axis_sizes if axis_sizes is None
-                          else axis_sizes)
-        rank_traces = per_rank_traces(template, axis_sizes)
-    n_events = sum(len(t) for t in rank_traces)
-    trace_bytes = sum(raw_trace_bytes(t) for t in rank_traces)
-
-    grammars, merged, rank_ids, reps = compress_rank_traces(
-        rank_traces, rel_tol, threshold)
-
-    # QP block-combination search, one fit per unique compute terminal
-    fits: dict[int, proxy_search.FitResult] = {}
-    combos: dict[int, tuple] = {}
+    ``solver="pgd"`` solves every target in one batched device call;
+    ``"nnls"`` runs the exact active-set solver per target."""
     targets, gids = [], []
-    for gid, ev in enumerate(merged.table.events):
+    for gid, ev in enumerate(table.events):
         if not is_comm(ev):
             t = np.asarray(reps[ev.cluster_id] if ev.cluster_id >= 0
                            else ev.vector) * count_scale
             targets.append(t)
             gids.append(gid)
     solver = proxy_search.choose_solver(len(targets), solver)
+    fits: dict[int, proxy_search.FitResult] = {}
+    combos: dict[int, tuple] = {}
     if solver == "pgd" and targets:
-        xs = proxy_search.fit_batch_pgd(np.stack(targets))
-        from repro.core.blocks import calibration_matrix
-        b = calibration_matrix()
-        for gid, t, x in zip(gids, targets, xs):
-            pred = b @ x
-            fits[gid] = proxy_search.FitResult(
-                x=x, predicted=pred, target=t, residual=0.0,
-                per_metric_rel_err=proxy_search.rel_error(t, pred), unroll=1)
-            combos[gid] = (tuple(int(v) for v in x), 1)
+        for gid, fr in zip(gids, proxy_search.fit_batch(np.stack(targets))):
+            fits[gid] = fr
+            combos[gid] = (tuple(int(v) for v in fr.x), fr.unroll)
     else:
         for gid, t in zip(gids, targets):
             fr = proxy_search.fit_combination(t)
             fits[gid] = fr
             combos[gid] = (tuple(int(v) for v in fr.x), fr.unroll)
+    return fits, combos, solver
 
-    source = generate_source(merged, combos, name, axis_sizes)
+
+def _assemble_result(store: TraceStore, grammars, merged, rank_ids, fits,
+                     combos, solver: str, name: str,
+                     axis_sizes: dict[str, int], count_scale: float,
+                     out_dir) -> SynthesisResult:
+    """Codegen + module load + stats: the shared back half of
+    :func:`synthesize` and :func:`synthesize_corpus`."""
+    source = generate_source(merged, combos, name, axis_sizes,
+                             count_scale=count_scale)
     module = load_module(source, name=f"{name}_mod", out_dir=out_dir)
     proxy = ProxyProgram(source, module, merged, combos, axis_sizes)
 
+    trace_bytes = store.raw_trace_bytes()
     grammar_bytes = merged.encoded_size_bytes()
     fit_errs = [float(np.mean(f.per_metric_rel_err[f.target > 0]))
                 for f in fits.values() if np.any(f.target > 0)]
     stats = {
-        "n_ranks": len(rank_traces),
-        "n_events": n_events,
+        "n_ranks": store.n_ranks,
+        "n_events": store.n_events,
         "n_signature_groups": len(module.SIGNATURE_GROUPS),
         "n_unique_terminals": len(merged.table),
         "n_rules": len(merged.rules),
@@ -176,5 +153,176 @@ def synthesize(fn: Callable | None = None, *args,
         "max_fit_rel_err": float(np.max(fit_errs)) if fit_errs else 0.0,
     }
     return SynthesisResult(proxy=proxy, merged=merged, grammars=grammars,
-                           rank_traces=list(map(list, rank_traces)),
-                           rank_ids=rank_ids, fits=fits, stats=stats)
+                           store=store, rank_ids=rank_ids, fits=fits,
+                           stats=stats)
+
+
+def synthesize(fn: Callable | None = None, *args,
+               rank_traces: Sequence[Sequence[Event]] | None = None,
+               store: TraceStore | None = None,
+               axis_sizes: dict[str, int] | None = None,
+               name: str = "proxy",
+               rel_tol: float = 0.05,
+               threshold: float = 0.5,
+               solver: str = "auto",
+               count_scale: float = 1.0,
+               out_dir=None) -> SynthesisResult:
+    """Synthesize a proxy-app from a step function, pre-recorded traces,
+    or a saved columnar :class:`TraceStore` (``TraceStore.load(path)`` —
+    traces are offline artifacts).
+
+    ``solver="auto"`` (default) picks the block-combination solver by
+    terminal count: exact NNLS for small traces, the batched-PGD device
+    solver above :data:`repro.core.proxy_search.PGD_TERMINAL_THRESHOLD`
+    distinct compute terminals (``"nnls"``/``"pgd"`` force either); the
+    resolved name lands in ``stats["solver"]``.
+
+    ``count_scale`` < 1 shrinks the fitted block counts (and hence replay
+    time) proportionally — the proxy then represents a 1/count_scale
+    time-dilated execution; useful to keep CPU-host replay benchmarks
+    fast.  The generated module's per-group device hints scale with it, so
+    the mesh sweep scheduler packs time-dilated groups onto fewer devices.
+    """
+    if store is None:
+        if rank_traces is not None:
+            store = TraceStore.from_rank_traces(rank_traces, axis_sizes)
+        elif fn is not None:
+            store = trace_fn_store(fn, *args, axis_sizes=axis_sizes)
+        else:
+            raise ValueError("need fn, rank_traces, or store")
+    axis_sizes = dict(store.axis_sizes if axis_sizes is None else axis_sizes)
+
+    grammars, merged, rank_ids, reps = compress_store(store, rel_tol,
+                                                      threshold)
+    fits, combos, solver = _fit_terminals(merged.table, reps, solver,
+                                          count_scale)
+    return _assemble_result(store, grammars, merged, rank_ids, fits, combos,
+                            solver, name, axis_sizes, count_scale, out_dir)
+
+
+# ---------------------------------------------------------------------------
+# corpus-level synthesis across the scenario zoo
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CorpusResult:
+    """Per-scenario synthesis results plus the corpus-level shared state."""
+    results: dict[str, SynthesisResult]
+    table: TerminalTable               # corpus terminal table (shared)
+    reps: dict[int, np.ndarray]        # joint cluster representatives
+    stats: dict
+
+    def report(self, sample_ranks: int | None = None) -> dict:
+        """Aggregate fidelity/compression report: per-scenario δ̄ and
+        compression ratio plus corpus totals (runs the walker-metric
+        fidelity measurement per scenario)."""
+        rows = {}
+        for sname, res in self.results.items():
+            fid = res.fidelity(sample_ranks=sample_ranks)
+            rows[sname] = {
+                "mean_delta": float(fid.mean),
+                "comm_lossless": bool(fid.comm_lossless),
+                "compression_ratio": float(res.stats["compression_ratio"]),
+                "n_events": int(res.stats["n_events"]),
+                "n_ranks": int(res.stats["n_ranks"]),
+            }
+        deltas = [r["mean_delta"] for r in rows.values()]
+        return dict(self.stats, scenarios=rows,
+                    mean_delta=float(np.mean(deltas)) if deltas else 0.0,
+                    all_comm_lossless=all(r["comm_lossless"]
+                                          for r in rows.values()))
+
+
+def synthesize_corpus(scenarios=None, *,
+                      rel_tol: float = 0.05,
+                      threshold: float = 0.5,
+                      count_scale: float = 1.0,
+                      out_dir=None,
+                      **scenario_kwargs) -> CorpusResult:
+    """Synthesize proxies for a whole corpus of scenarios at once.
+
+    ``scenarios`` entries are registry names (``repro.configs.registry.
+    SCENARIOS``; ``None`` = the full zoo) or ``(name, TraceStore)`` pairs
+    for pre-built/loaded traces.  Extra ``scenario_kwargs`` (``n_ranks``,
+    ``steps``) forward to the registry builders.
+
+    Versus a per-scenario :func:`synthesize` loop:
+
+    * compute events cluster **jointly** across scenarios
+      (:func:`cluster_vectors` over the concatenated metrics arrays), so a
+      compute behaviour shared by two workloads is one terminal, not two;
+    * the per-scenario merged tables union into one corpus terminal table
+      (:func:`corpus_terminal_table`), and every block-combination fit
+      solves in **one** batched-PGD device call;
+    * each scenario still gets its own merged grammar, generated module,
+      and :class:`SynthesisResult` (δ̄ measurable per scenario).
+    """
+    from repro.configs import registry   # lazy: configs pulls in models
+
+    if scenarios is None:
+        scenarios = list(registry.SCENARIOS)
+    stores: dict[str, TraceStore] = {}
+    for sc in scenarios:
+        if isinstance(sc, str):
+            stores[sc] = registry.build_scenario(sc, **scenario_kwargs)
+        else:
+            sname, st = sc
+            stores[sname] = st
+    names = list(stores)
+
+    # joint clustering across every scenario's compute events
+    sizes = [stores[n].n_compute_events for n in names]
+    offsets = np.cumsum([0] + sizes)
+    all_metrics = (np.concatenate([stores[n].metrics for n in names])
+                   if sum(sizes) else np.zeros((0, 6)))
+    cids_all, reps = cluster_vectors(all_metrics, rel_tol)
+
+    per: dict[str, tuple] = {}
+    mergeds: list[MergedProgram] = []
+    for i, sname in enumerate(names):
+        grammars, merged, rank_ids, _ = compress_store(
+            stores[sname], rel_tol, threshold,
+            cluster_ids=cids_all[offsets[i]:offsets[i + 1]], reps=reps)
+        per[sname] = (grammars, merged, rank_ids)
+        mergeds.append(merged)
+
+    # one corpus table, one batched-PGD solve for every compute terminal
+    table, gid_maps = corpus_terminal_table(mergeds)
+    corpus_fits, _, _ = _fit_terminals(table, reps, "pgd", count_scale)
+
+    results: dict[str, SynthesisResult] = {}
+    for i, sname in enumerate(names):
+        grammars, merged, rank_ids = per[sname]
+        gmap = gid_maps[i]
+        fits, combos = {}, {}
+        for gid, ev in enumerate(merged.table.events):
+            if is_comm(ev):
+                continue
+            fr = corpus_fits[gmap[gid]]
+            fits[gid] = fr
+            combos[gid] = (tuple(int(v) for v in fr.x), fr.unroll)
+        sdir = Path(out_dir) / sname if out_dir else None
+        results[sname] = _assemble_result(
+            stores[sname], grammars, merged, rank_ids, fits, combos, "pgd",
+            sname.replace("-", "_"), stores[sname].axis_sizes, count_scale,
+            sdir)
+
+    from collections import Counter
+    use = Counter()
+    for m in gid_maps:
+        use.update(set(m.values()))
+    stats = {
+        "n_scenarios": len(names),
+        "n_corpus_terminals": len(table),
+        "n_compute_terminals": len(corpus_fits),
+        "n_shared_terminals": sum(1 for v in use.values() if v > 1),
+        "n_solver_calls": 1 if corpus_fits else 0,
+        "total_trace_bytes": sum(r.stats["trace_bytes"]
+                                 for r in results.values()),
+        "total_grammar_bytes": sum(r.stats["grammar_bytes"]
+                                   for r in results.values()),
+    }
+    stats["corpus_compression_ratio"] = (
+        stats["total_trace_bytes"] / max(stats["total_grammar_bytes"], 1))
+    return CorpusResult(results=results, table=table, reps=reps, stats=stats)

@@ -237,6 +237,19 @@ def trace_fn(fn: Callable, *args, axis_sizes: dict[str, int] | None = None,
     return Trace(w.events, w.axis_sizes)
 
 
+def trace_fn_store(fn: Callable, *args,
+                   axis_sizes: dict[str, int] | None = None, **kwargs):
+    """Trace ``fn`` straight into a columnar :class:`~repro.core.trace_ir.
+    TraceStore`: the template is walked once and specialized per rank in
+    array form (no per-rank Event lists) — the fast path ``synthesize``
+    uses.  Equivalent to ``TraceStore.from_rank_traces(per_rank_traces(
+    trace_fn(...)))``."""
+    from repro.core.trace_ir import TraceStore
+    template = trace_fn(fn, *args, axis_sizes=axis_sizes, **kwargs)
+    sizes = dict(template.axis_sizes if axis_sizes is None else axis_sizes)
+    return TraceStore.from_template(template, sizes)
+
+
 def compute_cost(fn: Callable, *args, **kwargs) -> np.ndarray:
     """Total 6-metric cost of a collective-free callable (block calibration)."""
     t = trace_fn(fn, *args, **kwargs)
@@ -336,6 +349,12 @@ class TraceSession:
         ranks = range(self.n_ranks) if ranks is None else ranks
         for r in ranks:
             self.rank_streams[r].append(ev)
+
+    def to_store(self):
+        """Freeze the recorded streams into a columnar
+        :class:`~repro.core.trace_ir.TraceStore`."""
+        from repro.core.trace_ir import TraceStore
+        return TraceStore.from_rank_traces(self.rank_streams, self.axis_sizes)
 
 
 def active_session() -> TraceSession | None:

@@ -1,0 +1,138 @@
+"""Corpus-level synthesis tests: the scenario zoo registry, joint
+clustering across scenarios, the shared terminal table, and the
+single-batched-PGD-solve contract."""
+import numpy as np
+import pytest
+
+from repro.core import proxy_search
+from repro.core.events import CommEvent, ComputeEvent
+from repro.core.synthesize import synthesize, synthesize_corpus
+from repro.core.trace_ir import TraceStore
+
+
+def _store(vectors, comm_axis="x", n_ranks=4):
+    comm = CommEvent("psum", (8,), "float32", (comm_axis,))
+    tr = []
+    for v in vectors:
+        tr += [ComputeEvent(tuple(v)), comm]
+    return TraceStore.from_rank_traces([list(tr) for _ in range(n_ranks)],
+                                       {comm_axis: n_ranks})
+
+
+_V1 = (2.1e7, 3.3e5, 1.1e7, 8.2e3, 0., 0.)
+_V2 = (4.4e6, 1.2e4, 2.2e6, 0., 7.0, 1.0)
+_V3 = (9.9e8, 5.5e5, 3.3e7, 1.1e3, 0., 2.0)
+
+
+def test_corpus_shares_terminals_across_scenarios():
+    """A compute behaviour two scenarios share becomes ONE corpus terminal
+    (joint clustering + corpus table), and identical comm events unify."""
+    corp = synthesize_corpus([
+        ("a", _store([_V1, _V2])),
+        ("b", _store([_V1, _V3])),       # shares V1 and the psum with a
+    ])
+    assert corp.stats["n_scenarios"] == 2
+    assert corp.stats["n_solver_calls"] == 1
+    # V1 cluster + psum shared; V2/V3 private → 4 corpus terminals, 2 shared
+    assert corp.stats["n_corpus_terminals"] == 4
+    assert corp.stats["n_shared_terminals"] == 2
+    # the shared compute terminal got the same fit in both scenarios
+    fa = {e.key(): corp.results["a"].fits[g]
+          for g, e in enumerate(corp.results["a"].merged.table.events)
+          if not isinstance(e, CommEvent)}
+    fb = {e.key(): corp.results["b"].fits[g]
+          for g, e in enumerate(corp.results["b"].merged.table.events)
+          if not isinstance(e, CommEvent)}
+    shared = set(fa) & set(fb)
+    assert len(shared) == 1
+    k = shared.pop()
+    assert fa[k] is fb[k]                # literally the same FitResult
+
+
+def test_corpus_single_batched_solve(monkeypatch):
+    """The whole corpus fits in exactly one fit_batch dispatch."""
+    calls = []
+    orig = proxy_search.fit_batch
+
+    def counting(targets, *a, **kw):
+        calls.append(np.atleast_2d(targets).shape[0])
+        return orig(targets, *a, **kw)
+
+    monkeypatch.setattr(proxy_search, "fit_batch", counting)
+    corp = synthesize_corpus([
+        ("a", _store([_V1, _V2])),
+        ("b", _store([_V1, _V3])),
+        ("c", _store([_V2, _V3])),
+    ])
+    assert len(calls) == 1               # one dispatch for three scenarios
+    assert calls[0] == 3                 # V1, V2, V3 clusters
+    assert corp.stats["n_compute_terminals"] == 3
+
+
+def test_corpus_fidelity_matches_per_scenario_loop():
+    stores = {"a": _store([_V1, _V2]), "b": _store([_V3, _V1])}
+    corp = synthesize_corpus(list(stores.items()))
+    for sname, st in stores.items():
+        res = synthesize(store=st, name=f"loop_{sname}", solver="pgd")
+        f_loop = res.fidelity(sample_ranks=None)
+        f_corp = corp.results[sname].fidelity(sample_ranks=None)
+        assert f_loop.comm_lossless and f_corp.comm_lossless
+        np.testing.assert_array_equal(f_corp.delta, f_loop.delta)
+
+
+def test_corpus_report_structure():
+    corp = synthesize_corpus([("a", _store([_V1])), ("b", _store([_V2]))])
+    rep = corp.report(sample_ranks=None)
+    assert set(rep["scenarios"]) == {"a", "b"}
+    for row in rep["scenarios"].values():
+        assert row["comm_lossless"]
+        assert row["compression_ratio"] > 1
+    assert rep["all_comm_lossless"]
+    assert rep["n_solver_calls"] == 1
+    assert corp.stats["corpus_compression_ratio"] > 1
+
+
+def test_corpus_proxies_execute():
+    corp = synthesize_corpus([("a", _store([_V1])), ("b", _store([_V2]))])
+    for res in corp.results.values():
+        out = res.proxy.run_local(ranks=[0])
+        assert np.isfinite(np.float32(out["s"]))
+
+
+# ---------------------------------------------------------------------------
+# scenario zoo registry (real model-zoo builders)
+# ---------------------------------------------------------------------------
+
+
+def test_zoo_covers_all_families():
+    from repro.configs.registry import ARCH_IDS, SCENARIOS
+
+    fams = {s.family for s in SCENARIOS.values()}
+    assert fams == {"transformer", "flash", "ssm", "moe", "encdec"}
+    for s in SCENARIOS.values():
+        assert s.arch_id in ARCH_IDS
+
+
+@pytest.mark.parametrize("name", ["transformer-dp", "encdec-pipeline"])
+def test_zoo_builders_trace_and_synthesize(name):
+    """Cheap end-to-end: build a reduced zoo scenario and synthesize it."""
+    from repro.configs.registry import build_scenario
+
+    st = build_scenario(name, n_ranks=4, steps=2)
+    assert st.n_ranks == 4 and st.n_events > 0
+    assert st.metrics.shape[1] == 6
+    assert np.all(st.metrics >= 0) and np.any(st.metrics > 0)
+    res = synthesize(store=st, name=name.replace("-", "_"))
+    fid = res.fidelity(sample_ranks=None)
+    assert fid.comm_lossless
+    assert res.stats["compression_ratio"] > 1
+
+
+def test_zoo_corpus_two_scenarios():
+    """The registry path through synthesize_corpus (CI smoke shape)."""
+    corp = synthesize_corpus(["transformer-dp", "ssm-decode"],
+                             n_ranks=4, steps=2)
+    assert corp.stats["n_scenarios"] == 2
+    assert corp.stats["n_solver_calls"] == 1
+    rep = corp.report(sample_ranks=None)
+    assert rep["all_comm_lossless"]

@@ -3,12 +3,34 @@
 Hypothesis-based property tests live in test_events_grammar_prop.py so
 this module always runs, dependency or not."""
 import numpy as np
+import pytest
 
 from repro.core.events import (
-    CommEvent, ComputeEvent, cluster_compute_events, decode_relative_perm,
-    encode_relative_perm,
+    CommEvent, ComputeEvent, cluster_compute_events, cluster_vectors,
+    decode_relative_perm, dtype_bytes, encode_relative_perm,
 )
 from repro.core.grammar import compress_events, raw_trace_bytes
+
+
+def test_dtype_bytes_str_inputs():
+    assert dtype_bytes("float32") == 4
+    assert dtype_bytes("bfloat16") == 2
+    assert dtype_bytes("float8_e4m3fn") == 1
+    assert dtype_bytes("int64") == 8
+
+
+def test_dtype_bytes_np_dtype_inputs():
+    assert dtype_bytes(np.dtype("float64")) == 8
+    assert dtype_bytes(np.dtype("complex64")) == 8
+    assert dtype_bytes(np.int8) == 1          # scalar type, not dtype
+    assert dtype_bytes(np.dtype("bool")) == 1
+    import jax.numpy as jnp
+    assert dtype_bytes(jnp.bfloat16) == 2     # ml_dtypes name resolution
+
+
+def test_dtype_bytes_unknown_defaults_to_4():
+    assert dtype_bytes("not-a-dtype") == 4
+    assert dtype_bytes(np.dtype("datetime64[ns]")) == 4
 
 
 def test_relative_perm_shift_roundtrip():
@@ -44,6 +66,17 @@ def test_cluster_compute_events():
     out, reps = cluster_compute_events(evs, rel_tol=0.05)
     assert out[0].cluster_id == out[1].cluster_id != out[2].cluster_id
     assert len(reps) == 2
+
+
+def test_cluster_vectors_edge_cases():
+    ids, reps = cluster_vectors(np.zeros((0, 6)))
+    assert len(ids) == 0 and reps == {}
+    with pytest.raises(ValueError):
+        cluster_vectors(np.zeros((3, 5)))
+    # non-positive metrics quantize to the same sentinel bucket
+    ids, reps = cluster_vectors(np.zeros((4, 6)))
+    assert ids.tolist() == [0, 0, 0, 0]
+    np.testing.assert_array_equal(reps[0], np.zeros(6))
 
 
 def test_compress_events_lossless():

@@ -103,6 +103,59 @@ def test_plan_empty_groups():
     assert plan_mesh_sweep([], {}, {"x": 4}, 8) == []
 
 
+def test_count_scale_scaled_hints_and_unit_group_sharing():
+    """ROADMAP item: ``count_scale`` scales the generated device hints, and
+    the planner packs the resulting unit-hint groups onto one shared device
+    instead of idling devices sized for the full traced span."""
+    from repro.core.events import CommEvent, ComputeEvent
+    from repro.core.synthesize import synthesize
+
+    comp = ComputeEvent((2.1e6, 3.3e4, 1.1e6, 8.2e2, 0., 0.))
+    comp2 = ComputeEvent((7.7e5, 1.1e4, 3.3e5, 0., 0., 1.0))
+    big = CommEvent("psum", (16,), "float32", ("x", "y"))
+    small = CommEvent("psum", (4,), "float32", ("y",))
+    traces = [[comp, big] * 6 for _ in range(14)]
+    traces.append([comp2, small] * 6)                 # own main cluster
+    traces.append([comp2, small] * 6 + [small])       # … with a branch
+    axis = {"x": 8, "y": 2}
+
+    full = synthesize(rank_traces=traces, axis_sizes=axis, name="cs_full")
+    scaled = synthesize(rank_traces=traces, axis_sizes=axis,
+                        count_scale=0.5, name="cs_half")
+    assert sorted(g[2] for g in full.proxy.module.SIGNATURE_GROUPS) == \
+        [2, 2, 16]
+    assert sorted(g[2] for g in scaled.proxy.module.SIGNATURE_GROUPS) == \
+        [1, 1, 8]
+
+    # scaled hints + sharing: the two unit groups land on ONE shared device
+    groups = scaled.proxy.signature_groups()
+    plan = plan_mesh_sweep(groups, scaled.proxy.group_device_hints(), axis,
+                           8, share_unit_groups=True)
+    units = [p for p in plan if len(p.ranks) == 1]
+    bigp = next(p for p in plan if len(p.ranks) > 1)
+    assert len(units) == 2
+    assert units[0].device_ids == units[1].device_ids
+    assert set(units[0].device_ids).isdisjoint(bigp.device_ids)
+    assert bigp.n_devices == 4         # realizable share of the freed mesh
+
+    # unscaled hints (no unit groups): placements stay disjoint
+    plan2 = plan_mesh_sweep(full.proxy.signature_groups(),
+                            full.proxy.group_device_hints(), axis, 8,
+                            share_unit_groups=True)
+    ids = [i for p in plan2 for i in p.device_ids]
+    assert len(ids) == len(set(ids))
+
+    # no scarcity (total demand fits the mesh): unit groups keep their own
+    # devices and run in parallel — packing only kicks in when demand
+    # exceeds supply
+    plan3 = plan_mesh_sweep(
+        [(("a",), [0]), (("b",), [1]), (("c",), [2])],
+        {("a",): 4, ("b",): 1, ("c",): 1}, {"x": 8}, 8,
+        share_unit_groups=True)
+    ids3 = [i for p in plan3 for i in p.device_ids]
+    assert len(ids3) == len(set(ids3))
+
+
 # ---------------------------------------------------------------------------
 # mesh execution on whatever the host has (single device in tier-1)
 # ---------------------------------------------------------------------------

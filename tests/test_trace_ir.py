@@ -1,0 +1,258 @@
+"""Columnar trace IR tests: lossless round trips, .npz artifacts, and
+bit-exactness of the columnar front half vs the per-event reference
+(paper front half: trace → cluster → grammars → merge)."""
+import numpy as np
+import pytest
+
+from repro.core import frontend_reference as ref
+from repro.core.events import (
+    CommEvent, ComputeEvent, cluster_compute_events, cluster_vectors,
+)
+from repro.core.synthesize import synthesize
+from repro.core.trace_ir import TraceStore, compress_store
+
+
+def _mixed_traces(n_ranks=4):
+    """Heterogeneous traces exercising every detail-tuple shape: shift /
+    partial shift / explicit perm / canonicalized axis_index_groups,
+    plus a pre-clustered compute event."""
+    comm = CommEvent("psum", (16,), "float32", ("x",), ("groups", 0))
+    shift = CommEvent("ppermute", (4, 4), "bfloat16", ("x",), ("shift", 1))
+    part = CommEvent("ppermute", (8,), "float32", ("x",),
+                     ("shift", 1, (0, 1, 2)))
+    perm = CommEvent("ppermute", (2,), "float32", ("x",),
+                     ("perm", ((0, 1), (1, 0))))
+    comp = ComputeEvent((2.1e7, 3.3e5, 1.1e7, 8.2e3, 0., 0.))
+    comp2 = ComputeEvent((4.4e6, 1.2e4, 2.2e6, 0., 7.0, 1.0))
+    pre = ComputeEvent((1e6, 0., 0., 0., 0., 0.), cluster_id=3)
+    traces = []
+    for r in range(n_ranks):
+        tr = [comp, comm, comp2, shift, part] * 4
+        if r == 0:
+            tr = tr + [perm, pre]
+        traces.append(tr)
+    return traces
+
+
+# ---------------------------------------------------------------------------
+# round trips
+# ---------------------------------------------------------------------------
+
+
+def test_event_list_roundtrip_lossless():
+    traces = _mixed_traces()
+    st = TraceStore.from_rank_traces(traces, {"x": 4})
+    back = st.to_rank_traces()
+    assert len(back) == len(traces)
+    for a, b in zip(traces, back):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            assert x == y            # dataclass equality: full field match
+            assert x.key() == y.key()
+
+
+def test_store_shape_accessors():
+    st = TraceStore.from_rank_traces(_mixed_traces(), {"x": 4})
+    assert st.n_ranks == 4
+    assert st.n_events == 4 * 20 + 2
+    assert st.n_compute_events + st.n_comm_events == st.n_events
+    assert len(st.rank_tokens(0)) == 22
+    # comm pool is deduplicated by canonical key
+    assert len(st.comm_pool) == 4
+
+
+def test_raw_trace_bytes_matches_per_event_sum():
+    traces = _mixed_traces()
+    st = TraceStore.from_rank_traces(traces, {"x": 4})
+    want = sum(len(ev.key()) + 1 for tr in traces for ev in tr)
+    assert st.raw_trace_bytes() == want
+
+
+def test_compute_totals_vectorized():
+    traces = _mixed_traces()
+    st = TraceStore.from_rank_traces(traces, {"x": 4})
+    totals = st.compute_totals()
+    for r, tr in enumerate(traces):
+        want = np.zeros(6)
+        for ev in tr:
+            if isinstance(ev, ComputeEvent):
+                want += ev.vector
+        np.testing.assert_array_equal(totals[r], want)
+
+
+def test_npz_roundtrip_preserves_everything(tmp_path):
+    st = TraceStore.from_rank_traces(_mixed_traces(), {"x": 4})
+    p = st.save(tmp_path / "trace")
+    assert p.suffix == ".npz"
+    st2 = TraceStore.load(p)
+    assert np.array_equal(st.tokens, st2.tokens)
+    assert np.array_equal(st.extents, st2.extents)
+    assert np.array_equal(st.metrics, st2.metrics)
+    assert np.array_equal(st.cluster_ids, st2.cluster_ids)
+    assert st2.axis_sizes == {"x": 4}
+    assert [e for e in st.comm_pool] == [e for e in st2.comm_pool]
+    # events (incl. detail tuples and pre-assigned cluster ids) survive
+    for a, b in zip(st.to_rank_traces(), st2.to_rank_traces()):
+        assert a == b
+
+
+def test_npz_roundtrip_preserves_grammars_and_fidelity(tmp_path):
+    st = TraceStore.from_rank_traces(_mixed_traces(), {"x": 4})
+    res = synthesize(store=st, name="orig")
+    st2 = TraceStore.load(st.save(tmp_path / "trace"))
+    res2 = synthesize(store=st2, name="reloaded")
+    assert res.merged.rules == res2.merged.rules
+    assert res.merged.mains == res2.merged.mains
+    assert [e.key() for e in res.merged.table.events] == \
+        [e.key() for e in res2.merged.table.events]
+    assert res.stats["compression_ratio"] == res2.stats["compression_ratio"]
+    f1, f2 = res.fidelity(), res2.fidelity()
+    assert f1.comm_lossless and f2.comm_lossless
+    np.testing.assert_array_equal(f1.delta, f2.delta)
+
+
+def test_npz_version_mismatch_rejected(tmp_path):
+    import json
+
+    st = TraceStore.from_rank_traces(_mixed_traces(), {"x": 4})
+    p = st.save(tmp_path / "trace")
+    z = dict(np.load(p))
+    z["meta"] = np.asarray(json.dumps({"version": 999, "axis_sizes": {}}))
+    with open(p, "wb") as f:
+        np.savez(f, **z)
+    with pytest.raises(ValueError, match="version"):
+        TraceStore.load(p)
+
+
+def test_fidelity_store_backed_matches_event_lists():
+    """SynthesisResult.fidelity reads the columnar store; the numbers are
+    bit-identical to feeding materialized event lists."""
+    res = synthesize(rank_traces=_mixed_traces(), axis_sizes={"x": 4},
+                     name="fidsrc")
+    keys = [[g.table[i].key() for i in ids]
+            for g, ids in zip(res.grammars, res.rank_ids)]
+    f_store = res.fidelity(sample_ranks=None)
+    f_lists = res.proxy.fidelity(res.store.to_rank_traces(), keys,
+                                 sample_ranks=None)
+    np.testing.assert_array_equal(f_store.delta, f_lists.delta)
+    assert f_store.comm_lossless == f_lists.comm_lossless
+
+
+def test_saved_proxy_module_reloads(tmp_path):
+    from repro.core.replay import load_saved_module
+
+    res = synthesize(rank_traces=_mixed_traces(), axis_sizes={"x": 4},
+                     name="persist", out_dir=tmp_path)
+    mod = load_saved_module(res.proxy.module.__proxy_path__, "persist_again")
+    assert mod.SIGNATURE_GROUPS == res.proxy.module.SIGNATURE_GROUPS
+    assert mod.N_RANKS == 4
+    st = mod.run_rank.__globals__  # sanity: executable module namespace
+    assert "run_rank" in st
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the per-event reference
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_vectors_matches_reference():
+    rng = np.random.RandomState(0)
+    evs = [ComputeEvent(tuple(v)) for v in
+           np.abs(rng.lognormal(10, 3, (300, 6)))]
+    # salt in near-duplicates and zero metrics
+    evs += [ComputeEvent((1e9, 1e6, 1e8, 0., 0., 0.)),
+            ComputeEvent((1.02e9, 1.01e6, 1.01e8, 0., 0., 0.))] * 5
+    out_ref, reps_ref = ref.cluster_compute_events_reference(evs)
+    out_new, reps_new = cluster_compute_events(evs)
+    assert [e.cluster_id for e in out_new] == [e.cluster_id for e in out_ref]
+    assert set(reps_new) == set(reps_ref)
+    for k in reps_new:
+        np.testing.assert_array_equal(reps_new[k], reps_ref[k])
+    # array front-end agrees with the event front-end
+    ids, reps2 = cluster_vectors(np.stack([e.vector for e in evs]))
+    assert ids.tolist() == [e.cluster_id for e in out_new]
+
+
+def test_compress_store_bit_identical_to_reference():
+    traces = _mixed_traces()
+    g2, m2, ids2, reps2 = ref.compress_rank_traces_reference(traces)
+    st = TraceStore.from_rank_traces(traces, {"x": 4})
+    g1, m1, ids1, reps1 = compress_store(st)
+    assert ids1 == ids2
+    assert [g.rules for g in g1] == [g.rules for g in g2]
+    assert [[e.key() for e in g.table.events] for g in g1] == \
+        [[e.key() for e in g.table.events] for g in g2]
+    assert m1.rules == m2.rules
+    assert m1.mains == m2.mains
+    assert m1.cluster_ranks == m2.cluster_ranks
+    assert [e.key() for e in m1.table.events] == \
+        [e.key() for e in m2.table.events]
+    for k in reps1:
+        np.testing.assert_array_equal(reps1[k], reps2[k])
+
+
+def test_synthesize_bit_identical_to_reference_pipeline():
+    """Acceptance pin: grammar rules, terminal keys, compression ratio and
+    δ̄ through the columnar path equal the pre-refactor per-event pipeline."""
+    traces = _mixed_traces()
+    res = synthesize(rank_traces=traces, axis_sizes={"x": 4}, name="parity")
+    g2, m2, ids2, _ = ref.compress_rank_traces_reference(traces)
+    assert res.rank_ids == ids2
+    assert res.merged.rules == m2.rules and res.merged.mains == m2.mains
+    assert [e.key() for e in res.merged.table.events] == \
+        [e.key() for e in m2.table.events]
+    want_bytes = sum(len(ev.key()) + 1 for tr in traces for ev in tr)
+    assert res.stats["trace_bytes"] == want_bytes
+    assert res.stats["compression_ratio"] == \
+        want_bytes / m2.encoded_size_bytes()
+    fid = res.fidelity()
+    assert fid.comm_lossless
+
+
+def test_signature_dedup_shares_grammar_objects():
+    """SPMD ranks with byte-identical streams share one Sequitur run."""
+    traces = _mixed_traces(n_ranks=8)
+    st = TraceStore.from_rank_traces(traces, {"x": 8})
+    g, m, ids, _ = compress_store(st)
+    assert g[1] is g[2] and g[2] is g[7]      # identical ranks share
+    assert g[0] is not g[1]                   # heterogeneous rank 0 does not
+    # sharing is invisible in the output: the merged program still expands
+    # to each rank's exact event-id sequence (losslessness invariant)
+    for r in range(8):
+        got = [m.table[i].key() for i in m.expand_rank(r)]
+        want = [g[r].table[i].key() for i in ids[r]]
+        assert got == want
+        assert len(got) == len(traces[r])
+
+
+def test_from_template_equals_per_rank_ingestion():
+    """Template specialization (rawperm participation classes) produces the
+    identical store as materializing per-rank traces first."""
+    from repro.core.tracer import Trace, per_rank_traces
+
+    comp = ComputeEvent((1e6, 2e3, 5e5, 0., 0., 0.))
+    full = CommEvent("ppermute", (4,), "float32", ("x",),
+                     ("rawperm", tuple((i, (i + 1) % 4) for i in range(4))))
+    partial = CommEvent("ppermute", (4,), "float32", ("x",),
+                        ("rawperm", ((0, 1), (1, 2), (2, 3))))
+    red = CommEvent("psum", (8,), "float32", ("x",))
+    template = Trace([comp, full, comp, partial, red], {"x": 4})
+
+    st_t = TraceStore.from_template(template)
+    st_r = TraceStore.from_rank_traces(per_rank_traces(template), {"x": 4})
+    assert np.array_equal(st_t.tokens, st_r.tokens)
+    assert np.array_equal(st_t.extents, st_r.extents)
+    assert np.array_equal(st_t.metrics, st_r.metrics)
+    assert np.array_equal(st_t.cluster_ids, st_r.cluster_ids)
+    assert [e.key() for e in st_t.comm_pool] == \
+        [e.key() for e in st_r.comm_pool]
+    # rank 3 is not a source in the partial halo but is a destination;
+    # rank 0 sends only — both participate; the store keeps that exact
+    assert st_t.rank_events(0) == per_rank_traces(template)[0]
+
+
+def test_compress_store_rejects_ids_without_reps():
+    st = TraceStore.from_rank_traces(_mixed_traces(), {"x": 4})
+    with pytest.raises(ValueError):
+        compress_store(st, cluster_ids=np.zeros(st.n_compute_events,
+                                                dtype=np.int64))
