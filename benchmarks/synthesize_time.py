@@ -18,11 +18,22 @@ Two tiers:
    terminal table, and per-scenario δ̄ must be unchanged
    (``max_delta_diff`` = 0.0).
 
+3. **incremental_ingest** — a :class:`repro.core.corpus_store.CorpusStore`
+   pre-loaded with N scenarios; the row times *appending scenario N+1 and
+   re-synthesizing incrementally* against a from-scratch
+   ``synthesize_corpus`` over all N+1, and hard-asserts per-scenario δ̄
+   bit-identical between the two (the streaming-corpus invariant).
+
 ``python -m benchmarks.synthesize_time --smoke`` runs a reduced corpus
 (2 scenarios, 4 ranks) with hard asserts — the CI corpus smoke job.
+``--incremental`` ingests the reduced full zoo one scenario at a time
+into a tmp CorpusStore, re-synthesizing after each append, and asserts
+the final δ̄ set bit-identical to the batch path — the CI
+incremental-corpus job.
 """
 from __future__ import annotations
 
+import tempfile
 import time
 
 import numpy as np
@@ -131,8 +142,65 @@ def _corpus_rows(scenarios=_CORPUS_SCENARIOS, n_ranks=None, steps=None,
     }]
 
 
+def _incremental_rows(scenarios=_CORPUS_SCENARIOS + ("flash-ring",),
+                      n_ranks=None, steps=None) -> list[dict]:
+    """Time appending scenario N+1 to a warm CorpusStore (incremental
+    synthesis) vs a from-scratch corpus synthesis over all N+1."""
+    from repro.configs.registry import build_scenario
+    from repro.core.corpus_store import CorpusStore
+    from repro.core.synthesize import synthesize_corpus
+
+    kw = {}
+    if n_ranks:
+        kw["n_ranks"] = n_ranks
+    if steps:
+        kw["steps"] = steps
+    stores = {n: build_scenario(n, **kw) for n in scenarios}
+    base, extra = scenarios[:-1], scenarios[-1]
+
+    with tempfile.TemporaryDirectory() as td:
+        cs = CorpusStore(td)
+        for n in base:
+            cs.add_scenario(n, stores[n])
+        synthesize_corpus(store=cs)          # warm front/fit caches over N
+
+        t0 = time.perf_counter()
+        cs.add_scenario(extra, stores[extra])
+        corp_inc = synthesize_corpus(store=cs)
+        t_incr = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        corp_full = synthesize_corpus([(n, stores[n]) for n in scenarios])
+        t_full = time.perf_counter() - t0
+
+        # the streaming-corpus invariant: appending must not change what a
+        # from-scratch synthesis would have produced — hard assert always
+        diffs = []
+        for n in scenarios:
+            f_inc = corp_inc.results[n].fidelity(sample_ranks=None)
+            f_full = corp_full.results[n].fidelity(sample_ranks=None)
+            assert f_inc.comm_lossless and f_full.comm_lossless, n
+            np.testing.assert_array_equal(f_inc.delta, f_full.delta)
+            diffs.append(abs(f_inc.mean - f_full.mean))
+        assert float(np.max(diffs)) == 0.0, diffs
+
+        return [{
+            "program": f"incremental_ingest_{len(scenarios)}scenarios",
+            "added_scenario": extra,
+            "incremental_ms": round(t_incr * 1e3, 1),
+            "full_resynthesis_ms": round(t_full * 1e3, 1),
+            "incremental_speedup": round(t_full / max(t_incr, 1e-12), 2),
+            "n_refit_terminals": corp_inc.stats["n_refit_terminals"],
+            "n_cached_fits": corp_inc.stats["n_cached_fits"],
+            "n_front_reused": corp_inc.stats["n_front_reused"],
+            "n_result_reused": corp_inc.stats["n_result_reused"],
+            "solver_dispatches_incremental": corp_inc.stats["n_solver_calls"],
+            "max_delta_diff_vs_full": float(np.max(diffs)),
+        }]
+
+
 def run() -> list[dict]:
-    return [_frontend_row()] + _corpus_rows()
+    return [_frontend_row()] + _corpus_rows() + _incremental_rows()
 
 
 def smoke() -> None:
@@ -149,14 +217,51 @@ def smoke() -> None:
     print("corpus smoke OK")
 
 
+def incremental_smoke() -> None:
+    """CI incremental-corpus smoke: ingest the (reduced) full zoo one
+    scenario at a time into a tmp CorpusStore, re-synthesize after every
+    append, and assert the final per-scenario δ̄ bit-identical to the
+    batch corpus path over the same stores."""
+    from repro.configs.registry import SCENARIO_IDS, build_scenario
+    from repro.core.corpus_store import CorpusStore
+    from repro.core.synthesize import synthesize_corpus
+
+    names = list(SCENARIO_IDS)
+    stores = {n: build_scenario(n, n_ranks=4, steps=2) for n in names}
+    with tempfile.TemporaryDirectory() as td:
+        cs = CorpusStore(td)
+        for n in names:
+            cs.add_scenario(n, stores[n])
+            corp = synthesize_corpus(store=cs)     # after every append
+            print(f"ingested {n}: refit={corp.stats['n_refit_terminals']} "
+                  f"cached={corp.stats['n_cached_fits']} "
+                  f"front_reused={corp.stats['n_front_reused']}")
+        batch = synthesize_corpus([(n, stores[n]) for n in names])
+        for n in names:
+            f_inc = corp.results[n].fidelity(sample_ranks=None)
+            f_bat = batch.results[n].fidelity(sample_ranks=None)
+            assert f_inc.comm_lossless and f_bat.comm_lossless, n
+            np.testing.assert_array_equal(f_inc.delta, f_bat.delta)
+        row = _incremental_rows(("transformer-dp", "ssm-decode", "moe-ep"),
+                                n_ranks=4, steps=2)[0]
+        print(", ".join(f"{k}={v}" for k, v in row.items()))
+        assert row["max_delta_diff_vs_full"] == 0.0, row
+    print("incremental corpus smoke OK")
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced corpus path with hard asserts (CI)")
+    ap.add_argument("--incremental", action="store_true",
+                    help="one-scenario-at-a-time CorpusStore ingest vs "
+                         "batch corpus, hard asserts (CI)")
     args = ap.parse_args()
     if args.smoke:
         smoke()
+    elif args.incremental:
+        incremental_smoke()
     else:
         for r in run():
             print(", ".join(f"{k}={v}" for k, v in r.items()))

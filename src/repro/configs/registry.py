@@ -312,3 +312,20 @@ def build_scenario(name: str, n_ranks: int | None = None,
         return sess.to_store()
 
     raise KeyError(f"unknown scenario family {spec.family!r}")
+
+
+def ingest_scenarios(corpus_store, names=None, **build_kwargs) -> list[str]:
+    """Stream zoo scenarios into a
+    :class:`repro.core.corpus_store.CorpusStore` **one at a time** —
+    each :func:`build_scenario` result is appended (and incrementally
+    clustered) before the next is built, so the corpus never needs the
+    whole zoo in memory.  Scenarios already in the store are skipped
+    (re-running is an idempotent catch-up).  Returns the names added.
+    """
+    added = []
+    for name in (SCENARIO_IDS if names is None else names):
+        if name in corpus_store:
+            continue
+        corpus_store.add_scenario(name, build_scenario(name, **build_kwargs))
+        added.append(name)
+    return added

@@ -1,0 +1,479 @@
+"""Streaming corpus store: append-only directory-of-npz + incremental
+joint clustering.
+
+ROADMAP's "stream the corpus" item: the scenario zoo grows continuously,
+so the trace corpus must be an on-disk artifact that accumulates — not an
+in-memory list re-clustered from scratch per added workload.  A
+:class:`CorpusStore` is a directory::
+
+    corpus/
+      manifest.json            # ordered scenario entries + content hashes
+      scenarios/<name>.npz     # one TraceStore artifact per scenario
+      cluster_index.npz        # the running joint-clustering state
+      fit_cache.npz            # content-addressed block-combination fits
+
+**Incremental joint clustering with exact parity.**  The corpus-level
+clustering (:func:`repro.core.events.cluster_vectors` over every
+scenario's concatenated metrics) has two passes:
+
+1. log-space bucketing — per-element quantization keys, buckets numbered
+   by first appearance, per-bucket float64 sums accumulated in stream
+   order.  Under *append* this pass is exactly incremental: a new
+   scenario's events land after every existing event in the concatenated
+   stream, so matching them against the persisted bucket keys and
+   continuing the in-order ``np.add.at`` accumulation reproduces the
+   one-shot sums bit for bit (new quantization keys get fresh buckets in
+   first-appearance order — the "genuinely novel events spawn new
+   clusters" path);
+2. the greedy bucket merge (:func:`repro.core.events.merge_buckets`) —
+   O(n_buckets²·6), independent of corpus length, so the
+   :class:`ClusterIndex` re-derives cluster representatives from its
+   running bucket table on demand instead of re-touching event data.
+
+The load-bearing invariant (pinned by tests and the CI incremental job):
+``synthesize_corpus(store=...)`` after any sequence of
+:meth:`~CorpusStore.add_scenario` calls yields per-scenario δ̄
+**bit-identical** to a from-scratch ``synthesize_corpus`` over the same
+scenarios in manifest order.
+
+``remove_scenario`` breaks append-only stream order, so it rebuilds the
+index from the remaining scenarios' metrics (a partial ``.npz`` column
+load — no comm-pool parse) in manifest order; the parity invariant then
+holds for the reduced set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from repro.core.events import (
+    N_METRICS, bucketize_keys, merge_buckets, quantize_metrics,
+)
+from repro.core.proxy_search import FitResult
+from repro.core.trace_ir import TraceStore
+
+_MANIFEST_VERSION = 1
+_MANIFEST = "manifest.json"
+_INDEX = "cluster_index.npz"
+_FITS = "fit_cache.npz"
+_SCENARIO_DIR = "scenarios"
+
+
+def _atomic_npz_write(path: Path, writer) -> None:
+    """Write-then-rename so a crash mid-write never truncates the live
+    file (the same pattern the manifest uses)."""
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        writer(f)
+    tmp.replace(path)
+
+
+# ---------------------------------------------------------------------------
+# incremental joint-clustering index
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusterIndex:
+    """Running corpus-clustering state: the pass-1 bucket table plus the
+    per-scenario bucket assignments, in ingestion order."""
+
+    rel_tol: float
+    keys: np.ndarray                      # (n_buckets, 6) int64 quant keys
+    sums: np.ndarray                      # (n_buckets, 6) float64 running
+    counts: np.ndarray                    # (n_buckets,) int64
+    buckets: dict[str, np.ndarray]        # scenario -> per-row bucket id
+
+    def __post_init__(self):
+        self._derived: tuple[np.ndarray, dict[int, np.ndarray]] | None = None
+
+    @classmethod
+    def empty(cls, rel_tol: float = 0.05) -> "ClusterIndex":
+        return cls(rel_tol=rel_tol,
+                   keys=np.zeros((0, N_METRICS), dtype=np.int64),
+                   sums=np.zeros((0, N_METRICS), dtype=np.float64),
+                   counts=np.zeros(0, dtype=np.int64),
+                   buckets={})
+
+    @property
+    def n_buckets(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.derive()[1])
+
+    # -- ingest ----------------------------------------------------------------
+
+    def ingest(self, name: str, metrics: np.ndarray) -> None:
+        """Append one scenario's compute metrics to the running bucket
+        table — the incremental half of ``cluster_vectors`` pass 1.
+
+        Rows matching a persisted quantization key join that bucket (the
+        float64 sum continues exactly where the one-shot accumulation
+        would be); novel keys get fresh buckets numbered by first
+        appearance, exactly as the concatenated stream would number them.
+        """
+        if name in self.buckets:
+            raise ValueError(f"scenario {name!r} already in cluster index")
+        metrics = np.asarray(metrics, dtype=np.float64)
+        if metrics.shape[0] == 0:
+            self.buckets[name] = np.zeros(0, dtype=np.int64)
+            return
+        local_ids, uniq = bucketize_keys(
+            quantize_metrics(metrics, self.rel_tol))
+        by_key = {k.tobytes(): i for i, k in enumerate(self.keys)}
+        gids = np.empty(len(uniq), dtype=np.int64)
+        novel: list[np.ndarray] = []
+        for i, k in enumerate(uniq):
+            kb = k.tobytes()
+            gid = by_key.get(kb)
+            if gid is None:
+                gid = len(by_key)
+                by_key[kb] = gid
+                novel.append(k)
+            gids[i] = gid
+        if novel:
+            self.keys = np.concatenate([self.keys, np.stack(novel)])
+            self.sums = np.concatenate(
+                [self.sums, np.zeros((len(novel), N_METRICS))])
+            self.counts = np.concatenate(
+                [self.counts, np.zeros(len(novel), dtype=np.int64)])
+        bucket_ids = gids[local_ids]
+        # np.add.at is an unbuffered in-order accumulation: continuing it
+        # on the persisted sums reproduces the one-shot concatenated-stream
+        # accumulation bit for bit (the appended rows come last either way)
+        np.add.at(self.sums, bucket_ids, metrics)
+        self.counts = self.counts + np.bincount(bucket_ids,
+                                                minlength=self.n_buckets)
+        self.buckets[name] = bucket_ids
+        self._derived = None
+
+    @classmethod
+    def rebuild(cls, rel_tol: float,
+                scenario_metrics: Sequence[tuple[str, np.ndarray]],
+                ) -> "ClusterIndex":
+        """Fresh index over the given scenarios in order — the one-shot
+        semantics, used after removal."""
+        idx = cls.empty(rel_tol)
+        for name, metrics in scenario_metrics:
+            idx.ingest(name, metrics)
+        return idx
+
+    # -- derivation ------------------------------------------------------------
+
+    def derive(self) -> tuple[np.ndarray, dict[int, np.ndarray]]:
+        """(bucket→cluster remap, cluster representatives) — pass 2 of
+        ``cluster_vectors`` over the running bucket table.  Cached until
+        the next ingest."""
+        if self._derived is None:
+            if self.n_buckets == 0:
+                self._derived = (np.zeros(0, dtype=np.int64), {})
+            else:
+                self._derived = merge_buckets(self.sums, self.counts,
+                                              self.rel_tol)
+        return self._derived
+
+    def assignments(self, name: str) -> np.ndarray:
+        """Cluster id per compute row of one scenario (aligned with its
+        ``TraceStore.metrics``)."""
+        remap, _ = self.derive()
+        return remap[self.buckets[name]]
+
+    # -- persistence -----------------------------------------------------------
+
+    def save(self, path, order: Sequence[str]) -> None:
+        """Persist as npz (atomically: tmp + rename); per-scenario bucket
+        arrays are concatenated in ``order`` (the manifest order) with an
+        extents array."""
+        order = list(order)
+        chunks = [self.buckets[n] for n in order]
+        extents = np.cumsum([0] + [len(c) for c in chunks])
+        flat = (np.concatenate(chunks) if chunks
+                else np.zeros(0, dtype=np.int64))
+        meta = json.dumps({"rel_tol": self.rel_tol, "order": order})
+
+        def write(f):
+            np.savez(f, keys=self.keys, sums=self.sums, counts=self.counts,
+                     bucket_ids=flat, bucket_extents=extents,
+                     meta=np.asarray(meta))
+
+        _atomic_npz_write(Path(path), write)
+
+    @classmethod
+    def load(cls, path) -> "ClusterIndex":
+        with np.load(path) as z:
+            meta = json.loads(str(z["meta"]))
+            order = meta["order"]
+            flat = z["bucket_ids"].astype(np.int64)
+            extents = z["bucket_extents"].astype(np.int64)
+            buckets = {n: flat[extents[i]:extents[i + 1]]
+                       for i, n in enumerate(order)}
+            return cls(rel_tol=float(meta["rel_tol"]),
+                       keys=z["keys"].astype(np.int64),
+                       sums=z["sums"].astype(np.float64),
+                       counts=z["counts"].astype(np.int64),
+                       buckets=buckets)
+
+
+# ---------------------------------------------------------------------------
+# content-addressed fit cache
+# ---------------------------------------------------------------------------
+
+
+class FitCache:
+    """Persistent ``key -> FitResult`` map for block-combination fits.
+
+    Keys are content hashes of the exact fit inputs (target vector bytes,
+    count_scale, calibration-basis fingerprint, solver grid — built by
+    ``repro.core.synthesize``), so a cached fit is valid wherever its key
+    matches regardless of which table union or scenario produced it; the
+    corpus terminal-table fingerprint is recorded in the manifest for
+    observability and coarse invalidation."""
+
+    def __init__(self):
+        self._fits: dict[str, FitResult] = {}
+
+    def __len__(self):
+        return len(self._fits)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._fits
+
+    def get(self, key: str) -> FitResult | None:
+        return self._fits.get(key)
+
+    def put(self, key: str, fr: FitResult) -> None:
+        self._fits[key] = fr
+
+    def save(self, path) -> None:
+        keys = list(self._fits)
+        if not keys:
+            Path(path).unlink(missing_ok=True)
+            return
+        frs = [self._fits[k] for k in keys]
+
+        def write(f):
+            np.savez(
+                f,
+                keys=np.asarray(keys),
+                x=np.stack([np.asarray(fr.x, dtype=np.int64) for fr in frs]),
+                predicted=np.stack([fr.predicted for fr in frs]),
+                target=np.stack([fr.target for fr in frs]),
+                residual=np.asarray([fr.residual for fr in frs]),
+                rel_err=np.stack([fr.per_metric_rel_err for fr in frs]),
+                unroll=np.asarray([fr.unroll for fr in frs], dtype=np.int64))
+
+        _atomic_npz_write(Path(path), write)
+
+    @classmethod
+    def load(cls, path) -> "FitCache":
+        cache = cls()
+        with np.load(path) as z:
+            for i, k in enumerate(z["keys"].tolist()):
+                cache._fits[str(k)] = FitResult(
+                    x=z["x"][i].astype(np.int64),
+                    predicted=z["predicted"][i].astype(np.float64),
+                    target=z["target"][i].astype(np.float64),
+                    residual=float(z["residual"][i]),
+                    per_metric_rel_err=z["rel_err"][i].astype(np.float64),
+                    unroll=int(z["unroll"][i]))
+        return cache
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
+
+
+class CorpusStore:
+    """Append-only on-disk trace corpus with incremental joint clustering.
+
+    ::
+
+        cs = CorpusStore("corpus/")            # opens or creates
+        cs.add_scenario("transformer-dp", store)
+        corp = synthesize_corpus(store=cs)     # incremental synthesis
+
+    Scenario order is ingestion order (the manifest list); the clustering
+    and the δ̄-parity invariant are defined relative to it.
+    """
+
+    def __init__(self, root, rel_tol: float | None = None):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        (self.root / _SCENARIO_DIR).mkdir(exist_ok=True)
+        self._stores: dict[str, TraceStore] = {}
+        #: in-memory front-half memo used by incremental synthesis
+        #: (grammar objects are not persistable; the on-disk caches are
+        #: the cluster index and the fit cache)
+        self.memo: dict = {}
+
+        mpath = self.root / _MANIFEST
+        if mpath.exists():
+            manifest = json.loads(mpath.read_text())
+            if manifest.get("version") != _MANIFEST_VERSION:
+                raise ValueError(
+                    f"unsupported corpus manifest version "
+                    f"{manifest.get('version')!r} in {mpath}")
+            if rel_tol is not None and rel_tol != manifest["rel_tol"]:
+                raise ValueError(
+                    f"corpus at {self.root} was built with rel_tol="
+                    f"{manifest['rel_tol']}, asked to open with {rel_tol}")
+            self.manifest = manifest
+        else:
+            self.manifest = {"version": _MANIFEST_VERSION,
+                             "rel_tol": 0.05 if rel_tol is None else rel_tol,
+                             "scenarios": [],
+                             "table_fingerprint": None}
+            self._write_manifest()
+
+        self.index = self._load_or_rebuild_index()
+        fpath = self.root / _FITS
+        try:
+            self.fits = FitCache.load(fpath) if fpath.exists() else FitCache()
+        except Exception:
+            # fits are content-addressed pure derivations: a corrupt cache
+            # costs a re-solve, never correctness — start empty
+            self.fits = FitCache()
+
+    def _load_or_rebuild_index(self) -> ClusterIndex:
+        """Load the persisted cluster index, validating it against the
+        manifest (the source of truth).  A missing, corrupt, or stale
+        index — e.g. a crash between the two persist writes — is rebuilt
+        from the scenario artifacts, so the store self-heals instead of
+        silently serving assignments inconsistent with its contents."""
+        ipath = self.root / _INDEX
+        names = self.names
+        if ipath.exists():
+            try:
+                idx = ClusterIndex.load(ipath)
+                if idx.rel_tol == self.rel_tol \
+                        and set(idx.buckets) == set(names):
+                    return idx
+            except Exception:
+                pass
+        idx = ClusterIndex.rebuild(
+            self.rel_tol, [(n, self._metrics_of(n)) for n in names])
+        if names:
+            idx.save(ipath, names)
+        return idx
+
+    # -- basic accessors -------------------------------------------------------
+
+    @property
+    def rel_tol(self) -> float:
+        return float(self.manifest["rel_tol"])
+
+    @property
+    def names(self) -> list[str]:
+        return [e["name"] for e in self.manifest["scenarios"]]
+
+    def __len__(self) -> int:
+        return len(self.manifest["scenarios"])
+
+    def __contains__(self, name: str) -> bool:
+        return any(e["name"] == name for e in self.manifest["scenarios"])
+
+    def __iter__(self) -> Iterator[tuple[str, TraceStore]]:
+        for name in self.names:
+            yield name, self.load_scenario(name)
+
+    def _entry(self, name: str) -> dict:
+        for e in self.manifest["scenarios"]:
+            if e["name"] == name:
+                return e
+        raise KeyError(f"scenario {name!r} not in corpus")
+
+    def content_hash(self, name: str) -> str:
+        return self._entry(name)["content_hash"]
+
+    def scenario_path(self, name: str) -> Path:
+        return self.root / _SCENARIO_DIR / f"{name}.npz"
+
+    # -- mutation --------------------------------------------------------------
+
+    def add_scenario(self, name: str, store: TraceStore) -> str:
+        """Append one scenario: write its npz, extend the cluster index
+        incrementally, record its content hash.  Returns the hash."""
+        if name in self:
+            raise ValueError(f"scenario {name!r} already in corpus")
+        if "/" in name or name in (".", ".."):
+            raise ValueError(f"invalid scenario name {name!r}")
+        path = store.save(self.scenario_path(name))
+        chash = store.content_hash()
+        self.index.ingest(name, store.metrics)
+        self.manifest["scenarios"].append({
+            "name": name,
+            "file": str(path.relative_to(self.root)),
+            "content_hash": chash,
+            "n_ranks": store.n_ranks,
+            "n_events": store.n_events,
+            "n_compute_events": store.n_compute_events,
+        })
+        self._stores[name] = store
+        self._persist()
+        return chash
+
+    def remove_scenario(self, name: str) -> None:
+        """Drop a scenario and rebuild the cluster index over the
+        remaining set (removal breaks append-only stream order, so the
+        bucket table is re-accumulated from the survivors' metrics via a
+        partial column load — still no comm-pool parse, no re-synthesis)."""
+        entry = self._entry(name)
+        self.manifest["scenarios"].remove(entry)
+        self._stores.pop(name, None)
+        self.scenario_path(name).unlink(missing_ok=True)
+        self.index = ClusterIndex.rebuild(
+            self.rel_tol,
+            [(n, self._metrics_of(n)) for n in self.names])
+        self._persist()
+
+    def _metrics_of(self, name: str) -> np.ndarray:
+        cached = self._stores.get(name)
+        if cached is not None:
+            return cached.metrics
+        cols = TraceStore.load_columns(self.root / self._entry(name)["file"],
+                                       ["metrics"])
+        return cols["metrics"]
+
+    def load_scenario(self, name: str) -> TraceStore:
+        st = self._stores.get(name)
+        if st is None:
+            st = TraceStore.load(self.root / self._entry(name)["file"])
+            self._stores[name] = st
+        return st
+
+    # -- clustering view -------------------------------------------------------
+
+    def cluster_assignments(self) -> tuple[dict[str, np.ndarray],
+                                           dict[int, np.ndarray]]:
+        """Per-scenario cluster ids (aligned to each scenario's metrics
+        rows) + the joint cluster representatives — bit-identical to
+        ``cluster_vectors`` over the manifest-order concatenation."""
+        ids = {n: self.index.assignments(n) for n in self.names}
+        return ids, self.index.derive()[1]
+
+    # -- persistence -----------------------------------------------------------
+
+    def _write_manifest(self) -> None:
+        tmp = self.root / (_MANIFEST + ".tmp")
+        tmp.write_text(json.dumps(self.manifest, indent=1, sort_keys=True))
+        tmp.replace(self.root / _MANIFEST)
+
+    def _persist(self) -> None:
+        self._write_manifest()
+        self.index.save(self.root / _INDEX, self.names)
+
+    def save_fits(self, table_fingerprint: str | None = None) -> None:
+        """Persist the fit cache (called by incremental synthesis after a
+        solve) and record the corpus table version in the manifest."""
+        if table_fingerprint is not None:
+            self.manifest["table_fingerprint"] = table_fingerprint
+            self._write_manifest()
+        self.fits.save(self.root / _FITS)

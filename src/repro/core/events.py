@@ -160,34 +160,18 @@ def is_compute(ev: Event) -> bool:
 # ---------------------------------------------------------------------------
 
 
-def cluster_vectors(metrics: np.ndarray, rel_tol: float = 0.05,
-                    ) -> tuple[np.ndarray, dict[int, np.ndarray]]:
-    """Columnar clustering of 6-metric vectors: the vectorized hot path.
+def quantize_metrics(metrics: np.ndarray, rel_tol: float = 0.05,
+                     ) -> np.ndarray:
+    """Log-space quantization keys, ``(n, N_METRICS)`` int64.
 
-    ``metrics`` is ``(n_events, N_METRICS)`` float64.  Two passes, both
-    deterministic in stream order:
-
-    1. log-space bucketing — each element quantizes to
-       ``floor(log(v + 1) / log1p(rel_tol))`` (``-1`` for non-positive
-       metrics), buckets are numbered by first appearance, and per-bucket
-       sums accumulate in stream order (``np.add.at`` is an unbuffered
-       in-order accumulation, so the float64 addition order matches the
-       per-event loop it replaced bit for bit);
-    2. a greedy merge of buckets whose mean vectors agree within
-       ``rel_tol`` on every metric, in bucket-id order — so near-identical
-       events straddling a bucket boundary still unify (the paper's
-       "threshold to cluster similar computation events").
-
-    Returns ``(cluster_ids, reps)``: one cluster id per input row and the
-    weighted-mean representative vector per cluster.
+    Each element quantizes to ``floor(log(v + 1) / log1p(rel_tol))``
+    (``-1`` for non-positive metrics).  Pass 1 of the clustering; also the
+    bucket identity the incremental :class:`repro.core.corpus_store.
+    ClusterIndex` matches newly ingested events against.
     """
     metrics = np.asarray(metrics, dtype=np.float64)
     if metrics.ndim != 2 or metrics.shape[1] != N_METRICS:
         raise ValueError(f"expected (n, {N_METRICS}) metrics array")
-    n = metrics.shape[0]
-    if n == 0:
-        return np.zeros(0, dtype=np.int64), {}
-
     width = math.log1p(rel_tol)
     q = np.full(metrics.shape, -1, dtype=np.int64)
     pos = metrics > 0
@@ -196,21 +180,40 @@ def cluster_vectors(metrics: np.ndarray, rel_tol: float = 0.05,
     # platform by the frontend_reference parity tests (a 1-ULP divergence
     # at a bucket boundary would fail them loudly, not silently)
     q[pos] = np.floor(np.log(metrics[pos] + 1.0) / width).astype(np.int64)
+    return q
 
+
+def bucketize_keys(q: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Number quantization keys by first appearance in stream order.
+
+    Returns ``(bucket_ids, uniq_keys)`` where ``uniq_keys[b]`` is the key
+    of bucket ``b`` (buckets ordered by first appearance — the order the
+    greedy merge pass consumes them in).
+    """
     uq, first, inv = np.unique(q, axis=0, return_index=True,
                                return_inverse=True)
     inv = inv.reshape(-1)   # some numpy versions return (n, 1) for axis=0
     order = np.argsort(first, kind="stable")   # buckets by first appearance
     bucket_of = np.empty(len(uq), dtype=np.int64)
     bucket_of[order] = np.arange(len(uq))
-    bucket_ids = bucket_of[inv]
+    return bucket_of[inv], uq[order]
 
-    n_buckets = len(uq)
-    sums = np.zeros((n_buckets, N_METRICS), dtype=np.float64)
-    np.add.at(sums, bucket_ids, metrics)
-    counts = np.bincount(bucket_ids, minlength=n_buckets)
 
-    # merge close buckets (greedy, deterministic by bucket id)
+def merge_buckets(sums: np.ndarray, counts: np.ndarray,
+                  rel_tol: float = 0.05,
+                  ) -> tuple[np.ndarray, dict[int, np.ndarray]]:
+    """Greedy merge of buckets whose mean vectors agree within ``rel_tol``
+    on every metric, in bucket-id order — so near-identical events
+    straddling a bucket boundary still unify (the paper's "threshold to
+    cluster similar computation events").
+
+    Pass 2 of the clustering, O(n_buckets²·6) — independent of trace
+    length, which is what lets the incremental corpus index re-derive
+    cluster representatives from its running bucket table without ever
+    re-touching event data.  Returns ``(remap, reps)``: the bucket→cluster
+    map and the weighted-mean representative per cluster.
+    """
+    n_buckets = len(counts)
     remap = np.empty(n_buckets, dtype=np.int64)
     cluster_reps: list[np.ndarray] = []
     cluster_w: list[int] = []
@@ -228,10 +231,43 @@ def cluster_vectors(metrics: np.ndarray, rel_tol: float = 0.05,
                 break
         if not placed:
             remap[b] = len(cluster_reps)
-            cluster_reps.append(v.copy())
+            cluster_reps.append(np.array(v, dtype=np.float64, copy=True))
             cluster_w.append(int(counts[b]))
-
     reps = {cid: rep for cid, rep in enumerate(cluster_reps)}
+    return remap, reps
+
+
+def cluster_vectors(metrics: np.ndarray, rel_tol: float = 0.05,
+                    ) -> tuple[np.ndarray, dict[int, np.ndarray]]:
+    """Columnar clustering of 6-metric vectors: the vectorized hot path.
+
+    ``metrics`` is ``(n_events, N_METRICS)`` float64.  Two passes, both
+    deterministic in stream order:
+
+    1. log-space bucketing (:func:`quantize_metrics` +
+       :func:`bucketize_keys`) — buckets are numbered by first appearance,
+       and per-bucket sums accumulate in stream order (``np.add.at`` is an
+       unbuffered in-order accumulation, so the float64 addition order
+       matches the per-event loop it replaced bit for bit);
+    2. the greedy bucket merge (:func:`merge_buckets`).
+
+    Returns ``(cluster_ids, reps)``: one cluster id per input row and the
+    weighted-mean representative vector per cluster.
+    """
+    metrics = np.asarray(metrics, dtype=np.float64)
+    if metrics.ndim != 2 or metrics.shape[1] != N_METRICS:
+        raise ValueError(f"expected (n, {N_METRICS}) metrics array")
+    n = metrics.shape[0]
+    if n == 0:
+        return np.zeros(0, dtype=np.int64), {}
+
+    bucket_ids, uq = bucketize_keys(quantize_metrics(metrics, rel_tol))
+    n_buckets = len(uq)
+    sums = np.zeros((n_buckets, N_METRICS), dtype=np.float64)
+    np.add.at(sums, bucket_ids, metrics)
+    counts = np.bincount(bucket_ids, minlength=n_buckets)
+
+    remap, reps = merge_buckets(sums, counts, rel_tol)
     return remap[bucket_ids], reps
 
 

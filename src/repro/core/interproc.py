@@ -113,8 +113,31 @@ def corpus_terminal_table(programs: Sequence[MergedProgram],
     comm terminals unify across scenarios, so one block-combination fit per
     corpus terminal covers every scenario that uses it.  Returns the global
     table plus one per-scenario ``{scenario gid -> corpus gid}`` map.
+    The union's identity (:func:`table_fingerprint`) versions downstream
+    caches: a fit cached under one table version is only reusable while the
+    terminal it fits still means the same thing.
     """
     return merge_terminal_tables([p.table for p in programs])
+
+
+def table_fingerprint(table: TerminalTable) -> str:
+    """Content version of a terminal table: sha256 over the ordered
+    terminal keys.
+
+    Two unions with the same fingerprint assign identical meanings to
+    every gid prefix they share, so per-terminal artifacts (block-
+    combination fits, codegen combos) keyed by ``(fingerprint-compatible
+    terminal key, target)`` survive incremental re-unions; any semantic
+    drift (a cluster id re-used for a different behaviour) changes the
+    fingerprint and invalidates them.
+    """
+    import hashlib
+
+    h = hashlib.sha256()
+    for ev in table.events:
+        h.update(ev.key().encode())
+        h.update(b"\x00")
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------

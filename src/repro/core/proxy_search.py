@@ -27,6 +27,7 @@ Two solvers:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import numpy as np
@@ -324,20 +325,19 @@ def choose_solver(n_targets: int, solver: str = "auto") -> str:
 # ---------------------------------------------------------------------------
 
 
-def _pgd_grid(targets: np.ndarray, bss: np.ndarray,
-              iters: int = 400) -> np.ndarray:
-    """Batched PGD over (target, substituted-matrix) pairs.
+@functools.lru_cache(maxsize=None)
+def _pgd_solver(iters: int):
+    """Memoized ``jit(vmap)`` PGD solver for a given iteration count.
 
-    One ``jit(vmap)`` device dispatch solves every row: ``targets`` is
-    ``(n, 6)``, ``bss`` the matching ``(n, 6, 11)`` substituted block
-    matrices (rows may repeat a matrix, e.g. the unroll grid).  Returns
-    the real-valued substituted solutions ``(n, 11)``."""
+    Built once per ``iters`` so repeated ``fit_batch`` calls (the
+    incremental corpus path re-solves small miss batches per append) hit
+    the jit executable cache instead of recompiling per call; column
+    count and batch shape are read from the traced arguments."""
     import jax
     import jax.numpy as jnp
 
-    n_cols = bss.shape[-1]
-
     def solve_one(t, bs):
+        n_cols = bs.shape[-1]
         w = jnp.where(t > 0, 1.0 / jnp.maximum(t, _EPS),
                       0.1 / jnp.maximum(jnp.mean(bs[:, :9], axis=1), _EPS))
         a = bs * w[:, None]
@@ -361,8 +361,20 @@ def _pgd_grid(targets: np.ndarray, bss: np.ndarray,
         y, _ = jax.lax.scan(step, y0, None, length=iters)
         return y
 
-    ys = jax.jit(jax.vmap(solve_one))(jnp.asarray(targets),
-                                      jnp.asarray(bss))
+    return jax.jit(jax.vmap(solve_one))
+
+
+def _pgd_grid(targets: np.ndarray, bss: np.ndarray,
+              iters: int = 400) -> np.ndarray:
+    """Batched PGD over (target, substituted-matrix) pairs.
+
+    One ``jit(vmap)`` device dispatch solves every row: ``targets`` is
+    ``(n, 6)``, ``bss`` the matching ``(n, 6, 11)`` substituted block
+    matrices (rows may repeat a matrix, e.g. the unroll grid).  Returns
+    the real-valued substituted solutions ``(n, 11)``."""
+    import jax.numpy as jnp
+
+    ys = _pgd_solver(int(iters))(jnp.asarray(targets), jnp.asarray(bss))
     return np.asarray(ys, dtype=np.float64)
 
 

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import ast
 import dataclasses
+import hashlib
 import json
 from pathlib import Path
 from typing import Sequence
@@ -280,6 +281,25 @@ class TraceStore:
             np.add.at(out, rank_of[comp], self.metrics[self.tokens[comp]])
         return out
 
+    # -- content identity ------------------------------------------------------
+
+    def content_hash(self) -> str:
+        """Deterministic sha256 over the full store content (tokens,
+        extents, metrics, ingested cluster ids, comm keys, axis sizes).
+
+        Two stores with equal content hash synthesize identically; the
+        corpus store keys its manifest entries and fit caches on it.
+        """
+        h = hashlib.sha256()
+        for arr in (self.tokens, self.extents, self.metrics,
+                    self.cluster_ids):
+            h.update(np.ascontiguousarray(arr).tobytes())
+        for ev in self.comm_pool:
+            h.update(ev.key().encode())
+            h.update(b"\x00")
+        h.update(json.dumps(self.axis_sizes, sort_keys=True).encode())
+        return h.hexdigest()
+
     # -- offline artifacts (.npz) ----------------------------------------------
 
     def save(self, path) -> Path:
@@ -299,6 +319,28 @@ class TraceStore:
                      metrics=self.metrics, cluster_ids=self.cluster_ids,
                      comm=comm_arr, meta=np.asarray(meta))
         return path
+
+    @staticmethod
+    def load_columns(path, names: Sequence[str]) -> dict[str, np.ndarray]:
+        """Partial load: read only the named arrays (``tokens`` /
+        ``extents`` / ``metrics`` / ``cluster_ids``) from a saved store
+        without materializing the comm pool (``ast.literal_eval`` per comm
+        event is the slow part of a full :meth:`load`).  The cluster-index
+        rebuild path reads just ``metrics`` this way.
+        """
+        valid = {"tokens", "extents", "metrics", "cluster_ids"}
+        bad = set(names) - valid
+        if bad:
+            raise ValueError(f"unknown store columns {sorted(bad)}")
+        with np.load(path) as z:
+            meta = json.loads(str(z["meta"]))
+            version = meta.get("version")
+            if version != _NPZ_VERSION:
+                raise ValueError(
+                    f"unsupported trace store version {version!r} in {path}"
+                    f" (this build reads version {_NPZ_VERSION})")
+            dtypes = {"metrics": np.float64}
+            return {n: z[n].astype(dtypes.get(n, np.int64)) for n in names}
 
     @classmethod
     def load(cls, path) -> "TraceStore":

@@ -1,24 +1,31 @@
-"""Hypothesis property tests for the QP block-combination search.
+"""Property tests for the QP block-combination search.
 
-Split from test_blocks_qp.py so the plain unit tests there always run;
-this module (alone) skips when hypothesis is absent."""
+Split from test_blocks_qp.py so the plain unit tests there always run.
+The fit-accuracy property also always runs, over a seeded deterministic
+corpus of block mixes; only the hypothesis-randomized exploration skips
+when hypothesis is absent (the perpetual-skip audit: the gating condition
+is the optional dependency, not the JAX floor).
+"""
 import numpy as np
 import pytest
-
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis (see requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
 
 from repro.core import blocks as B
 from repro.core.proxy_search import fit_combination, rel_error
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised in bare envs
+    HAVE_HYPOTHESIS = False
 
-@given(st.lists(st.integers(0, 1000), min_size=9, max_size=9),
-       st.integers(0, 500), st.integers(0, 500))
-@settings(max_examples=30, deadline=None)
-def test_fit_property_block_mixes(body, x10, slack):
-    x = np.array(body + [x10, sum(body) + slack], dtype=float)
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="randomized exploration needs hypothesis (requirements-dev.txt);"
+           " the deterministic corpus in this module still runs")
+
+
+def _check_fit(body, x10, slack):
+    x = np.array(list(body) + [x10, sum(body) + slack], dtype=float)
     b = B.calibration_matrix()
     t = b @ x
     if not np.any(t > 0):
@@ -26,3 +33,33 @@ def test_fit_property_block_mixes(body, x10, slack):
     fit = fit_combination(t)
     err = rel_error(t, fit.predicted)
     assert np.all(err[t > 0] < 0.05)
+
+
+def test_fit_examples_block_mixes():
+    """Deterministic corpus: pure single blocks, dense mixes, and seeded
+    random mixes — every target made from real block combinations must
+    fit to < 5% on its present metrics."""
+    for j in range(9):
+        body = [0] * 9
+        body[j] = 37
+        _check_fit(body, 0, 0)
+    _check_fit([11, 0, 7, 0, 3, 0, 0, 19, 2], 5, 1)
+    rng = np.random.RandomState(3)
+    for _ in range(6):
+        _check_fit(rng.randint(0, 1000, 9).tolist(),
+                   int(rng.randint(0, 500)), int(rng.randint(0, 500)))
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.lists(st.integers(0, 1000), min_size=9, max_size=9),
+           st.integers(0, 500), st.integers(0, 500))
+    @settings(max_examples=30, deadline=None)
+    def test_fit_property_block_mixes(body, x10, slack):
+        _check_fit(body, x10, slack)
+
+else:            # keep the gating visible in the test report
+
+    @needs_hypothesis
+    def test_fit_property_block_mixes():
+        raise AssertionError("unreachable: skipif guards this test")

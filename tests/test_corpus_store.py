@@ -1,0 +1,376 @@
+"""Streaming corpus store tests: on-disk layout, incremental cluster
+index, content-addressed fit cache, and the load-bearing invariant —
+incremental ``synthesize_corpus(store=...)`` is bit-identical (per-scenario
+δ̄, grammars, stats) to a from-scratch run on the same scenario set."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import proxy_search
+from repro.core.corpus_store import ClusterIndex, CorpusStore, FitCache
+from repro.core.events import CommEvent, ComputeEvent, cluster_vectors
+from repro.core.synthesize import synthesize_corpus
+from repro.core.trace_ir import TraceStore
+
+_V1 = (2.1e7, 3.3e5, 1.1e7, 8.2e3, 0., 0.)
+_V2 = (4.4e6, 1.2e4, 2.2e6, 0., 7.0, 1.0)
+_V3 = (9.9e8, 5.5e5, 3.3e7, 1.1e3, 0., 2.0)
+
+
+def _store(vectors, comm_axis="x", n_ranks=4):
+    comm = CommEvent("psum", (8,), "float32", (comm_axis,))
+    tr = []
+    for v in vectors:
+        tr += [ComputeEvent(tuple(v)), comm]
+    return TraceStore.from_rank_traces([list(tr) for _ in range(n_ranks)],
+                                       {comm_axis: n_ranks})
+
+
+def _zoo3():
+    return {"a": _store([_V1, _V2]), "b": _store([_V1, _V3]),
+            "c": _store([_V2, _V3])}
+
+
+# ---------------------------------------------------------------------------
+# store basics: layout, manifest, hashing, round trips
+# ---------------------------------------------------------------------------
+
+
+def test_add_iterate_reload(tmp_path):
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "corpus")
+    hashes = {n: cs.add_scenario(n, st) for n, st in stores.items()}
+    assert cs.names == ["a", "b", "c"]
+    assert len(cs) == 3 and "b" in cs and "zz" not in cs
+    for n, st in cs:
+        orig = stores[n]
+        assert np.array_equal(st.tokens, orig.tokens)
+        assert st.content_hash() == hashes[n] == cs.content_hash(n)
+    # a second handle reads everything back from disk
+    cs2 = CorpusStore(tmp_path / "corpus")
+    assert cs2.names == ["a", "b", "c"]
+    for n in cs2.names:
+        assert cs2.load_scenario(n).content_hash() == hashes[n]
+        assert cs2.scenario_path(n).exists()
+
+
+def test_manifest_layout(tmp_path):
+    cs = CorpusStore(tmp_path / "c")
+    cs.add_scenario("a", _store([_V1]))
+    manifest = json.loads((tmp_path / "c" / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert manifest["rel_tol"] == 0.05
+    (entry,) = manifest["scenarios"]
+    assert entry["name"] == "a"
+    assert entry["file"] == "scenarios/a.npz"
+    assert set(entry) >= {"content_hash", "n_ranks", "n_events",
+                          "n_compute_events"}
+
+
+def test_content_hash_sensitivity():
+    a, b = _store([_V1, _V2]), _store([_V1, _V2])
+    assert a.content_hash() == b.content_hash()
+    assert a.content_hash() != _store([_V2, _V1]).content_hash()
+    assert a.content_hash() != _store([_V1, _V2], n_ranks=3).content_hash()
+
+
+def test_load_columns_partial(tmp_path):
+    st = _store([_V1, _V2])
+    p = st.save(tmp_path / "t")
+    cols = TraceStore.load_columns(p, ["metrics", "cluster_ids"])
+    assert np.array_equal(cols["metrics"], st.metrics)
+    assert np.array_equal(cols["cluster_ids"], st.cluster_ids)
+    with pytest.raises(ValueError, match="unknown store columns"):
+        TraceStore.load_columns(p, ["comm"])
+
+
+def test_store_rejects_duplicates_and_bad_names(tmp_path):
+    cs = CorpusStore(tmp_path / "c")
+    cs.add_scenario("a", _store([_V1]))
+    with pytest.raises(ValueError, match="already in corpus"):
+        cs.add_scenario("a", _store([_V2]))
+    with pytest.raises(ValueError, match="invalid scenario name"):
+        cs.add_scenario("../evil", _store([_V2]))
+
+
+def test_rel_tol_pinned_by_manifest(tmp_path):
+    CorpusStore(tmp_path / "c", rel_tol=0.05)
+    CorpusStore(tmp_path / "c", rel_tol=0.05)        # matching reopen OK
+    with pytest.raises(ValueError, match="rel_tol"):
+        CorpusStore(tmp_path / "c", rel_tol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# incremental cluster index
+# ---------------------------------------------------------------------------
+
+
+def test_index_matches_oneshot_clustering(tmp_path):
+    """Per-scenario assignments + reps == cluster_vectors over the
+    manifest-order concatenation, bit for bit."""
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    for n, st in stores.items():
+        cs.add_scenario(n, st)
+    ids, reps = cs.cluster_assignments()
+
+    all_metrics = np.concatenate([stores[n].metrics for n in cs.names])
+    want_ids, want_reps = cluster_vectors(all_metrics, cs.rel_tol)
+    off = 0
+    for n in cs.names:
+        k = stores[n].n_compute_events
+        np.testing.assert_array_equal(ids[n], want_ids[off:off + k])
+        off += k
+    assert set(reps) == set(want_reps)
+    for cid in reps:
+        np.testing.assert_array_equal(reps[cid], want_reps[cid])
+
+
+def test_index_novel_events_spawn_new_clusters(tmp_path):
+    cs = CorpusStore(tmp_path / "c")
+    cs.add_scenario("a", _store([_V1, _V2]))
+    n0 = cs.index.n_clusters
+    cs.add_scenario("b", _store([_V1, _V2]))     # nothing novel
+    assert cs.index.n_clusters == n0
+    cs.add_scenario("c", _store([_V3]))          # genuinely novel
+    assert cs.index.n_clusters == n0 + 1
+
+
+def test_index_persists_across_reopen(tmp_path):
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    for n, st in stores.items():
+        cs.add_scenario(n, st)
+    ids0, reps0 = cs.cluster_assignments()
+    cs2 = CorpusStore(tmp_path / "c")
+    ids1, reps1 = cs2.cluster_assignments()
+    for n in cs.names:
+        np.testing.assert_array_equal(ids0[n], ids1[n])
+    for cid in reps0:
+        np.testing.assert_array_equal(reps0[cid], reps1[cid])
+    # and ingest continues from the persisted state
+    cs2.add_scenario("d", _store([_V3, _V1]))
+    assert np.array_equal(cs2.index.assignments("d"),
+                          cs2.cluster_assignments()[0]["d"])
+
+
+def test_index_rejects_duplicate_ingest():
+    idx = ClusterIndex.empty()
+    idx.ingest("a", np.asarray([_V1]))
+    with pytest.raises(ValueError, match="already"):
+        idx.ingest("a", np.asarray([_V1]))
+
+
+def test_index_empty_scenario():
+    idx = ClusterIndex.empty()
+    idx.ingest("empty", np.zeros((0, 6)))
+    assert idx.assignments("empty").shape == (0,)
+    assert idx.n_clusters == 0
+
+
+def test_remove_scenario_rebuilds(tmp_path):
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    for n, st in stores.items():
+        cs.add_scenario(n, st)
+    cs.remove_scenario("b")
+    assert cs.names == ["a", "c"] and not cs.scenario_path("b").exists()
+    # index now equals one-shot clustering over the survivors
+    all_metrics = np.concatenate([stores[n].metrics for n in ("a", "c")])
+    want_ids, _ = cluster_vectors(all_metrics, cs.rel_tol)
+    ids, _ = cs.cluster_assignments()
+    np.testing.assert_array_equal(
+        np.concatenate([ids["a"], ids["c"]]), want_ids)
+    with pytest.raises(KeyError):
+        cs.content_hash("b")
+
+
+# ---------------------------------------------------------------------------
+# the load-bearing invariant: incremental == from-scratch, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _assert_same_corpus(corp_inc, corp_bat, names):
+    for n in names:
+        ri, rb = corp_inc.results[n], corp_bat.results[n]
+        assert ri.merged.rules == rb.merged.rules
+        assert ri.merged.mains == rb.merged.mains
+        assert [e.key() for e in ri.merged.table.events] == \
+            [e.key() for e in rb.merged.table.events]
+        fi = ri.fidelity(sample_ranks=None)
+        fb = rb.fidelity(sample_ranks=None)
+        assert fi.comm_lossless and fb.comm_lossless
+        np.testing.assert_array_equal(fi.delta, fb.delta)
+
+
+def test_incremental_append_bit_identical(tmp_path):
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    cs.add_scenario("a", stores["a"])
+    cs.add_scenario("b", stores["b"])
+    synthesize_corpus(store=cs)                   # warm caches over {a, b}
+    cs.add_scenario("c", stores["c"])
+    corp_inc = synthesize_corpus(store=cs)
+    corp_bat = synthesize_corpus([(n, stores[n]) for n in ("a", "b", "c")])
+    _assert_same_corpus(corp_inc, corp_bat, ("a", "b", "c"))
+    assert corp_inc.stats["incremental"]
+    assert corp_inc.stats["n_front_reused"] >= 2
+
+
+def test_incremental_single_dispatch_for_misses(tmp_path, monkeypatch):
+    """However many terminals are stale, at most ONE fit_batch dispatch."""
+    calls = []
+    orig = proxy_search.fit_batch
+
+    def counting(targets, *a, **kw):
+        calls.append(np.atleast_2d(targets).shape[0])
+        return orig(targets, *a, **kw)
+
+    monkeypatch.setattr(proxy_search, "fit_batch", counting)
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    for n, st in stores.items():
+        cs.add_scenario(n, st)
+    synthesize_corpus(store=cs)
+    assert len(calls) == 1
+    corp = synthesize_corpus(store=cs)            # fully cached now
+    assert len(calls) == 1                        # no new dispatch
+    assert corp.stats["n_solver_calls"] == 0
+    assert corp.stats["n_refit_terminals"] == 0
+    assert corp.stats["n_result_reused"] == 3
+
+
+def test_incremental_fit_cache_survives_reopen(tmp_path):
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    for n, st in stores.items():
+        cs.add_scenario(n, st)
+    synthesize_corpus(store=cs)
+    assert (tmp_path / "c" / "fit_cache.npz").exists()
+    cs2 = CorpusStore(tmp_path / "c")             # fresh process analog
+    corp = synthesize_corpus(store=cs2)
+    assert corp.stats["n_refit_terminals"] == 0
+    assert corp.stats["n_solver_calls"] == 0
+    corp_bat = synthesize_corpus([(n, stores[n]) for n in cs2.names])
+    _assert_same_corpus(corp, corp_bat, cs2.names)
+
+
+def test_incremental_after_remove_bit_identical(tmp_path):
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    for n, st in stores.items():
+        cs.add_scenario(n, st)
+    synthesize_corpus(store=cs)
+    cs.remove_scenario("a")
+    corp_inc = synthesize_corpus(store=cs)
+    corp_bat = synthesize_corpus([(n, stores[n]) for n in ("b", "c")])
+    _assert_same_corpus(corp_inc, corp_bat, ("b", "c"))
+
+
+def test_store_kwarg_validation(tmp_path):
+    cs = CorpusStore(tmp_path / "c")
+    cs.add_scenario("a", _store([_V1]))
+    with pytest.raises(ValueError, match="rel_tol"):
+        synthesize_corpus(store=cs, rel_tol=0.2)
+    with pytest.raises(ValueError, match="add_scenario"):
+        synthesize_corpus(["a"], store=cs)
+    with pytest.raises(ValueError, match="add_scenario"):
+        synthesize_corpus(store=cs, n_ranks=4)
+
+
+def test_duplicate_content_scenarios_assemble_separately(tmp_path):
+    """Two scenarios with identical trace content still get their own
+    named modules and out_dir entries (the result memo keys on the
+    scenario name, not just content)."""
+    cs = CorpusStore(tmp_path / "c")
+    cs.add_scenario("left", _store([_V1, _V2]))
+    cs.add_scenario("right", _store([_V1, _V2]))
+    out = tmp_path / "out"
+    corp = synthesize_corpus(store=cs, out_dir=out)
+    assert corp.results["left"].proxy.module.__name__ != \
+        corp.results["right"].proxy.module.__name__
+    assert (out / "left").is_dir() and (out / "right").is_dir()
+    corp_bat = synthesize_corpus(
+        [("left", cs.load_scenario("left")),
+         ("right", cs.load_scenario("right"))])
+    _assert_same_corpus(corp, corp_bat, ("left", "right"))
+
+
+def test_index_self_heals_when_missing_or_corrupt(tmp_path):
+    """The manifest is the source of truth: a deleted, corrupt, or stale
+    cluster_index.npz (crash between persist writes) rebuilds from the
+    scenario artifacts instead of serving inconsistent assignments."""
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    for n, st in stores.items():
+        cs.add_scenario(n, st)
+    ids0, reps0 = cs.cluster_assignments()
+
+    ipath = tmp_path / "c" / "cluster_index.npz"
+    ipath.unlink()                                  # crash: index lost
+    cs2 = CorpusStore(tmp_path / "c")
+    for n in cs.names:
+        np.testing.assert_array_equal(cs2.cluster_assignments()[0][n],
+                                      ids0[n])
+    assert ipath.exists()                           # re-persisted
+
+    ipath.write_bytes(b"not an npz")                # crash: truncated
+    cs3 = CorpusStore(tmp_path / "c")
+    for cid, rep in cs3.cluster_assignments()[1].items():
+        np.testing.assert_array_equal(rep, reps0[cid])
+
+    (tmp_path / "c" / "fit_cache.npz").write_bytes(b"garbage")
+    cs4 = CorpusStore(tmp_path / "c")               # corrupt fits: drop
+    corp = synthesize_corpus(store=cs4)             # re-solves cleanly
+    assert corp.stats["n_refit_terminals"] == corp.stats["n_compute_terminals"]
+
+
+def test_zoo_ingest_one_at_a_time(tmp_path):
+    """registry.ingest_scenarios streams zoo scenarios into the store and
+    is an idempotent catch-up on re-run."""
+    from repro.configs.registry import ingest_scenarios
+
+    cs = CorpusStore(tmp_path / "c")
+    added = ingest_scenarios(cs, ["transformer-dp", "ssm-decode"],
+                             n_ranks=4, steps=2)
+    assert added == ["transformer-dp", "ssm-decode"]
+    assert cs.names == ["transformer-dp", "ssm-decode"]
+    assert ingest_scenarios(cs, ["transformer-dp", "ssm-decode"],
+                            n_ranks=4, steps=2) == []
+    corp = synthesize_corpus(store=cs)
+    rep = corp.report(sample_ranks=None)
+    assert rep["all_comm_lossless"]
+    assert set(rep["scenarios"]) == {"transformer-dp", "ssm-decode"}
+
+
+# ---------------------------------------------------------------------------
+# fit cache unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_fit_cache_roundtrip(tmp_path):
+    (fr,) = proxy_search.fit_batch(np.asarray([_V1]))
+    cache = FitCache()
+    cache.put("k1", fr)
+    assert "k1" in cache and len(cache) == 1
+    p = tmp_path / "fits.npz"
+    cache.save(p)
+    back = FitCache.load(p)
+    fr2 = back.get("k1")
+    np.testing.assert_array_equal(fr2.x, fr.x)
+    np.testing.assert_array_equal(fr2.predicted, fr.predicted)
+    np.testing.assert_array_equal(fr2.target, fr.target)
+    np.testing.assert_array_equal(fr2.per_metric_rel_err,
+                                  fr.per_metric_rel_err)
+    assert fr2.residual == fr.residual and fr2.unroll == fr.unroll
+
+
+def test_fit_cache_empty_save_removes_file(tmp_path):
+    p = tmp_path / "fits.npz"
+    cache = FitCache()
+    cache.put("k", proxy_search.fit_batch(np.asarray([_V2]))[0])
+    cache.save(p)
+    assert p.exists()
+    FitCache().save(p)
+    assert not p.exists()

@@ -1,0 +1,140 @@
+"""Property tests for the streaming corpus store (sibling ``_prop``
+module per repo convention).
+
+The property: **incremental ingest in any scenario order produces the
+same cluster reps and δ̄ as one-shot clustering on the union in that
+order** — i.e. the :class:`~repro.core.corpus_store.ClusterIndex` is an
+exact streaming decomposition of ``cluster_vectors``, for every
+permutation of the corpus.
+
+The deterministic half (seeded example corpus + fixed permutations)
+always runs; only the hypothesis-randomized exploration skips when
+hypothesis is absent.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.corpus_store import ClusterIndex, CorpusStore
+from repro.core.events import CommEvent, ComputeEvent, cluster_vectors
+from repro.core.synthesize import synthesize_corpus
+from repro.core.trace_ir import TraceStore
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised in bare envs
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="randomized exploration needs hypothesis (requirements-dev.txt);"
+           " the deterministic example corpus in this module still runs")
+
+
+def _check_order_invariance(scenario_metrics, rel_tol=0.05):
+    """The property body, hypothesis-free: streaming ingest of the given
+    (name, metrics) sequence equals one-shot clustering of the
+    concatenation, bit for bit."""
+    idx = ClusterIndex.empty(rel_tol)
+    for name, metrics in scenario_metrics:
+        idx.ingest(name, metrics)
+    chunks = [m for _, m in scenario_metrics if len(m)]
+    concat = (np.concatenate(chunks) if chunks else np.zeros((0, 6)))
+    want_ids, want_reps = cluster_vectors(concat, rel_tol)
+    off = 0
+    for name, metrics in scenario_metrics:
+        k = len(metrics)
+        np.testing.assert_array_equal(idx.assignments(name),
+                                      want_ids[off:off + k])
+        off += k
+    _, reps = idx.derive()
+    assert set(reps) == set(want_reps)
+    for cid in reps:
+        np.testing.assert_array_equal(reps[cid], want_reps[cid])
+
+
+def _seeded_metrics(seed: int, n: int) -> np.ndarray:
+    """Metric rows with deliberate near-duplicates, zero columns, and
+    magnitude spread — the cases that stress bucket boundaries."""
+    rng = np.random.RandomState(seed)
+    base = np.abs(rng.lognormal(8, 4, (max(n, 1), 6)))
+    base[rng.rand(*base.shape) < 0.3] = 0.0
+    dup = base[rng.randint(0, len(base), len(base) // 2 or 1)]
+    out = np.concatenate([base, dup * (1 + 0.01 * rng.randn(*dup.shape))])
+    return np.abs(out[:n])
+
+
+# ---------------------------------------------------------------------------
+# deterministic half — always runs
+# ---------------------------------------------------------------------------
+
+
+def test_order_invariance_examples():
+    """Every permutation of a 3-scenario seeded corpus streams exactly."""
+    parts = [("s0", _seeded_metrics(0, 7)), ("s1", _seeded_metrics(1, 5)),
+             ("s2", _seeded_metrics(2, 9))]
+    for order in itertools.permutations(parts):
+        _check_order_invariance(list(order))
+
+
+def test_order_invariance_with_empty_and_singleton():
+    parts = [("empty", np.zeros((0, 6))), ("one", _seeded_metrics(3, 1)),
+             ("many", _seeded_metrics(4, 12))]
+    for order in itertools.permutations(parts):
+        _check_order_invariance(list(order))
+
+
+def test_delta_order_invariance_end_to_end(tmp_path):
+    """δ̄ half of the property: for two different ingestion orders, the
+    incremental corpus δ̄ equals the from-scratch corpus δ̄ on the union
+    in that same order."""
+    v1 = (2.1e7, 3.3e5, 1.1e7, 8.2e3, 0., 0.)
+    v2 = (4.4e6, 1.2e4, 2.2e6, 0., 7.0, 1.0)
+    v3 = (9.9e8, 5.5e5, 3.3e7, 1.1e3, 0., 2.0)
+    comm = CommEvent("psum", (8,), "float32", ("x",))
+
+    def _store(vectors):
+        tr = []
+        for v in vectors:
+            tr += [ComputeEvent(tuple(v)), comm]
+        return TraceStore.from_rank_traces([list(tr) for _ in range(3)],
+                                           {"x": 3})
+
+    stores = {"a": _store([v1, v2]), "b": _store([v2, v3]),
+              "c": _store([v3, v1])}
+    for i, order in enumerate((("a", "b", "c"), ("c", "a", "b"))):
+        cs = CorpusStore(tmp_path / f"corpus{i}")
+        for n in order:
+            cs.add_scenario(n, stores[n])
+        corp_inc = synthesize_corpus(store=cs)
+        corp_bat = synthesize_corpus([(n, stores[n]) for n in order])
+        for n in order:
+            fi = corp_inc.results[n].fidelity(sample_ranks=None)
+            fb = corp_bat.results[n].fidelity(sample_ranks=None)
+            assert fi.comm_lossless and fb.comm_lossless
+            np.testing.assert_array_equal(fi.delta, fb.delta)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis half — randomized exploration of the same property
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.lists(st.tuples(st.integers(0, 2 ** 31 - 1),
+                              st.integers(0, 16)),
+                    min_size=1, max_size=6),
+           st.floats(0.01, 0.3))
+    @settings(max_examples=60, deadline=None)
+    def test_order_invariance_property(parts, rel_tol):
+        scenario_metrics = [(f"s{i}", _seeded_metrics(seed, n))
+                            for i, (seed, n) in enumerate(parts)]
+        _check_order_invariance(scenario_metrics, rel_tol)
+
+else:            # keep the gating visible in the test report
+
+    @needs_hypothesis
+    def test_order_invariance_property():
+        raise AssertionError("unreachable: skipif guards this test")

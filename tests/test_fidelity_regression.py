@@ -1,0 +1,108 @@
+"""Golden fidelity-regression harness for the scenario zoo.
+
+Per-scenario δ̄ of the corpus-synthesized proxies is checked against the
+checked-in baseline ``artifacts/fidelity_baseline.json`` with an explicit
+one-sided tolerance: solver, clustering, or grammar changes may *improve*
+fidelity freely, but a silent regression beyond ``tolerance`` fails.
+
+Regenerate the baseline after an intentional fidelity change::
+
+    PYTHONPATH=src python tests/test_fidelity_regression.py --update-baseline
+
+The measurement is the reduced zoo (``n_ranks=4, steps=2``, all ranks
+measured) synthesized through the batch corpus path — the same joint
+clustering the production pipeline uses, so the baseline pins the whole
+front half + solver + replay stack, not just the solver.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+BASELINE_PATH = Path(__file__).resolve().parent.parent / "artifacts" \
+    / "fidelity_baseline.json"
+
+#: reduced-zoo measurement shape (keep in sync with the baseline file)
+MEASURE_KWARGS = {"n_ranks": 4, "steps": 2}
+
+#: one-sided regression allowance on per-scenario mean δ̄.  δ̄ is
+#: deterministic per platform; the slack absorbs cross-platform libm /
+#: BLAS drift, not real regressions (a solver change that costs more than
+#: this much fidelity on any scenario must update the baseline on purpose).
+TOLERANCE = 0.05
+
+
+def measure() -> dict:
+    """Per-scenario mean δ̄ + comm losslessness for the reduced zoo."""
+    from repro.core.synthesize import synthesize_corpus
+
+    corp = synthesize_corpus(**MEASURE_KWARGS)
+    out = {}
+    for sname, res in corp.results.items():
+        fid = res.fidelity(sample_ranks=None)
+        out[sname] = {"mean_delta": float(fid.mean),
+                      "comm_lossless": bool(fid.comm_lossless)}
+    return out
+
+
+def test_fidelity_no_regression():
+    assert BASELINE_PATH.exists(), (
+        f"missing {BASELINE_PATH}; regenerate with "
+        "PYTHONPATH=src python tests/test_fidelity_regression.py "
+        "--update-baseline")
+    baseline = json.loads(BASELINE_PATH.read_text())
+    assert baseline["measure_kwargs"] == MEASURE_KWARGS, (
+        "baseline was measured at a different zoo shape; regenerate it")
+    got = measure()
+
+    missing = set(got) - set(baseline["scenarios"])
+    assert not missing, (
+        f"scenarios {sorted(missing)} have no fidelity baseline; "
+        "regenerate with --update-baseline")
+
+    failures = []
+    for sname, want in baseline["scenarios"].items():
+        if sname not in got:
+            failures.append(f"{sname}: scenario disappeared from the zoo")
+            continue
+        row = got[sname]
+        if not row["comm_lossless"]:
+            failures.append(f"{sname}: comm stream no longer lossless")
+        if row["mean_delta"] > want["mean_delta"] + baseline["tolerance"]:
+            failures.append(
+                f"{sname}: mean δ̄ regressed {want['mean_delta']:.4f} -> "
+                f"{row['mean_delta']:.4f} "
+                f"(tolerance {baseline['tolerance']})")
+    assert not failures, "fidelity regression:\n  " + "\n  ".join(failures)
+
+
+def update_baseline() -> None:
+    payload = {
+        "comment": "per-scenario mean δ̄ of the reduced zoo; regenerate "
+                   "with tests/test_fidelity_regression.py "
+                   "--update-baseline after intentional fidelity changes",
+        "measure_kwargs": MEASURE_KWARGS,
+        "tolerance": TOLERANCE,
+        "scenarios": measure(),
+    }
+    BASELINE_PATH.parent.mkdir(parents=True, exist_ok=True)
+    BASELINE_PATH.write_text(json.dumps(payload, indent=1, sort_keys=True)
+                             + "\n")
+    print(f"wrote {BASELINE_PATH}:")
+    for sname, row in sorted(payload["scenarios"].items()):
+        print(f"  {sname}: mean_delta={row['mean_delta']:.4f} "
+              f"comm_lossless={row['comm_lossless']}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="re-measure the zoo and overwrite "
+                         "artifacts/fidelity_baseline.json")
+    args = ap.parse_args()
+    if args.update_baseline:
+        update_baseline()
+    else:
+        ap.error("pass --update-baseline (the check itself runs "
+                 "under pytest)")

@@ -1,16 +1,26 @@
-"""Hypothesis property tests for the space-optimized Sequitur (§2.5.2).
+"""Property tests for the space-optimized Sequitur (§2.5.2).
 
-Split from test_sequitur.py so the plain unit tests there always run;
-this module (alone) skips when hypothesis is absent."""
+Split from test_sequitur.py so the plain unit tests there always run.
+The losslessness and O(1)-loop-growth properties also always run, over a
+seeded deterministic corpus; only the hypothesis-randomized exploration
+skips when hypothesis is absent (the perpetual-skip audit: the gating
+condition is the optional dependency, not the JAX floor).
+"""
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis (see requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
-
 from repro.core.sequitur import Sequitur, compress
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised in bare envs
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="randomized exploration needs hypothesis (requirements-dev.txt);"
+           " the deterministic corpus in this module still runs")
 
 
 def expand_equals(seq):
@@ -19,17 +29,7 @@ def expand_equals(seq):
     return s
 
 
-@given(st.lists(st.integers(0, 3), max_size=120))
-@settings(max_examples=300, deadline=None)
-def test_lossless_property(seq):
-    """Core invariant: grammar expansion reproduces the input exactly."""
-    expand_equals(seq)
-
-
-@given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 9)), max_size=40))
-@settings(max_examples=200, deadline=None)
-def test_lossless_runs_property(runs):
-    """push_run with arbitrary (symbol, count) sequences stays lossless."""
+def _check_runs_lossless(runs):
     s = Sequitur()
     expect = []
     for sym, cnt in runs:
@@ -38,10 +38,7 @@ def test_lossless_runs_property(runs):
     assert s.expand() == expect
 
 
-@given(st.integers(1, 6), st.integers(1, 30), st.integers(0, 5))
-@settings(max_examples=100, deadline=None)
-def test_loop_grammar_size_constant(body_len, reps, tail):
-    """A repeated loop body compresses to size independent of rep count."""
+def _check_loop_grammar_size(body_len, reps, tail):
     rng = np.random.RandomState(body_len * 977 + tail)
     body = list(rng.randint(0, 50, body_len))
     seq = body * reps + list(rng.randint(0, 50, tail))
@@ -49,3 +46,60 @@ def test_loop_grammar_size_constant(body_len, reps, tail):
     s_many = expand_equals(body * (reps + 64) + list(rng.randint(0, 50, tail)))
     # growing the loop count must not grow the grammar by more than O(1)
     assert s_many.size() <= s.size() + 4
+
+
+def test_lossless_examples():
+    rng = np.random.RandomState(1)
+    for n in (0, 1, 2, 7, 30, 120):
+        for alphabet in (1, 2, 4):
+            expand_equals(list(rng.randint(0, alphabet, n)))
+
+
+def test_lossless_runs_examples():
+    rng = np.random.RandomState(2)
+    _check_runs_lossless([])
+    for n in (1, 5, 40):
+        _check_runs_lossless(list(zip(rng.randint(0, 3, n).tolist(),
+                                      rng.randint(1, 10, n).tolist())))
+
+
+def test_loop_grammar_size_examples():
+    for body_len, reps, tail in ((1, 1, 0), (3, 10, 2), (6, 30, 5),
+                                 (4, 17, 0), (2, 5, 3)):
+        _check_loop_grammar_size(body_len, reps, tail)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.lists(st.integers(0, 3), max_size=120))
+    @settings(max_examples=300, deadline=None)
+    def test_lossless_property(seq):
+        """Core invariant: grammar expansion reproduces the input exactly."""
+        expand_equals(seq)
+
+    @given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 9)),
+                    max_size=40))
+    @settings(max_examples=200, deadline=None)
+    def test_lossless_runs_property(runs):
+        """push_run with arbitrary (symbol, count) sequences stays lossless."""
+        _check_runs_lossless(runs)
+
+    @given(st.integers(1, 6), st.integers(1, 30), st.integers(0, 5))
+    @settings(max_examples=100, deadline=None)
+    def test_loop_grammar_size_constant(body_len, reps, tail):
+        """A repeated loop body compresses to size independent of rep count."""
+        _check_loop_grammar_size(body_len, reps, tail)
+
+else:            # keep the gating visible in the test report
+
+    @needs_hypothesis
+    def test_lossless_property():
+        raise AssertionError("unreachable: skipif guards this test")
+
+    @needs_hypothesis
+    def test_lossless_runs_property():
+        raise AssertionError("unreachable: skipif guards this test")
+
+    @needs_hypothesis
+    def test_loop_grammar_size_constant():
+        raise AssertionError("unreachable: skipif guards this test")

@@ -225,6 +225,72 @@ def test_signature_dedup_shares_grammar_objects():
         assert len(got) == len(traces[r])
 
 
+def _random_traces(seed: int, n_ranks: int = 5):
+    """Seeded fuzz traces: lognormal metric spreads with zero columns and
+    near-duplicates, every comm kind/detail shape, per-rank stream
+    heterogeneity — the drift surface the fixed fixtures don't cover."""
+    rng = np.random.RandomState(seed)
+    kinds = [("psum", ()), ("all_gather", (0,)), ("reduce_scatter", (0,)),
+             ("all_to_all", (0, 0)), ("pmax", ()), ("pmin", ()),
+             ("broadcast", (0,)),
+             ("ppermute", ("shift", 1)),
+             ("ppermute", ("shift", 2, (0, 1, 2))),
+             ("ppermute", ("perm", ((0, 1), (1, 0))))]
+    comms = []
+    for _ in range(rng.randint(2, 7)):
+        kind, detail = kinds[rng.randint(len(kinds))]
+        shape = tuple(int(s) for s in rng.randint(1, 9,
+                                                  rng.randint(1, 4)))
+        dtype = ["float32", "bfloat16", "int32"][rng.randint(3)]
+        comms.append(CommEvent(kind, shape, dtype, ("x",), detail))
+
+    def compute():
+        v = np.abs(rng.lognormal(8, 4, 6))
+        v[rng.rand(6) < 0.35] = 0.0
+        if rng.rand() < 0.3:              # near-duplicate pressure
+            v = v * (1 + 0.01 * rng.randn(6))
+        return ComputeEvent(tuple(np.abs(v)))
+
+    traces = []
+    for r in range(n_ranks):
+        tr = []
+        for _ in range(rng.randint(3, 40)):
+            if rng.rand() < 0.45:
+                tr.append(comms[rng.randint(len(comms))])
+            else:
+                tr.append(compute())
+        if rng.rand() < 0.5:              # byte-identical SPMD siblings
+            traces.append(list(tr))
+        traces.append(tr)
+    return traces[:n_ranks]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 7, 11, 23, 42])
+def test_compress_store_matches_reference_randomized(seed):
+    """Drift oracle under seeded fuzz (not just the fixed fixtures): the
+    columnar front half must stay byte-identical to the preserved
+    per-event reference on arbitrary metric/comm streams."""
+    traces = _random_traces(seed)
+    g2, m2, ids2, reps2 = ref.compress_rank_traces_reference(traces)
+    st = TraceStore.from_rank_traces(traces, {"x": len(traces)})
+    g1, m1, ids1, reps1 = compress_store(st)
+    assert ids1 == ids2
+    assert [g.rules for g in g1] == [g.rules for g in g2]
+    assert [[e.key() for e in g.table.events] for g in g1] == \
+        [[e.key() for e in g.table.events] for g in g2]
+    assert m1.rules == m2.rules
+    assert m1.mains == m2.mains
+    assert m1.cluster_ranks == m2.cluster_ranks
+    assert [e.key() for e in m1.table.events] == \
+        [e.key() for e in m2.table.events]
+    assert set(reps1) == set(reps2)
+    for k in reps1:
+        np.testing.assert_array_equal(reps1[k], reps2[k])
+    # size accounting rides the same streams: keep it drift-pinned too
+    want_bytes = sum(len(ev.key()) + 1 for tr in traces for ev in tr)
+    assert st.raw_trace_bytes() == want_bytes
+
+
 def test_from_template_equals_per_rank_ingestion():
     """Template specialization (rawperm participation classes) produces the
     identical store as materializing per-rank traces first."""
