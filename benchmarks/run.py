@@ -45,6 +45,11 @@ def main() -> None:
     existing.update(results)
     out.write_text(json.dumps(existing, indent=1))
     print(f"\nwrote {out}")
+    if "synthesize_time" in results:
+        # one snapshot writer: merge + BENCH_5.json pinning live in the
+        # suite module so both entry points emit identical artifacts
+        from benchmarks.synthesize_time import write_artifacts
+        write_artifacts(results["synthesize_time"], out_dir=out.parent)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Synthesis front-end wall-clock: per-event baseline vs columnar trace IR.
 
-Two tiers:
+Tiers:
 
 1. **frontend_64ranks** — a 64-rank synthetic trace (~51k events, 8
    near-identical compute variants, per-rank heterogeneity every 16th
@@ -12,29 +12,59 @@ Two tiers:
    ``compress_speedup`` excludes ingestion — the real pipeline traces
    straight into the store and never pays it).
 
-2. **corpus_zoo** — ``synthesize_corpus`` over three model-zoo scenarios
+2. **grammar_profile_64ranks** (``--profile``) — the per-stage breakdown
+   of the columnar front half (cluster / intern / grammar / merge) on the
+   same trace, plus grammar-inference wall-clock three ways:
+
+   * ``grammar_reference_ms`` — the per-event reference's grammar stage
+     (one scalar intern+push loop per rank, reference Sequitur), the
+     old-world cost;
+   * ``grammar_ms`` — the columnar grammar stage (distinct-stream dedup +
+     RLE pre-pass + flat kernel); ``grammar_speedup`` is their ratio —
+     the acceptance number (target ≥ 5×);
+   * ``kernel_reference_ms`` / ``kernel_ms`` — reference vs flat kernel
+     on the *same deduped streams* (isolates the kernel itself from the
+     dedup win); parity of the emitted rules is hard-asserted.
+
+3. **corpus_zoo** — ``synthesize_corpus`` over three model-zoo scenarios
    vs the per-scenario ``synthesize`` loop (same pgd solver): corpus makes
    **one** batched-PGD dispatch against one per scenario, shares one
    terminal table, and per-scenario δ̄ must be unchanged
    (``max_delta_diff`` = 0.0).
 
-3. **incremental_ingest** — a :class:`repro.core.corpus_store.CorpusStore`
+4. **incremental_ingest** — a :class:`repro.core.corpus_store.CorpusStore`
    pre-loaded with N scenarios; the row times *appending scenario N+1 and
    re-synthesizing incrementally* against a from-scratch
    ``synthesize_corpus`` over all N+1, and hard-asserts per-scenario δ̄
    bit-identical between the two (the streaming-corpus invariant).
+
+5. **grammar_cache_warm** (``--profile``) — a CorpusStore is populated and
+   synthesized, then *re-opened fresh* (in-memory memos cold, on-disk
+   grammar cache warm) and appended to: every unchanged rank stream must
+   resolve from the persisted grammar cache, driving the warm append's
+   grammar-inference cost to near zero.
 
 ``python -m benchmarks.synthesize_time --smoke`` runs a reduced corpus
 (2 scenarios, 4 ranks) with hard asserts — the CI corpus smoke job.
 ``--incremental`` ingests the reduced full zoo one scenario at a time
 into a tmp CorpusStore, re-synthesizing after each append, and asserts
 the final δ̄ set bit-identical to the batch path — the CI
-incremental-corpus job.
+incremental-corpus job.  ``--parity`` checks flat-kernel vs reference
+grammar equality on the reduced zoo's rank streams plus fuzz seeds, and
+guards against a silent fallback to the reference kernel — the CI
+grammar-parity step.  ``--profile`` runs tiers 2 and 5 and snapshots the
+rows to ``artifacts/BENCH_5.json``.
+
+Run as ``__main__`` (or via ``benchmarks.run``), rows are also appended
+to ``artifacts/benchmarks.json`` so successive PRs accumulate a
+machine-readable perf trajectory.
 """
 from __future__ import annotations
 
+import json
 import tempfile
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -91,6 +121,192 @@ def _frontend_row(n_ranks: int = 64) -> dict:
         "compress_speedup": round(t_ref / t_col, 2),
         "bit_identical": True,
     }
+
+
+# ---------------------------------------------------------------------------
+# grammar-inference profile (tier 2) + kernel parity helpers
+# ---------------------------------------------------------------------------
+
+
+def _distinct_local_streams(store, rel_tol: float = 0.05,
+                            cluster_ids=None) -> list[np.ndarray]:
+    """The distinct per-rank local-id streams ``compress_store`` feeds the
+    grammar kernel (dedup by byte-identical symbol stream, first-appearance
+    factorization)."""
+    from repro.core.events import cluster_vectors
+    from repro.core.trace_ir import (
+        _first_appearance_factorize, rank_symbol_streams,
+    )
+
+    if cluster_ids is None:
+        cluster_ids, _ = cluster_vectors(store.metrics, rel_tol)
+    sym_all = rank_symbol_streams(store, cluster_ids)
+    out, seen = [], set()
+    for r in range(store.n_ranks):
+        sym = sym_all[store.extents[r]:store.extents[r + 1]]
+        key = sym.tobytes()
+        if key not in seen:
+            seen.add(key)
+            out.append(_first_appearance_factorize(sym)[0])
+    return out
+
+
+def _assert_stream_parity(streams) -> None:
+    """Hard parity: flat kernel vs reference on each local-id stream,
+    plus the no-silent-fallback guard."""
+    from repro.core import sequitur, sequitur_reference, trace_ir
+    from repro.core.grammar import Grammar, TerminalTable
+    from repro.core.sequitur import rle_runs
+
+    assert sequitur.Sequitur.KERNEL == "flat", \
+        "repro.core.sequitur no longer exposes the flat kernel"
+    assert trace_ir.Sequitur is sequitur.Sequitur, \
+        "compress_store silently fell back off the flat kernel"
+    assert sequitur_reference.Sequitur.KERNEL == "reference"
+    for lids in streams:
+        r = sequitur_reference.Sequitur()
+        r.push_ids(lids)
+        f = sequitur.Sequitur()
+        f.push_runs(*rle_runs(lids))
+        table = TerminalTable()     # same table: to_json equality == rules
+        assert Grammar(rules=f.grammar_rules(), table=table).to_json() == \
+            Grammar(rules=r.grammar_rules(), table=table).to_json(), \
+            "flat kernel diverges from sequitur_reference"
+
+
+def _profile_row(n_ranks: int = 64) -> dict:
+    from repro.core import frontend_reference as ref
+    from repro.core.events import is_comm
+    from repro.core.grammar import TerminalTable
+    from repro.core.sequitur import Sequitur as Flat, rle_runs
+    from repro.core.sequitur_reference import Sequitur as Ref
+    from repro.core.trace_ir import TraceStore, compress_store
+
+    traces = _synthetic_traces(n_ranks)
+    store = TraceStore.from_rank_traces(traces, {"x": n_ranks})
+
+    profile: dict = {}
+    compress_store(store, profile=profile)
+
+    # old-world grammar inference: the reference front end's grammar stage
+    # (one scalar intern+push loop per rank, reference Sequitur), isolated
+    # from its clustering stage
+    flat_events, index = [], []
+    for tr in traces:
+        idx = []
+        for ev in tr:
+            if not is_comm(ev):
+                idx.append(len(flat_events))
+                flat_events.append(ev)
+            else:
+                idx.append(-1)
+        index.append(idx)
+    clustered, _ = ref.cluster_compute_events_reference(flat_events)
+    t0 = time.perf_counter()
+    for tr, idx in zip(traces, index):
+        table = TerminalTable()
+        seq = Ref()
+        for ev, fi in zip(tr, idx):
+            seq.push(table.intern(clustered[fi] if fi >= 0 else ev))
+    t_ref_grammar = time.perf_counter() - t0
+
+    # kernel-only comparison on the same deduped streams
+    streams = _distinct_local_streams(store)
+    _assert_stream_parity(streams)
+    rles = [rle_runs(lids) for lids in streams]
+    t0 = time.perf_counter()
+    for lids in streams:
+        r = Ref()
+        r.push_ids(lids)
+    t_kernel_ref = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for ids, counts in rles:
+        f = Flat()
+        f.push_runs(ids, counts)
+    t_kernel = time.perf_counter() - t0
+
+    front_ms = (profile["cluster_ms"] + profile["intern_ms"]
+                + profile["grammar_ms"] + profile["merge_ms"])
+    return {
+        "program": f"grammar_profile_{n_ranks}ranks",
+        "n_events": store.n_events,
+        "n_distinct_streams": profile["n_distinct_streams"],
+        "cluster_ms": round(profile["cluster_ms"], 1),
+        "intern_ms": round(profile["intern_ms"], 1),
+        "grammar_ms": round(profile["grammar_ms"], 1),
+        "merge_ms": round(profile["merge_ms"], 1),
+        "grammar_share_pct": round(100 * profile["grammar_ms"]
+                                   / max(front_ms, 1e-9), 1),
+        "grammar_reference_ms": round(t_ref_grammar * 1e3, 1),
+        "grammar_speedup": round(t_ref_grammar * 1e3
+                                 / max(profile["grammar_ms"], 1e-9), 1),
+        "kernel_reference_ms": round(t_kernel_ref * 1e3, 2),
+        "kernel_ms": round(t_kernel * 1e3, 2),
+        "kernel_speedup": round(t_kernel_ref / max(t_kernel, 1e-12), 2),
+        "kernel": "flat",
+        "parity": True,
+    }
+
+
+def _grammar_cache_row(scenarios=_CORPUS_SCENARIOS + ("flash-ring",),
+                       n_ranks=None, steps=None) -> dict:
+    """Warm-store append: populate + synthesize a CorpusStore, re-open it
+    fresh (memos cold, grammar cache warm from disk), append one scenario
+    and re-synthesize — every unchanged rank stream must hit the persisted
+    grammar cache."""
+    from repro.configs.registry import build_scenario
+    from repro.core.corpus_store import CorpusStore
+    from repro.core.synthesize import synthesize_corpus
+
+    kw = {}
+    if n_ranks:
+        kw["n_ranks"] = n_ranks
+    if steps:
+        kw["steps"] = steps
+    stores = {n: build_scenario(n, **kw) for n in scenarios}
+    base, extra = scenarios[:-1], scenarios[-1]
+
+    with tempfile.TemporaryDirectory() as td:
+        cs = CorpusStore(td)
+        for n in base:
+            cs.add_scenario(n, stores[n])
+        corp_cold = synthesize_corpus(store=cs)
+        cold_ms = corp_cold.stats["grammar_ms"]
+
+        # fresh open: in-memory front-half memo is gone, the grammar cache
+        # comes back from grammar_cache.json
+        cs2 = CorpusStore(td)
+        assert len(cs2.grammars) > 0, "grammar cache did not persist"
+        cs2.add_scenario(extra, stores[extra])
+        t0 = time.perf_counter()
+        corp_warm = synthesize_corpus(store=cs2)
+        t_warm = time.perf_counter() - t0
+
+        hits = corp_warm.stats["n_grammar_cache_hits"]
+        misses = corp_warm.stats["n_grammar_cache_misses"]
+        # every unchanged (base-scenario) stream must come from the cache:
+        # misses can only be the appended scenario's novel streams
+        base_streams = sum(
+            len(_distinct_local_streams(
+                stores[n], cs2.rel_tol,
+                cluster_ids=cs2.index.assignments(n))) for n in base)
+        assert hits >= base_streams, (hits, base_streams)
+        return {
+            "program": f"grammar_cache_warm_{len(scenarios)}scenarios",
+            "added_scenario": extra,
+            "warm_synthesis_ms": round(t_warm * 1e3, 1),
+            "grammar_ms_cold": round(cold_ms, 2),
+            "grammar_ms_warm": round(corp_warm.stats["grammar_ms"], 2),
+            "grammar_cache_hits": hits,
+            "grammar_cache_misses": misses,
+            "unchanged_streams": base_streams,
+            "all_unchanged_streams_hit": True,
+        }
+
+
+# ---------------------------------------------------------------------------
+# corpus tiers (3, 4)
+# ---------------------------------------------------------------------------
 
 
 def _corpus_rows(scenarios=_CORPUS_SCENARIOS, n_ranks=None, steps=None,
@@ -194,13 +410,44 @@ def _incremental_rows(scenarios=_CORPUS_SCENARIOS + ("flash-ring",),
             "n_cached_fits": corp_inc.stats["n_cached_fits"],
             "n_front_reused": corp_inc.stats["n_front_reused"],
             "n_result_reused": corp_inc.stats["n_result_reused"],
+            "n_grammar_cache_hits": corp_inc.stats["n_grammar_cache_hits"],
             "solver_dispatches_incremental": corp_inc.stats["n_solver_calls"],
             "max_delta_diff_vs_full": float(np.max(diffs)),
         }]
 
 
+# ---------------------------------------------------------------------------
+# artifact trajectory
+# ---------------------------------------------------------------------------
+
+
+def write_artifacts(rows: list[dict], snapshot: str | None = "BENCH_5.json",
+                    out_dir="artifacts") -> None:
+    """Merge the rows (keyed by ``program``) into the ``synthesize_time``
+    entry of ``<out_dir>/benchmarks.json`` and refresh the pinned
+    snapshot, so future PRs have a machine-readable perf baseline to
+    regress against.  Merging means a partial run (``--profile``) updates
+    its own rows without clobbering the rest of the suite's trajectory."""
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    bpath = out / "benchmarks.json"
+    existing = json.loads(bpath.read_text()) if bpath.exists() else {}
+    merged = {r.get("program", f"row{i}"): r
+              for i, r in enumerate(existing.get("synthesize_time", []))}
+    for i, r in enumerate(rows):
+        merged[r.get("program", f"new{i}")] = r
+    rows_out = list(merged.values())
+    existing["synthesize_time"] = rows_out
+    bpath.write_text(json.dumps(existing, indent=1))
+    if snapshot:
+        (out / snapshot).write_text(json.dumps(
+            {"suite": "synthesize_time", "rows": rows_out}, indent=1))
+    print(f"wrote {bpath}" + (f" and {out / snapshot}" if snapshot else ""))
+
+
 def run() -> list[dict]:
-    return [_frontend_row()] + _corpus_rows() + _incremental_rows()
+    return ([_frontend_row(), _profile_row()] + _corpus_rows()
+            + _incremental_rows() + [_grammar_cache_row()])
 
 
 def smoke() -> None:
@@ -215,6 +462,30 @@ def smoke() -> None:
     print(", ".join(f"{k}={v}" for k, v in front.items()))
     assert front["bit_identical"]
     print("corpus smoke OK")
+
+
+def parity() -> None:
+    """CI grammar-parity step: flat kernel vs sequitur_reference on the
+    reduced zoo's rank streams + seeded fuzz, and the silent-fallback
+    guard (tier-1's tests/test_sequitur_kernel.py covers the same ground
+    in depth; this step keeps the corpus-smoke job self-contained)."""
+    from repro.configs.registry import SCENARIO_IDS, build_scenario
+
+    n_streams = 0
+    for name in SCENARIO_IDS:
+        store = build_scenario(name, n_ranks=4, steps=2)
+        streams = _distinct_local_streams(store)
+        _assert_stream_parity(streams)
+        n_streams += len(streams)
+    rng = np.random.RandomState(5)
+    fuzz = []
+    for _ in range(8):
+        seq = rng.randint(0, rng.choice([2, 3, 5]),
+                          rng.randint(20, 200)).astype(np.int64)
+        fuzz.append(seq)
+    _assert_stream_parity(fuzz)
+    print(f"grammar parity OK ({n_streams} zoo streams + {len(fuzz)} fuzz "
+          f"seeds, kernel=flat)")
 
 
 def incremental_smoke() -> None:
@@ -235,7 +506,8 @@ def incremental_smoke() -> None:
             corp = synthesize_corpus(store=cs)     # after every append
             print(f"ingested {n}: refit={corp.stats['n_refit_terminals']} "
                   f"cached={corp.stats['n_cached_fits']} "
-                  f"front_reused={corp.stats['n_front_reused']}")
+                  f"front_reused={corp.stats['n_front_reused']} "
+                  f"grammar_hits={corp.stats['n_grammar_cache_hits']}")
         batch = synthesize_corpus([(n, stores[n]) for n in names])
         for n in names:
             f_inc = corp.results[n].fidelity(sample_ranks=None)
@@ -246,6 +518,10 @@ def incremental_smoke() -> None:
                                 n_ranks=4, steps=2)[0]
         print(", ".join(f"{k}={v}" for k, v in row.items()))
         assert row["max_delta_diff_vs_full"] == 0.0, row
+        cache_row = _grammar_cache_row(
+            ("transformer-dp", "ssm-decode", "moe-ep"), n_ranks=4, steps=2)
+        print(", ".join(f"{k}={v}" for k, v in cache_row.items()))
+        assert cache_row["all_unchanged_streams_hit"], cache_row
     print("incremental corpus smoke OK")
 
 
@@ -257,11 +533,26 @@ if __name__ == "__main__":
     ap.add_argument("--incremental", action="store_true",
                     help="one-scenario-at-a-time CorpusStore ingest vs "
                          "batch corpus, hard asserts (CI)")
+    ap.add_argument("--parity", action="store_true",
+                    help="flat-kernel vs reference grammar parity on the "
+                         "reduced zoo + fallback guard (CI)")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-stage front-end breakdown + warm grammar "
+                         "cache rows; snapshots artifacts/BENCH_5.json")
     args = ap.parse_args()
     if args.smoke:
         smoke()
     elif args.incremental:
         incremental_smoke()
-    else:
-        for r in run():
+    elif args.parity:
+        parity()
+    elif args.profile:
+        rows = [_profile_row(), _grammar_cache_row()]
+        for r in rows:
             print(", ".join(f"{k}={v}" for k, v in r.items()))
+        write_artifacts(rows)
+    else:
+        rows = run()
+        for r in rows:
+            print(", ".join(f"{k}={v}" for k, v in r.items()))
+        write_artifacts(rows)

@@ -61,6 +61,7 @@ _MANIFEST_VERSION = 1
 _MANIFEST = "manifest.json"
 _INDEX = "cluster_index.npz"
 _FITS = "fit_cache.npz"
+_GRAMMARS = "grammar_cache.json"
 _SCENARIO_DIR = "scenarios"
 
 
@@ -287,6 +288,95 @@ class FitCache:
 
 
 # ---------------------------------------------------------------------------
+# content-addressed grammar cache
+# ---------------------------------------------------------------------------
+
+
+class GrammarCache:
+    """Persistent ``key -> frozen Sequitur rules`` map for rank-stream
+    grammars, sibling to :class:`FitCache`.
+
+    Keys are content hashes of the exact grammar-inference inputs: the
+    interned local-id stream bytes plus the merge threshold (conservative
+    — today's Sequitur rules depend only on the stream; keying on the
+    threshold too keeps the cache valid if grammar semantics ever pick up
+    threshold dependence).  A hit hands back the frozen
+    ``{rid: [(kind, ref, exp), ...]}`` rules dict and skips the Sequitur
+    run entirely — on a warm store, re-opened in a fresh process, every
+    unchanged rank stream resolves from this cache, so grammar inference
+    on incremental appends costs only the new scenario's novel streams.
+
+    Rules are pure int/str structures, so unlike the in-memory front-half
+    memo they persist (``grammar_cache.json``); rule dicts alias across
+    hits and are read-only downstream (the same convention as grammar
+    aliasing across a signature class).  ``hits``/``misses`` count
+    :meth:`get` outcomes since construction; synthesis stats report the
+    per-run delta.
+    """
+
+    def __init__(self):
+        self._rules: dict[str, dict[int, list[tuple]]] = {}
+        self.hits = 0
+        self.misses = 0
+        self.dirty = False
+
+    def __len__(self):
+        return len(self._rules)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._rules
+
+    @staticmethod
+    def key(local_ids: np.ndarray, threshold: float) -> str:
+        h = hashlib.sha256(f"grammar|1|{threshold!r}|".encode())
+        h.update(np.ascontiguousarray(local_ids, dtype=np.int64).tobytes())
+        return h.hexdigest()
+
+    def get(self, key: str) -> dict[int, list[tuple]] | None:
+        rules = self._rules.get(key)
+        if rules is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return rules
+
+    def put(self, key: str, rules: dict[int, list[tuple]]) -> None:
+        self._rules[key] = rules
+        self.dirty = True
+
+    def save(self, path) -> None:
+        path = Path(path)
+        if not self._rules:
+            path.unlink(missing_ok=True)
+            self.dirty = False
+            return
+        # rid insertion order is part of the grammar identity (to_json
+        # serializes rules in that order); JSON objects round-trip dict
+        # order, so the frozen form persists it exactly
+        payload = {"version": 1,
+                   "entries": {k: {str(rid): [list(s) for s in body]
+                                   for rid, body in rules.items()}
+                               for k, rules in self._rules.items()}}
+        tmp = path.with_name(path.name + ".tmp")
+        tmp.write_text(json.dumps(payload))
+        tmp.replace(path)
+        self.dirty = False
+
+    @classmethod
+    def load(cls, path) -> "GrammarCache":
+        cache = cls()
+        payload = json.loads(Path(path).read_text())
+        if payload.get("version") != 1:
+            raise ValueError(f"unsupported grammar cache version "
+                             f"{payload.get('version')!r} in {path}")
+        for k, rules in payload["entries"].items():
+            cache._rules[k] = {
+                int(rid): [(s[0], int(s[1]), int(s[2])) for s in body]
+                for rid, body in rules.items()}
+        return cache
+
+
+# ---------------------------------------------------------------------------
 # the store
 # ---------------------------------------------------------------------------
 
@@ -341,6 +431,14 @@ class CorpusStore:
             # fits are content-addressed pure derivations: a corrupt cache
             # costs a re-solve, never correctness — start empty
             self.fits = FitCache()
+        gpath = self.root / _GRAMMARS
+        try:
+            self.grammars = (GrammarCache.load(gpath) if gpath.exists()
+                             else GrammarCache())
+        except Exception:
+            # same contract as the fit cache: a corrupt grammar cache
+            # costs a Sequitur re-run, never correctness
+            self.grammars = GrammarCache()
 
     def _load_or_rebuild_index(self) -> ClusterIndex:
         """Load the persisted cluster index, validating it against the
@@ -477,3 +575,9 @@ class CorpusStore:
             self.manifest["table_fingerprint"] = table_fingerprint
             self._write_manifest()
         self.fits.save(self.root / _FITS)
+
+    def save_grammars(self) -> None:
+        """Persist the grammar cache if it gained entries (called by
+        incremental synthesis after the front half)."""
+        if self.grammars.dirty:
+            self.grammars.save(self.root / _GRAMMARS)

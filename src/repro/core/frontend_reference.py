@@ -23,7 +23,10 @@ import numpy as np
 from repro.core.events import ComputeEvent, Event, is_comm
 from repro.core.grammar import Grammar, TerminalTable, from_sequitur
 from repro.core.interproc import MergedProgram, merge_grammars
-from repro.core.sequitur import Sequitur
+# the reference front end runs on the reference Sequitur: both oracles
+# stay per-event/object-graph implementations, independent of the flat
+# kernel they pin
+from repro.core.sequitur_reference import Sequitur
 
 
 def _quantize(vec: np.ndarray, rel_tol: float) -> tuple[int, ...]:

@@ -123,13 +123,20 @@ def raw_trace_bytes(events: Iterable[Event]) -> int:
 
 
 def from_sequitur(s: Sequitur, table: TerminalTable) -> Grammar:
+    """Freeze a Sequitur run (flat kernel or reference — both expose
+    ``grammar_rules`` over their pool) into a :class:`Grammar`."""
     return Grammar(rules=s.grammar_rules(), table=table)
 
 
 def compress_events(events: Iterable[Event]) -> Grammar:
-    """Intern + Sequitur-compress a flat event sequence."""
+    """Intern + Sequitur-compress a flat event sequence.
+
+    Interning runs first so the id stream feeds the kernel's batch entry
+    point (``push_ids`` RLE-collapses internally) instead of a scalar
+    push per event.
+    """
     table = TerminalTable()
+    ids = [table.intern(ev) for ev in events]
     s = Sequitur()
-    for ev in events:
-        s.push(table.intern(ev))
+    s.push_ids(ids)
     return from_sequitur(s, table)

@@ -441,6 +441,9 @@ def _synthesize_corpus_incremental(cstore, threshold: float,
     id_of: dict[str, tuple] = {}
     mergeds: list[MergedProgram] = []
     n_front_reused = 0
+    front_profile: dict = {}
+    g_hits0 = cstore.grammars.hits
+    g_miss0 = cstore.grammars.misses
     for sname in names:
         cids = ids_by_name[sname]
         ident = (cstore.content_hash(sname),
@@ -449,9 +452,13 @@ def _synthesize_corpus_incremental(cstore, threshold: float,
         key = ("front",) + ident
         hit = cstore.memo.get(key)
         if hit is None:
+            # scenarios without an in-memory front-half memo (new content,
+            # or a freshly opened store) still skip Sequitur for every
+            # rank stream already in the persisted grammar cache
             grammars, merged, rank_ids, _ = compress_store(
                 cstore.load_scenario(sname), cstore.rel_tol, threshold,
-                cluster_ids=cids, reps=reps)
+                cluster_ids=cids, reps=reps,
+                grammar_cache=cstore.grammars, profile=front_profile)
             hit = (grammars, merged, rank_ids)
             cstore.memo[key] = hit
         else:
@@ -461,6 +468,7 @@ def _synthesize_corpus_incremental(cstore, threshold: float,
         # read-only downstream, but id lists are caller-mutable
         per[sname] = (grammars, merged, [list(ids) for ids in rank_ids])
         mergeds.append(merged)
+    cstore.save_grammars()
 
     table, gid_maps = corpus_terminal_table(mergeds)
     table_fp = table_fingerprint(table)
@@ -515,5 +523,8 @@ def _synthesize_corpus_incremental(cstore, threshold: float,
         n_front_reused=n_front_reused,
         n_result_reused=n_result_reused,
         n_solver_calls=1 if miss_targets else 0,
+        n_grammar_cache_hits=cstore.grammars.hits - g_hits0,
+        n_grammar_cache_misses=cstore.grammars.misses - g_miss0,
+        grammar_ms=round(front_profile.get("grammar_ms", 0.0), 3),
     )
     return CorpusResult(results=results, table=table, reps=reps, stats=stats)

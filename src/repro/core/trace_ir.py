@@ -26,8 +26,12 @@ vectorized terminal interning (first-appearance factorization per rank),
 and **signature-deduplicated** grammar construction — ranks whose token
 streams are byte-identical (the overwhelmingly common SPMD case, the same
 redundancy the replay engine's SIGNATURE_GROUPS exploit) share one
-Sequitur run instead of paying for one each.  Output is bit-identical to
-the per-event reference (:mod:`repro.core.frontend_reference`).
+Sequitur run instead of paying for one each.  Each run RLE-collapses the
+interned stream and feeds the flat-array kernel's batch entry point
+(:meth:`repro.core.sequitur.Sequitur.push_runs`), optionally consulting a
+content-addressed grammar cache; per-stage timings land in an optional
+``profile`` dict.  Output is bit-identical to the per-event reference
+(:mod:`repro.core.frontend_reference`).
 """
 from __future__ import annotations
 
@@ -44,9 +48,9 @@ from repro.core.events import (
     CommEvent, ComputeEvent, Event, N_METRICS, cluster_vectors,
     encode_relative_perm, is_comm,
 )
-from repro.core.grammar import Grammar, TerminalTable, from_sequitur
+from repro.core.grammar import Grammar, TerminalTable
 from repro.core.interproc import MergedProgram, merge_grammars
-from repro.core.sequitur import Sequitur
+from repro.core.sequitur import Sequitur, rle_runs
 
 _NPZ_VERSION = 1
 
@@ -230,16 +234,44 @@ class TraceStore:
 
     # -- lossless expansion ----------------------------------------------------
 
+    def _event_pool(self) -> np.ndarray:
+        """Object array mapping token keys to Event instances: slot ``c``
+        is comm event ``comm_pool[c]``, slot ``n_comms + t`` the
+        ComputeEvent of metrics row ``t``.
+
+        Compute rows are interned by value — one ComputeEvent per distinct
+        (metrics, cluster_id) row, gathered back over the row index — so
+        SPMD-tiled stores materialize one object per template event, not
+        one per occurrence.  Cached on the store (stores are immutable
+        once built)."""
+        cached = getattr(self, "_event_pool_cache", None)
+        if cached is not None:
+            return cached
+        n_comms = len(self.comm_pool)
+        pool = np.empty(n_comms + self.n_compute_events, dtype=object)
+        for c, ev in enumerate(self.comm_pool):
+            pool[c] = ev
+        if self.n_compute_events:
+            keyed = np.concatenate(
+                [self.metrics, self.cluster_ids[:, None].astype(np.float64)],
+                axis=1)
+            uq, inv = np.unique(keyed, axis=0, return_inverse=True)
+            uniq_events = np.empty(len(uq), dtype=object)
+            for u, row in enumerate(uq):
+                uniq_events[u] = ComputeEvent(tuple(row[:N_METRICS].tolist()),
+                                              cluster_id=int(row[N_METRICS]))
+            pool[n_comms:] = uniq_events[inv.reshape(-1)]
+        self._event_pool_cache = pool
+        return pool
+
     def rank_events(self, rank: int) -> list[Event]:
-        """Materialize rank ``rank``'s event list (lossless round trip)."""
-        out: list[Event] = []
-        for t in self.rank_tokens(rank).tolist():
-            if t < 0:
-                out.append(self.comm_pool[-t - 1])
-            else:
-                out.append(ComputeEvent(tuple(self.metrics[t].tolist()),
-                                        cluster_id=int(self.cluster_ids[t])))
-        return out
+        """Materialize rank ``rank``'s event list (lossless round trip) in
+        one interned-key gather over the token stream (value-equal
+        ComputeEvents alias one instance; events are frozen)."""
+        toks = self.rank_tokens(rank)
+        n_comms = len(self.comm_pool)
+        idx = np.where(toks < 0, -toks - 1, toks + n_comms)
+        return self._event_pool()[idx].tolist()
 
     def to_rank_traces(self) -> list[list[Event]]:
         return [self.rank_events(r) for r in range(self.n_ranks)]
@@ -386,48 +418,83 @@ def _first_appearance_factorize(sym: np.ndarray,
     return lid[inv], uq[order], first[order]
 
 
+def rank_symbol_streams(store: TraceStore, cluster_ids: np.ndarray,
+                        ) -> np.ndarray:
+    """Global symbol per token for every rank's stream, concatenated:
+    comm id ``c`` -> ``c``, compute cluster ``k`` -> ``n_comms + k``
+    (slice with ``store.extents`` for per-rank views).  Shared by
+    :func:`compress_store` and the grammar benchmarks."""
+    n_comms = len(store.comm_pool)
+    toks = store.tokens
+    if store.n_compute_events:
+        comp_sym = n_comms + cluster_ids[np.maximum(toks, 0)]
+    else:
+        comp_sym = np.zeros(len(toks), dtype=np.int64)
+    return np.where(toks < 0, -toks - 1, comp_sym)
+
+
 def compress_store(store: TraceStore,
                    rel_tol: float = 0.05,
                    threshold: float = 0.5,
                    *,
                    cluster_ids: np.ndarray | None = None,
                    reps: dict[int, np.ndarray] | None = None,
+                   grammar_cache=None,
+                   profile: dict | None = None,
                    ) -> tuple[list[Grammar], MergedProgram,
                               list[list[int]], dict[int, np.ndarray]]:
     """Columnar replacement for the per-event ``compress_rank_traces``.
 
     Clusters compute events jointly across ranks (vectorized), interns
     terminals by first-appearance factorization of each rank's symbol
-    stream, runs Sequitur once per *distinct* stream (ranks with
-    byte-identical streams share the resulting grammar object), and merges
-    (Algorithm 1).  Pass precomputed ``cluster_ids``/``reps`` (aligned to
-    ``store.metrics`` rows) to reuse a corpus-level joint clustering.
+    stream, runs the flat Sequitur kernel once per *distinct* stream
+    (ranks with byte-identical streams share the resulting grammar
+    object) after an RLE pre-pass (:func:`repro.core.sequitur.rle_runs`),
+    and merges (Algorithm 1).  Pass precomputed ``cluster_ids``/``reps``
+    (aligned to ``store.metrics`` rows) to reuse a corpus-level joint
+    clustering.
+
+    ``grammar_cache`` (any object with the
+    :class:`repro.core.corpus_store.GrammarCache` interface) memoizes the
+    frozen Sequitur rules content-addressed by (local-id stream, threshold)
+    — a hit skips grammar inference entirely; the terminal table is still
+    built per stream (it binds store-local events).  Cached rule dicts
+    alias across hits, read-only downstream like the per-class grammar
+    aliasing below.
+
+    ``profile`` (a dict) accumulates per-stage wall-clock and cache
+    counters: ``cluster_ms``/``intern_ms``/``grammar_ms``/``merge_ms``,
+    ``n_distinct_streams``/``n_sequitur_runs``, and
+    ``grammar_cache_hits``/``grammar_cache_misses``.  Keys add onto
+    existing values so one dict can aggregate across scenarios.
     """
+    from time import perf_counter
+
+    t0 = perf_counter()
     if cluster_ids is None:
         cluster_ids, reps = cluster_vectors(store.metrics, rel_tol)
     else:
         cluster_ids = np.asarray(cluster_ids, dtype=np.int64)
         if reps is None:
             raise ValueError("cluster_ids without reps")
+    t_cluster = perf_counter() - t0
 
     n_comms = len(store.comm_pool)
     toks = store.tokens
-    # global symbol per token: comm id c -> c, compute cluster k -> n_comms+k
-    if store.n_compute_events:
-        comp_sym = n_comms + cluster_ids[np.maximum(toks, 0)]
-    else:
-        comp_sym = np.zeros(len(toks), dtype=np.int64)
-    sym_all = np.where(toks < 0, -toks - 1, comp_sym)
+    sym_all = rank_symbol_streams(store, cluster_ids)
 
     grammars: list[Grammar] = []
     rank_ids: list[list[int]] = []
     cache: dict[bytes, tuple[Grammar, list[int]]] = {}
+    t_intern = t_grammar = 0.0
+    n_runs = n_hits = n_misses = 0
     for r in range(store.n_ranks):
         sl = slice(int(store.extents[r]), int(store.extents[r + 1]))
         sym = sym_all[sl]
         key = sym.tobytes()
         hit = cache.get(key)
         if hit is None:
+            t1 = perf_counter()
             local_ids, uniq, first = _first_appearance_factorize(sym)
             table = TerminalTable()
             rtoks = toks[sl]
@@ -439,14 +506,41 @@ def compress_store(store: TraceStore,
                     table.intern(ComputeEvent(
                         tuple(store.metrics[row].tolist()),
                         cluster_id=int(s - n_comms)))
-            seq = Sequitur()
-            seq.push_ids(local_ids)
-            hit = (from_sequitur(seq, table), local_ids.tolist())
+            t2 = perf_counter()
+            t_intern += t2 - t1
+            rules = gkey = None
+            if grammar_cache is not None:
+                gkey = grammar_cache.key(local_ids, threshold)
+                rules = grammar_cache.get(gkey)
+            if rules is None:
+                if gkey is not None:
+                    n_misses += 1
+                seq = Sequitur()
+                seq.push_runs(*rle_runs(local_ids))
+                rules = seq.grammar_rules()
+                n_runs += 1
+                if gkey is not None:
+                    grammar_cache.put(gkey, rules)
+            else:
+                n_hits += 1
+            t_grammar += perf_counter() - t2
+            hit = (Grammar(rules=rules, table=table), local_ids.tolist())
             cache[key] = hit
         grammars.append(hit[0])
         # grammars deliberately alias across a signature class (read-only
         # downstream, tested); id lists get a per-rank copy so in-place
         # edits by callers can't corrupt sibling ranks
         rank_ids.append(list(hit[1]))
+    t3 = perf_counter()
     merged = merge_grammars(grammars, threshold)
+    if profile is not None:
+        for k, v in (("cluster_ms", t_cluster * 1e3),
+                     ("intern_ms", t_intern * 1e3),
+                     ("grammar_ms", t_grammar * 1e3),
+                     ("merge_ms", (perf_counter() - t3) * 1e3),
+                     ("n_distinct_streams", len(cache)),
+                     ("n_sequitur_runs", n_runs),
+                     ("grammar_cache_hits", n_hits),
+                     ("grammar_cache_misses", n_misses)):
+            profile[k] = profile.get(k, 0) + v
     return grammars, merged, rank_ids, reps

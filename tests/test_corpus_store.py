@@ -374,3 +374,81 @@ def test_fit_cache_empty_save_removes_file(tmp_path):
     assert p.exists()
     FitCache().save(p)
     assert not p.exists()
+
+
+# ---------------------------------------------------------------------------
+# content-addressed grammar cache
+# ---------------------------------------------------------------------------
+
+
+def test_grammar_cache_persists_and_hits_on_reopen(tmp_path):
+    """A fresh CorpusStore handle (in-memory memos cold) must resolve
+    every previously-seen rank stream from the persisted grammar cache —
+    Sequitur runs only for genuinely novel streams."""
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    cs.add_scenario("a", stores["a"])
+    cs.add_scenario("b", stores["b"])
+    corp = synthesize_corpus(store=cs)
+    assert corp.stats["n_grammar_cache_misses"] >= 1
+    assert (tmp_path / "c" / "grammar_cache.json").exists()
+
+    cs2 = CorpusStore(tmp_path / "c")           # reopen: memo gone
+    assert len(cs2.grammars) == len(cs.grammars) > 0
+    cs2.add_scenario("c", stores["c"])
+    corp2 = synthesize_corpus(store=cs2)
+    # a and b re-ran compress_store (no memo) but every one of their
+    # streams hit the cache; only c's novel streams missed
+    assert corp2.stats["n_front_reused"] == 0
+    assert corp2.stats["n_grammar_cache_hits"] >= 2
+    corp_bat = synthesize_corpus([(n, stores[n]) for n in ("a", "b", "c")])
+    _assert_same_corpus(corp2, corp_bat, ("a", "b", "c"))
+
+
+def test_grammar_cache_warm_append_all_unchanged_hit(tmp_path):
+    """The acceptance shape: warm store + append records grammar-cache
+    hits for all unchanged rank streams (and δ̄ parity holds)."""
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    cs.add_scenario("a", stores["a"])
+    cs.add_scenario("b", stores["b"])
+    synthesize_corpus(store=cs)
+    cs2 = CorpusStore(tmp_path / "c")
+    cs2.add_scenario("c", stores["c"])
+    corp = synthesize_corpus(store=cs2)
+    # every distinct stream of a and b is unchanged -> cache hit; the
+    # zoo3 stores are single-signature (one distinct stream each)
+    assert corp.stats["n_grammar_cache_hits"] >= 2
+    # second synthesis on the same handle: front memo takes over, cache
+    # counters stay put
+    h0 = corp.stats["n_grammar_cache_hits"]
+    corp_again = synthesize_corpus(store=cs2)
+    assert corp_again.stats["n_grammar_cache_hits"] == 0
+    assert corp_again.stats["n_front_reused"] == 3
+    assert h0 >= 2
+
+
+def test_grammar_cache_corrupt_file_self_heals(tmp_path):
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    cs.add_scenario("a", stores["a"])
+    synthesize_corpus(store=cs)
+    gpath = tmp_path / "c" / "grammar_cache.json"
+    assert gpath.exists()
+    gpath.write_text("{not json")
+    cs2 = CorpusStore(tmp_path / "c")           # corrupt cache -> empty
+    assert len(cs2.grammars) == 0
+    corp = synthesize_corpus(store=cs2)          # re-runs Sequitur, works
+    corp_bat = synthesize_corpus([("a", stores["a"])])
+    _assert_same_corpus(corp, corp_bat, ("a",))
+
+
+def test_grammar_cache_empty_save_removes_file(tmp_path):
+    from repro.core.corpus_store import GrammarCache
+    p = tmp_path / "grammar_cache.json"
+    cache = GrammarCache()
+    cache.put("k", {0: [("t", 0, 1)]})
+    cache.save(p)
+    assert p.exists() and not cache.dirty
+    GrammarCache().save(p)
+    assert not p.exists()

@@ -57,11 +57,11 @@ def test_digram_uniqueness_invariant():
     seq = list(rng.randint(0, 5, 500))
     s = compress(seq)
     # no adjacent pair (with exponents) may occur twice across rule bodies
+    # (checked on the frozen grammar, implementation-neutral)
     seen = {}
-    for rid, rule in s.rules.items():
-        body = list(rule.symbols())
+    for rid, body in s.grammar_rules().items():
         for a, b in zip(body, body[1:]):
-            key = (a.ident(), a.exp, b.ident(), b.exp)
+            key = (a[:2], a[2], b[:2], b[2])
             assert key not in seen, f"duplicate digram {key}"
             seen[key] = rid
 
@@ -70,10 +70,11 @@ def test_rule_utility_invariant():
     rng = np.random.RandomState(4)
     seq = list(rng.randint(0, 4, 400))
     s = compress(seq)
-    uses = {rid: 0 for rid in s.rules if rid != 0}
-    for rule in s.rules.values():
-        for n in rule.symbols():
-            if hasattr(n.sym, "rid"):
-                uses[n.sym.rid] = uses.get(n.sym.rid, 0) + (1 if n.exp == 1 else 2)
+    rules = s.grammar_rules()
+    uses = {rid: 0 for rid in rules if rid != 0}
+    for body in rules.values():
+        for kind, ref, exp in body:
+            if kind == "r":
+                uses[ref] = uses.get(ref, 0) + (1 if exp == 1 else 2)
     for rid, cnt in uses.items():
         assert cnt >= 2, f"rule {rid} used once"

@@ -1,0 +1,249 @@
+"""Parity suite: flat-array Sequitur kernel vs the reference oracle.
+
+The flat kernel (:mod:`repro.core.sequitur`) must emit ``to_json``-identical
+grammars to the preserved object-graph implementation
+(:mod:`repro.core.sequitur_reference`) on every stream — zoo scenario
+streams, seeded fuzz (including the RLE-adversarial shapes where a naive
+run-collapse would diverge from scalar pushes), ``push_run`` exponent
+edges, and rule-utility inline chains.
+
+Follows the ROADMAP property-test convention: the deterministic seeded
+corpus always runs; only the randomized hypothesis exploration is
+skipif-gated on the optional dependency.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import sequitur, sequitur_reference, trace_ir
+from repro.core.grammar import Grammar, TerminalTable
+from repro.core.sequitur import Sequitur as Flat, rle_runs
+from repro.core.sequitur_reference import Sequitur as Ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised in bare envs
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="randomized exploration needs hypothesis (requirements-dev.txt);"
+           " the deterministic corpus in this module still runs")
+
+
+def _check_parity(seq):
+    """push_many parity + push_ids (RLE batch path) parity + losslessness."""
+    seq = list(seq)
+    r = Ref()
+    r.push_many(seq)
+    f = Flat()
+    f.push_many(seq)
+    f2 = Flat()
+    f2.push_ids(np.asarray(seq, dtype=np.int64))
+    gr = r.grammar_rules()
+    for g in (f.grammar_rules(), f2.grammar_rules()):
+        assert g == gr
+        assert list(g) == list(gr), "rule-id insertion order diverged"
+    table = TerminalTable()   # shared table: to_json equality == rules parity
+    assert Grammar(rules=f2.grammar_rules(), table=table).to_json() \
+        == Grammar(rules=gr, table=table).to_json()
+    assert f.expand() == seq
+    assert f2.expand() == seq
+    assert f.size() == r.size()
+
+
+def _check_runs_parity(runs):
+    """push_run (reference O(1) bulk semantics) parity."""
+    r = Ref()
+    f = Flat()
+    for s, c in runs:
+        r.push_run(s, c)
+        f.push_run(s, c)
+    assert f.grammar_rules() == r.grammar_rules()
+    assert list(f.grammar_rules()) == list(r.grammar_rules())
+
+
+# -- deterministic corpus (always runs) -------------------------------------
+
+
+def test_fuzz_seed_parity():
+    """>= 8 pinned fuzz seeds across alphabet sizes, with injected runs
+    (the RLE fast path must stay bit-identical to scalar pushes)."""
+    for seed in range(10):
+        rng = np.random.RandomState(seed)
+        for _ in range(30):
+            n = rng.randint(0, 220)
+            alpha = int(rng.choice([1, 2, 3, 4, 5, 10, 30]))
+            s = rng.randint(0, alpha, n).tolist()
+            if n and rng.rand() < 0.6:
+                for _ in range(rng.randint(1, 4)):
+                    pos = rng.randint(0, len(s))
+                    s = s[:pos] + [s[pos]] * rng.randint(2, 12) + s[pos:]
+            _check_parity(s)
+
+
+def test_rle_adversarial_streams():
+    """Streams where collapsing a run before pushing would skip a digram
+    match that scalar pushes take (e.g. the second (x, a) digram in
+    [x, a, b, x, a, a] matches before the run merge) — the batch path
+    must replay the match in the same online order."""
+    cases = [
+        [3, 1, 2, 3, 1, 1],
+        [0, 1, 0, 1, 1, 0, 1],
+        [2, 2, 2, 1, 2, 2, 2, 1, 2, 2, 2],
+        [0, 0, 1, 0, 0, 1, 0, 0],
+        [1, 2, 1, 2, 2, 2, 1, 2, 1],
+        [0] * 50 + [1] + [0] * 50 + [1] + [0] * 50,
+    ]
+    for s in cases:
+        _check_parity(s)
+
+
+def test_zoo_stream_parity():
+    """Kernel parity on the reduced scenario zoo's actual interned rank
+    streams (the inputs compress_store feeds the kernel in production)."""
+    from benchmarks.synthesize_time import (
+        _assert_stream_parity, _distinct_local_streams,
+    )
+    from repro.configs.registry import SCENARIO_IDS, build_scenario
+
+    total = 0
+    for name in list(SCENARIO_IDS)[:3]:
+        store = build_scenario(name, n_ranks=4, steps=2)
+        streams = _distinct_local_streams(store)
+        assert streams
+        _assert_stream_parity(streams)
+        total += len(streams)
+    assert total >= 3
+
+
+def test_push_run_exponent_edges():
+    """push_run edge cases: zero/negative counts, O(1) huge counts,
+    exponent merges across run boundaries."""
+    f = Flat()
+    f.push_run(1, 0)       # no-op, like the reference
+    f.push_run(1, -3)
+    assert f.grammar_rules() == {0: []}
+    f.push(1)
+    f.push_run(2, 10 ** 9)          # a billion-iteration loop in O(1)
+    f.push_run(2, 10 ** 9)          # merges into 2e9 without expansion
+    f.push(3)
+    rules = f.grammar_rules()
+    assert sum(len(b) for b in rules.values()) <= 4
+    assert ("t", 2, 2 * 10 ** 9) in rules[0]
+    # parity on run sequences that trigger merges and matches
+    rng = np.random.RandomState(3)
+    for _ in range(50):
+        n = rng.randint(0, 40)
+        runs = list(zip(rng.randint(0, 3, n).tolist(),
+                        rng.randint(1, 9, n).tolist()))
+        _check_runs_parity(runs)
+
+
+def test_rule_utility_inline_chains():
+    """Periodic streams drive create-substitute-inline churn every period
+    (rules spliced back into their parent) — the flat kernel must replay
+    the whole chain identically, including rule-id accounting."""
+    for period, reps in (([1, 2, 1, 3], 50), ([1, 2, 3, 4, 1, 2], 30),
+                         ([0, 1, 2, 0, 1, 3], 40)):
+        _check_parity(period * reps)
+        _check_parity(period * reps + period[:2])
+    # nested loops: inner rule must survive (exponent > 1 blocks inlining)
+    inner = [1, 2] * 5 + [3]
+    _check_parity((inner * 8 + [4]) * 6)
+
+
+def test_negative_terminals_rejected():
+    f = Flat()
+    with pytest.raises(ValueError):
+        f.push(-1)
+    with pytest.raises(ValueError):
+        f.push_runs([0, -2], [1, 1])
+
+
+def test_no_silent_reference_fallback():
+    """The production wiring must expose the flat kernel — a fallback to
+    the reference would silently forfeit the perf tier (CI runs the same
+    guard via benchmarks/synthesize_time.py --parity)."""
+    assert sequitur.Sequitur.KERNEL == "flat"
+    assert sequitur_reference.Sequitur.KERNEL == "reference"
+    assert trace_ir.Sequitur is sequitur.Sequitur
+    assert sequitur.Sequitur is not sequitur_reference.Sequitur
+
+
+def test_columns_export():
+    f = Flat()
+    f.push_ids([0, 1, 0, 1, 0, 1])
+    cols = f.columns()
+    assert set(cols) == {"sym", "exp", "prev", "next"}
+    n = len(cols["sym"])
+    assert all(len(c) == n for c in cols.values())
+    assert cols["sym"][0] == -2**31        # main guard sentinel
+    # live links point inside the pool
+    live = cols["next"][cols["next"] >= 0]
+    assert live.max(initial=0) < n
+
+
+def test_rle_runs_helper():
+    ids, counts = rle_runs(np.asarray([5, 5, 5, 2, 2, 7], dtype=np.int64))
+    assert ids == [5, 2, 7] and counts == [3, 2, 1]
+    assert rle_runs(np.zeros(0, dtype=np.int64)) == ([], [])
+
+
+def test_cached_rules_round_trip_json():
+    """GrammarCache persistence must preserve rule-id order and body
+    tuples exactly (to_json equality after a save/load round trip)."""
+    from repro.core.corpus_store import GrammarCache
+
+    rng = np.random.RandomState(9)
+    stream = np.asarray(rng.randint(0, 4, 150), dtype=np.int64)
+    f = Flat()
+    f.push_ids(stream)
+    rules = f.grammar_rules()
+    cache = GrammarCache()
+    key = cache.key(stream, 0.5)
+    cache.put(key, rules)
+    import tempfile
+    from pathlib import Path
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "grammar_cache.json"
+        cache.save(path)
+        loaded = GrammarCache.load(path)
+    table = TerminalTable()
+    assert Grammar(rules=loaded.get(key), table=table).to_json() \
+        == Grammar(rules=rules, table=table).to_json()
+    assert loaded.hits == 1
+    # different threshold -> different key (conservative keying)
+    assert cache.key(stream, 0.5) != cache.key(stream, 0.7)
+
+
+# -- randomized exploration (hypothesis-gated) -------------------------------
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.lists(st.integers(0, 3), max_size=120))
+    @settings(max_examples=300, deadline=None)
+    def test_parity_property(seq):
+        """Core invariant: flat kernel output == reference, any stream."""
+        _check_parity(seq)
+
+    @given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 9)),
+                    max_size=40))
+    @settings(max_examples=200, deadline=None)
+    def test_push_run_parity_property(runs):
+        """push_run with arbitrary (symbol, count) sequences stays in
+        lockstep with the reference."""
+        _check_runs_parity(runs)
+
+else:            # keep the gating visible in the test report
+
+    @needs_hypothesis
+    def test_parity_property():
+        raise AssertionError("unreachable: skipif guards this test")
+
+    @needs_hypothesis
+    def test_push_run_parity_property():
+        raise AssertionError("unreachable: skipif guards this test")

@@ -322,3 +322,39 @@ def test_compress_store_rejects_ids_without_reps():
     with pytest.raises(ValueError):
         compress_store(st, cluster_ids=np.zeros(st.n_compute_events,
                                                 dtype=np.int64))
+
+
+def test_rank_events_gather_matches_per_token_decode():
+    """The interned-key gather in rank_events must reproduce the naive
+    per-token decode exactly (value-equal ComputeEvents may alias one
+    instance — events are frozen)."""
+    st = TraceStore.from_rank_traces(_mixed_traces(), {"x": 4})
+    for r in range(st.n_ranks):
+        got = st.rank_events(r)
+        want = []
+        for t in st.rank_tokens(r).tolist():
+            if t < 0:
+                want.append(st.comm_pool[-t - 1])
+            else:
+                want.append(ComputeEvent(tuple(st.metrics[t].tolist()),
+                                         cluster_id=int(st.cluster_ids[t])))
+        assert got == want
+    # SPMD-tiled rows intern by value: identical template events share
+    # one instance across ranks
+    e0 = st.rank_events(1)[0]
+    e1 = st.rank_events(2)[0]
+    assert e0 is e1
+
+
+def test_compress_store_profile_counters():
+    st = TraceStore.from_rank_traces(_mixed_traces(), {"x": 4})
+    profile = {}
+    compress_store(st, profile=profile)
+    assert profile["n_distinct_streams"] == 2      # rank 0 vs ranks 1-3
+    assert profile["n_sequitur_runs"] == 2
+    assert profile["grammar_cache_hits"] == 0      # no cache passed
+    for k in ("cluster_ms", "intern_ms", "grammar_ms", "merge_ms"):
+        assert profile[k] >= 0.0
+    # profile accumulates across calls (one dict for a whole corpus)
+    compress_store(st, profile=profile)
+    assert profile["n_sequitur_runs"] == 4
