@@ -1,0 +1,168 @@
+"""CI guard: grammar-compiled replay parity + executable-size bound.
+
+Two hard gates for the compiled (program-table) codegen flavor, run as part
+of the corpus-smoke CI job (``python -m benchmarks.codegen_parity --smoke``):
+
+1. **Oracle parity** — for every scenario in the zoo plus the 64-rank
+   synthetic trace, the compiled module and the unrolled
+   ``codegen_reference`` module must produce **bit-identical δ̄** (every
+   rank, every metric) and **identical per-rank comm sequences** (the
+   symbolic expansion of the emitted program tables must equal the merged
+   grammar's lossless expansion).  Any drift is a synthesis bug, never a
+   tolerance question.
+
+2. **Executable-size guard** — the compiled executable is sized by the
+   *grammar*, not the *trace*: growing the synthetic trace's repeated
+   structure ≥10× must leave the compiled jaxpr equation count the same
+   order (sublinear in events; here: bounded by 2× — in practice flat),
+   while the unrolled flavor's never beats the compiled one.
+
+The full run (``--full``) additionally snapshots the rows to
+``artifacts/BENCH_6.json`` via :func:`benchmarks.synthesize_time.write_artifacts`.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+_ZOO = ("transformer-dp", "ssm-decode", "moe-ep")
+
+
+def _pair(name: str, **synth_kw):
+    """Synthesize the same input twice — compiled table and unrolled
+    reference — returning both results."""
+    from repro.core.synthesize import synthesize
+
+    res = synthesize(name=f"{name}_tbl", **synth_kw)
+    ref = synthesize(name=f"{name}_unr", codegen="unrolled", **synth_kw)
+    assert res.proxy.module.CODEGEN == "table", name
+    assert ref.proxy.module.CODEGEN == "unrolled", name
+    return res, ref
+
+
+def _assert_parity(name: str, res, ref, mesh=None) -> dict:
+    """δ̄ bit-identity + comm-sequence equality, compiled vs unrolled."""
+    from benchmarks.common import exec_size_cols
+
+    n_ranks = res.merged.n_ranks
+    assert res.proxy.module.SIGNATURE_GROUPS == \
+        ref.proxy.module.SIGNATURE_GROUPS, name
+    for r in range(n_ranks):
+        assert res.proxy.module.expand_rank_ids(r) == \
+            res.merged.expand_rank(r), (name, r, "comm/terminal sequence")
+        assert np.array_equal(res.proxy.rank_metrics(r),
+                              ref.proxy.rank_metrics(r)), (name, r, "δ̄")
+    fid_t = res.fidelity(sample_ranks=None)
+    fid_u = ref.fidelity(sample_ranks=None)
+    assert np.array_equal(fid_t.delta, fid_u.delta), name
+    assert fid_t.comm_lossless and fid_u.comm_lossless, name
+    if mesh is not None:
+        fm_t = res.proxy.fidelity(res.rank_traces, sample_ranks=None,
+                                  mesh=mesh)
+        fm_u = ref.proxy.fidelity(ref.rank_traces, sample_ranks=None,
+                                  mesh=mesh)
+        assert np.array_equal(fm_t.delta, fm_u.delta), name
+        assert fm_t.mesh_checked and fm_u.mesh_checked, name
+    tab, unr = exec_size_cols(res.proxy), exec_size_cols(ref.proxy)
+    assert tab["jaxpr_eqns"] <= unr["jaxpr_eqns"], (name, tab, unr)
+    return {
+        "program": f"codegen_parity_{name}",
+        "ranks": n_ranks,
+        "events": res.stats["n_events"],
+        "delta_bit_identical": True,
+        "comm_sequences_identical": True,
+        "mesh_checked": mesh is not None,
+        "table_jaxpr_eqns": tab["jaxpr_eqns"],
+        "unrolled_jaxpr_eqns": unr["jaxpr_eqns"],
+        "table_compile_ms": tab["compile_ms"],
+        "unrolled_compile_ms": unr["compile_ms"],
+    }
+
+
+def zoo_rows(scenarios=_ZOO, n_ranks: int = 8, steps: int = 2,
+             mesh_parity: bool = True) -> list[dict]:
+    """Oracle parity across the scenario zoo, LocalSim and mesh replay."""
+    import jax
+
+    from repro.configs.registry import build_scenario
+    from repro.core.replay import submesh_axis_sizes
+    from repro.launch.mesh import make_replay_mesh
+
+    rows = []
+    for scen in scenarios:
+        store = build_scenario(scen, n_ranks=n_ranks, steps=steps)
+        res, ref = _pair(scen.replace("-", "_"), store=store)
+        mesh = None
+        if mesh_parity:
+            mesh = make_replay_mesh(submesh_axis_sizes(
+                jax.device_count(), dict(res.proxy.axis_sizes)))
+        rows.append(_assert_parity(scen, res, ref, mesh=mesh))
+    return rows
+
+
+def size_guard_rows(n_ranks: int = 64, reps: int = 20,
+                    scale: int = 10) -> list[dict]:
+    """Compiled jaxpr size must be O(grammar): a trace with ``scale``× more
+    repeated structure compiles to a same-order executable."""
+    from benchmarks.synthesize_time import _synthetic_traces
+    from repro.core.synthesize import synthesize
+
+    rows, eqns = [], {}
+    for mult in (1, scale):
+        traces = _synthetic_traces(n_ranks, reps=reps * mult)
+        res, ref = _pair(f"size_{mult}x", rank_traces=traces,
+                         axis_sizes={"x": n_ranks})
+        row = _assert_parity(f"size_{mult}x_{n_ranks}ranks", res, ref,
+                             mesh=None)
+        eqns[mult] = row["table_jaxpr_eqns"]
+        rows.append(row)
+    growth = eqns[scale] / max(eqns[1], 1)
+    # sublinear-in-events bound: a scale-x event count must not scale the
+    # compiled executable; 2x slack covers grammar-shape jitter at the
+    # boundary, in practice the count is flat
+    assert growth <= 2.0, (
+        f"compiled executable grew {growth:.1f}x under a {scale}x trace — "
+        f"O(grammar) sizing regressed: {eqns}")
+    rows[-1].update({"event_scale": scale,
+                     "eqn_growth": round(growth, 2),
+                     "sublinear": True})
+    return rows
+
+
+def run() -> list[dict]:
+    return zoo_rows() + size_guard_rows()
+
+
+def smoke() -> None:
+    """CI gate: small zoo + size guard, hard asserts, bounded runtime."""
+    rows = zoo_rows(scenarios=_ZOO[:2], n_ranks=4, steps=2)
+    rows += size_guard_rows(n_ranks=16, reps=12)
+    for r in rows:
+        print(", ".join(f"{k}={v}" for k, v in r.items()))
+    print("codegen parity OK")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: 2 zoo scenarios + 16-rank size guard")
+    ap.add_argument("--full", action="store_true",
+                    help="full zoo + 64-rank size guard; snapshots "
+                         "artifacts/BENCH_6.json")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        from benchmarks.synthesize_time import write_artifacts
+
+        rows = run()
+        for r in rows:
+            print(", ".join(f"{k}={v}" for k, v in r.items()))
+        write_artifacts(rows, snapshot="BENCH_6.json",
+                        suite="codegen_parity")

@@ -98,3 +98,28 @@ PROGRAMS = {
     "stencil2d": stencil_program,
     "dp_train": allreduce_train_program,
 }
+
+
+def exec_size_cols(proxy) -> dict:
+    """Executable-size columns shared by the benchmark tables: the largest
+    signature group's traced jaxpr equation count (O(grammar) for compiled
+    modules, O(trace) for the unrolled reference) plus the wall-clock cost
+    of tracing+compiling that group's dispatchable from cold."""
+    import time
+
+    import jax
+
+    from repro.core.replay import init_replay_state
+    from repro.sharding.collectives import LocalSim
+
+    counts = proxy.group_eqn_counts()
+    sig = max(counts, key=counts.get)
+    rank = next(grp[0] for s, grp in proxy.signature_groups() if s == sig)
+    comm = LocalSim()
+    fn = jax.jit(lambda s: proxy.module.run_rank(s, comm, rank))
+    st = init_replay_state(proxy.module)
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(st))
+    compile_ms = (time.perf_counter() - t0) * 1e3
+    return {"jaxpr_eqns": max(counts.values()),
+            "compile_ms": round(compile_ms, 1)}

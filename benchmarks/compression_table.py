@@ -1,10 +1,15 @@
 """Paper Table 3 analog: per program × rank count — #events, trace size,
-compressed grammar size, synthesis overhead, relative error."""
+compressed grammar size, synthesis overhead, relative error.
+
+``jaxpr_eqns``/``compile_ms`` report the grammar-compiled executable's
+traced size and cold compile cost for the largest signature group — the
+O(grammar)-vs-O(trace) axis the replay tier pins (see
+benchmarks/codegen_parity.py for the hard guard)."""
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import PROGRAMS, pipeline_traces
+from benchmarks.common import PROGRAMS, exec_size_cols, pipeline_traces
 
 
 def run() -> list[dict]:
@@ -27,6 +32,7 @@ def run() -> list[dict]:
                 "synth_sec": round(dt, 2),
                 "rel_err": round(fid.mean, 4),
                 "lossless_comm": fid.comm_lossless,
+                **exec_size_cols(res.proxy),
             })
     # pipeline (host-level traces, heterogeneous ranks)
     for n in (4, 8):
@@ -45,5 +51,6 @@ def run() -> list[dict]:
             "synth_sec": round(dt, 2),
             "rel_err": round(fid.mean, 4),
             "lossless_comm": fid.comm_lossless,
+            **exec_size_cols(res.proxy),
         })
     return rows

@@ -112,7 +112,41 @@ def _batched_replay_rows() -> list[dict]:
             np.max(np.abs(fid_mesh.delta - fid_per_rank.delta))),
         "mesh_checked": fid_mesh.mesh_checked,
     })
+    rows.append(_codegen_row(res))
     return rows
+
+
+def _codegen_row(res) -> dict:
+    """Grammar-compiled vs unrolled-reference executables on the same
+    grammar: per-signature-group traced eqn counts and cold compile cost.
+    δ̄ bit-identity between the flavors is asserted here too — the
+    benchmark must never report timings for diverging programs."""
+    from benchmarks.common import exec_size_cols
+    from repro.core.codegen_reference import generate_source as emit_unrolled
+    from repro.core.replay import ProxyProgram, load_module
+
+    src_u = emit_unrolled(res.merged, res.proxy.combos, name="rt_unrolled",
+                          axis_sizes=res.proxy.axis_sizes)
+    mod_u = load_module(src_u, "rt_unrolled")
+    ref = ProxyProgram(src_u, mod_u, res.merged, res.proxy.combos,
+                       res.proxy.axis_sizes)
+    for r in (0, 1):
+        assert np.array_equal(res.proxy.rank_metrics(r),
+                              ref.rank_metrics(r)), f"δ̄ diverged, rank {r}"
+    tab = exec_size_cols(res.proxy)
+    unr = exec_size_cols(ref)
+    return {
+        "program": f"codegen_table_vs_unrolled_{_BATCH_RANKS}ranks",
+        "table_jaxpr_eqns": tab["jaxpr_eqns"],
+        "unrolled_jaxpr_eqns": unr["jaxpr_eqns"],
+        "eqn_ratio": round(unr["jaxpr_eqns"] / max(tab["jaxpr_eqns"], 1), 2),
+        "table_compile_ms": tab["compile_ms"],
+        "unrolled_compile_ms": unr["compile_ms"],
+        "group_eqns_table": {str(k): v
+                             for k, v in res.proxy.group_eqn_counts().items()},
+        "group_eqns_unrolled": {str(k): v
+                                for k, v in ref.group_eqn_counts().items()},
+    }
 
 
 def run() -> list[dict]:

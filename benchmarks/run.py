@@ -16,7 +16,7 @@ import time         # noqa: E402
 from pathlib import Path  # noqa: E402
 
 SUITES = ("compression_table", "minime_compare", "replay_time",
-          "synthesize_time", "portability", "proxy_dryrun")
+          "synthesize_time", "codegen_parity", "portability", "proxy_dryrun")
 
 
 def main() -> None:

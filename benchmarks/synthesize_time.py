@@ -422,26 +422,27 @@ def _incremental_rows(scenarios=_CORPUS_SCENARIOS + ("flash-ring",),
 
 
 def write_artifacts(rows: list[dict], snapshot: str | None = "BENCH_5.json",
-                    out_dir="artifacts") -> None:
-    """Merge the rows (keyed by ``program``) into the ``synthesize_time``
-    entry of ``<out_dir>/benchmarks.json`` and refresh the pinned
-    snapshot, so future PRs have a machine-readable perf baseline to
-    regress against.  Merging means a partial run (``--profile``) updates
-    its own rows without clobbering the rest of the suite's trajectory."""
+                    out_dir="artifacts",
+                    suite: str = "synthesize_time") -> None:
+    """Merge the rows (keyed by ``program``) into the ``suite`` entry of
+    ``<out_dir>/benchmarks.json`` and refresh the pinned snapshot, so
+    future PRs have a machine-readable perf baseline to regress against.
+    Merging means a partial run (``--profile``) updates its own rows
+    without clobbering the rest of the suite's trajectory."""
     out = Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     bpath = out / "benchmarks.json"
     existing = json.loads(bpath.read_text()) if bpath.exists() else {}
     merged = {r.get("program", f"row{i}"): r
-              for i, r in enumerate(existing.get("synthesize_time", []))}
+              for i, r in enumerate(existing.get(suite, []))}
     for i, r in enumerate(rows):
         merged[r.get("program", f"new{i}")] = r
     rows_out = list(merged.values())
-    existing["synthesize_time"] = rows_out
+    existing[suite] = rows_out
     bpath.write_text(json.dumps(existing, indent=1))
     if snapshot:
         (out / snapshot).write_text(json.dumps(
-            {"suite": "synthesize_time", "rows": rows_out}, indent=1))
+            {"suite": suite, "rows": rows_out}, indent=1))
     print(f"wrote {bpath}" + (f" and {out / snapshot}" if snapshot else ""))
 
 

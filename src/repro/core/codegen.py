@@ -1,21 +1,33 @@
 """Code generation (paper §2.7, Algorithm 2): grammar → executable source.
 
-The merged grammar is emitted as a self-contained Python module:
+The merged grammar is emitted as a self-contained Python module carrying a
+**program table** — the grammar itself, not an unrolled statement per
+symbol — so the traced executable is sized O(grammar), not O(trace):
 
-  * communication terminals → ``comm.do(...)`` calls carrying the exact
-    traced parameters (kind, payload shape/dtype, mesh axes, permute detail)
-    — lossless, like the paper's direct MPI-call emission;
-  * computation terminals → ``blocks.run_combo(st, x)`` with the QP-searched
-    block counts (paper: "combine the code blocks into a function");
-  * non-terminals → Python functions; run-length exponents → ``fori_loop``
-    via :func:`repro.core.replay.rep` (the O(1) loop replay of a^i symbols);
-  * main rules → per-cluster driver functions with rank-set branch guards,
-    consecutive symbols sharing a guard are grouped (paper: "compare and
-    merge the same rank lists to reduce redundant branch statements").
+  * communication terminals → ``('comm', buf, dict(kind=..., ...))``
+    descriptors carrying the exact traced parameters (kind, payload
+    shape/dtype, mesh axes, permute detail) — lossless, like the paper's
+    direct MPI-call emission;
+  * computation terminals → ``('compute', x, unroll)`` descriptors with the
+    QP-searched block counts (paper: "combine the code blocks into a
+    function");
+  * non-terminals → ``RULES[rid]`` bodies of ``(kind, ref, exp)`` symbols;
+  * signature groups → ``GROUP_PROGRAMS[gi]``, the flattened guard-resolved
+    symbol sequence each group executes.
 
-The module executes under any comm backend: ``LocalSim`` on one host, or
-``DeviceComm`` inside ``shard_map`` on a real mesh, where its lowered HLO
-reproduces the original program's collective schedule.
+:class:`repro.core.progtable.ProgramTable` lowers the tables at import
+time: run-length exponents become rolled ``fori_loop``/``scan`` via
+:func:`repro.core.replay.rep`, nested rules become nested scans, and long
+heterogeneous sequences dispatch through ``lax.switch`` over the distinct
+symbols (same-signature terminals share one branch).
+
+The unrolled per-symbol emitter is preserved verbatim as
+:mod:`repro.core.codegen_reference` — the parity oracle: both flavors must
+produce bit-identical δ̄ and per-rank comm sequences (pinned by tests and
+the CI parity step).  The module executes under any comm backend:
+``LocalSim`` on one host, or ``DeviceComm`` inside ``shard_map`` on a real
+mesh, where its lowered HLO reproduces the original program's collective
+schedule.
 """
 from __future__ import annotations
 
@@ -27,17 +39,52 @@ from repro.core.interproc import MergedProgram
 
 
 def _fmt_rankset(rs: frozenset, n_ranks: int) -> str:
-    """Compact literal: ALL / range / strided range / explicit set."""
+    """Compact literal: ALL / range / strided range / explicit set.
+
+    The range form needs >= 3 elements (mirroring :func:`_fmt_ranktuple`):
+    a 2-element set like ``{0, 5}`` is an arithmetic progression too, but
+    ``frozenset(range(0, 6, 5))`` is opaque where ``frozenset((0, 5,))``
+    is obvious, and saves nothing."""
     if len(rs) == n_ranks:
         return "ALL"
     s = sorted(rs)
-    if len(s) == 1:
-        return f"frozenset(({s[0]},))"
-    step = s[1] - s[0]
-    if step > 0 and all(b - a == step for a, b in zip(s, s[1:])):
-        return f"frozenset(range({s[0]}, {s[-1] + 1}, {step}))" if step > 1 \
-            else f"frozenset(range({s[0]}, {s[-1] + 1}))"
+    if len(s) >= 3:
+        step = s[1] - s[0]
+        if step > 0 and all(b - a == step for a, b in zip(s, s[1:])):
+            return f"frozenset(range({s[0]}, {s[-1] + 1}, {step}))" if step > 1 \
+                else f"frozenset(range({s[0]}, {s[-1] + 1}))"
     return "frozenset((" + ", ".join(map(str, s)) + ",))"
+
+
+# ---------------------------------------------------------------------------
+# shared structural computation (table emitter + unrolled reference)
+# ---------------------------------------------------------------------------
+
+
+def _comm_buffers(merged: MergedProgram) -> dict[tuple, str]:
+    """Comm buffer pool: one buffer per distinct payload (shape, dtype)."""
+    bufs: dict[tuple, str] = {}
+    for ev in merged.table.events:
+        if is_comm(ev):
+            key = (ev.shape, ev.dtype)
+            if key not in bufs:
+                bufs[key] = f"buf{len(bufs)}"
+    return bufs
+
+
+def _main_runs(merged: MergedProgram) -> list[list[tuple[frozenset, list]]]:
+    """Per-cluster guard runs: consecutive main symbols sharing a rank set
+    are grouped (Alg. 2 lines 15-18), preserving symbol order."""
+    out: list[list[tuple[frozenset, list]]] = []
+    for main in merged.mains:
+        runs: list[tuple[frozenset, list]] = []
+        for kind, ref, exp, rs in main:
+            if runs and runs[-1][0] == rs:
+                runs[-1][1].append((kind, ref, exp))
+            else:
+                runs.append((rs, [(kind, ref, exp)]))
+        out.append(runs)
+    return out
 
 
 def generate_source(merged: MergedProgram,
@@ -45,7 +92,7 @@ def generate_source(merged: MergedProgram,
                     name: str = "proxy",
                     axis_sizes: Mapping[str, int] | None = None,
                     count_scale: float = 1.0) -> str:
-    """Emit the proxy-app module source.
+    """Emit the grammar-compiled proxy-app module source.
 
     ``combos[gid]`` is ``(x, unroll)`` — the 11-int loop-turn vector and the
     block-instances-per-turn factor — for the compute terminal with global
@@ -64,21 +111,17 @@ def generate_source(merged: MergedProgram,
     w("")
     w("Synthesized by repro.core (Siesta-JAX): the collective skeleton is a")
     w("lossless replay of the traced program; compute segments are QP-fitted")
-    w("block combinations.  Do not edit."  '"""')
-    w("from jax import lax  # noqa: F401")
-    w("from repro.core import blocks as _blocks")
-    w("from repro.core.replay import rep as _rep")
+    w("block combinations.  Grammar-compiled flavor: the tables below ARE the")
+    w("merged grammar; repro.core.progtable lowers them to rolled scan/switch")
+    w("nests sized O(grammar).  Do not edit."  '"""')
+    w("from repro.core.progtable import ProgramTable as _ProgramTable")
+    w("from repro.core.progtable import expand_symbols as _expand_symbols")
     w("")
+    w("CODEGEN = 'table'")
     w(f"N_RANKS = {merged.n_ranks}")
     w(f"AXIS_SIZES = {dict(axis_sizes)!r}")
 
-    # -- comm buffer pool (one per distinct payload shape/dtype) --------------
-    bufs: dict[tuple, str] = {}
-    for ev in merged.table.events:
-        if is_comm(ev):
-            key = (ev.shape, ev.dtype)
-            if key not in bufs:
-                bufs[key] = f"buf{len(bufs)}"
+    bufs = _comm_buffers(merged)
     w("COMM_BUFFERS = {")
     for (shape, dtype), bname in bufs.items():
         w(f"    {bname!r}: ({shape!r}, {dtype!r}),")
@@ -86,89 +129,49 @@ def generate_source(merged: MergedProgram,
     w("ALL = frozenset(range(N_RANKS))")
     w("")
 
-    # -- terminals -------------------------------------------------------------
+    # -- terminal descriptors --------------------------------------------------
+    w("#: terminal descriptors, indexed by global terminal id; comm terminals")
+    w("#: keep their exact traced parameters (lossless collective skeleton)")
+    w("TERMINALS = (")
     for gid, ev in enumerate(merged.table.events):
         if is_comm(ev):
             bname = bufs[(ev.shape, ev.dtype)]
-            w(f"def t{gid}(st, comm):  # {ev.kind} {ev.dtype}{list(ev.shape)} over {ev.axes}")
-            w(f"    return comm.do(st, {bname!r}, kind={ev.kind!r}, "
+            w(f"    # t{gid}: {ev.kind} {ev.dtype}{list(ev.shape)} over {ev.axes}")
+            w(f"    ('comm', {bname!r}, dict(kind={ev.kind!r}, "
               f"axes={ev.axes!r}, detail={ev.detail!r}, "
-              f"shape={ev.shape!r}, dtype={ev.dtype!r})")
+              f"shape={ev.shape!r}, dtype={ev.dtype!r})),")
         else:
             combo = combos.get(gid)
             if combo is None:
                 raise KeyError(f"no block combo for compute terminal {gid}")
             x, unroll = combo
-            w(f"def t{gid}(st, comm):  # MPI_Compute proxy, cluster {ev.cluster_id}")
-            w(f"    return _blocks.run_combo(st, {tuple(int(v) for v in x)!r}, "
-              f"unroll={int(unroll)})")
-        w("")
+            w(f"    # t{gid}: MPI_Compute proxy, cluster {ev.cluster_id}")
+            w(f"    ('compute', {tuple(int(v) for v in x)!r}, {int(unroll)}),")
+    w(")")
+    w("")
 
-    # -- non-terminals (children before parents) -------------------------------
-    order = _topo_order(merged.rules)
-    for rid in order:
-        w(f"def r{rid}(st, comm):")
-        body = merged.rules[rid]
-        if not body:
-            w("    return st")
-            w("")
-            continue
-        for kind, ref, exp in body:
-            fn = f"t{ref}" if kind == "t" else f"r{ref}"
-            if exp == 1:
-                w(f"    st = {fn}(st, comm)")
-            else:
-                w(f"    st = _rep({fn}, {exp}, st, comm)")
-        w("    return st")
-        w("")
+    # -- rule bodies (children before parents, for readability) ---------------
+    w("#: non-terminal bodies as (kind, ref, exp) symbol tuples")
+    w("RULES = {")
+    for rid in merged.rule_topo_order():
+        body = tuple((k, int(r), int(e)) for k, r, e in merged.rules[rid])
+        w(f"    {rid}: {body!r},")
+    w("}")
+    w("")
 
-    # -- main rules with rank-set guards ----------------------------------------
+    # -- cluster / guard metadata (program_signature support) ------------------
+    runs_per_cluster = _main_runs(merged)
     guards_meta: list[list[str]] = []
-    cluster_runs: list[list[frozenset | None]] = []   # None == unguarded run
-    cluster_run_syms: list[list[tuple[frozenset, list]]] = []  # runs w/ symbols
-    for ci, (main, cranks) in enumerate(zip(merged.mains, merged.cluster_ranks)):
-        w(f"def main{ci}(st, comm, rank):")
-        if not main:
-            w("    return st")
-            w("")
-            guards_meta.append([])
-            cluster_runs.append([])
-            cluster_run_syms.append([])
-            continue
-        meta = []
-        # group consecutive symbols sharing a rank set (Alg. 2 lines 15-18)
-        runs: list[tuple[frozenset, list]] = []
-        for kind, ref, exp, rs in main:
-            if runs and runs[-1][0] == rs:
-                runs[-1][1].append((kind, ref, exp))
-            else:
-                runs.append((rs, [(kind, ref, exp)]))
-        for rs, syms in runs:
-            full = rs >= cranks
-            indent = "    "
-            if not full:
-                w(f"    if rank in {_fmt_rankset(rs, merged.n_ranks)}:")
-                indent = "        "
-            for kind, ref, exp in syms:
-                fn = f"t{ref}" if kind == "t" else f"r{ref}"
-                if exp == 1:
-                    w(f"{indent}st = {fn}(st, comm)")
-                else:
-                    w(f"{indent}st = _rep({fn}, {exp}, st, comm)")
-            meta.append("None" if full else _fmt_rankset(rs, merged.n_ranks))
-        w("    return st")
-        w("")
-        guards_meta.append(meta)
+    cluster_runs: list[list[frozenset | None]] = []
+    for runs, cranks in zip(runs_per_cluster, merged.cluster_ranks):
+        guards_meta.append(["None" if rs >= cranks
+                            else _fmt_rankset(rs, merged.n_ranks)
+                            for rs, _ in runs])
         cluster_runs.append([None if rs >= cranks else rs for rs, _ in runs])
-        cluster_run_syms.append(runs)
-
-    # -- driver + signature -------------------------------------------------------
     w("CLUSTER_RANKS = (")
     for cr in merged.cluster_ranks:
         w(f"    {_fmt_rankset(cr, merged.n_ranks)},")
     w(")")
-    w("_MAINS = (" + ", ".join(f"main{i}" for i in range(len(merged.mains)))
-      + ("," if len(merged.mains) == 1 else "") + ")")
     w("_GUARDS = (")
     for meta in guards_meta:
         w("    (" + ", ".join(meta) + ("," if len(meta) == 1 else "") + "),")
@@ -178,17 +181,14 @@ def generate_source(merged: MergedProgram,
     # -- signature-group metadata (batched replay, §3.3) -----------------------
     # Ranks sharing a control-flow signature execute byte-identical programs,
     # so the replay engine can stack their states and run one compiled
-    # executable for the whole group.  Precomputed here so replay never has
-    # to probe program_signature rank by rank.  Each group also carries a
-    # device-count hint: the number of mesh devices that fully reproduces the
-    # collective span of the group's program (product of the traced sizes of
-    # every mesh axis its comm terminals touch; 1 for comm-free groups).  The
-    # mesh sweep scheduler in repro.core.replay partitions devices
-    # proportionally to these hints.
+    # executable for the whole group.  Each group carries a device-count
+    # hint (see codegen_reference for the unrolled twin of this block) and —
+    # table flavor only — its flattened guard-resolved symbol sequence in
+    # GROUP_PROGRAMS, which ProgramTable lowers to one rolled executable.
     sig_groups = compute_signature_groups(merged.cluster_ranks, cluster_runs,
                                           merged.n_ranks)
     run_axes = [[_syms_comm_axes(syms, merged.rules, merged.table)
-                 for _, syms in runs] for runs in cluster_run_syms]
+                 for _, syms in runs] for runs in runs_per_cluster]
     w("#: (signature, ranks, device_hint) triples; every rank appears in")
     w("#: exactly one group.")
     w("SIGNATURE_GROUPS = (")
@@ -196,14 +196,31 @@ def generate_source(merged: MergedProgram,
         hint = group_device_hint(sig, run_axes, axis_sizes, count_scale)
         w(f"    ({sig!r}, {_fmt_ranktuple(ranks)}, {hint}),")
     w(")")
+    w("#: GROUP_PROGRAMS[gi]: signature group gi's flattened symbol sequence")
+    w("GROUP_PROGRAMS = (")
+    for sig, _ranks in sig_groups:
+        prog: list[tuple] = []
+        for ci, run_ids in sig:
+            for i in run_ids:
+                prog.extend((k, int(r), int(e))
+                            for k, r, e in runs_per_cluster[ci][i][1])
+        w(f"    {tuple(prog)!r},")
+    w(")")
+    w("")
+    w("_PT = _ProgramTable(TERMINALS, RULES, GROUP_PROGRAMS)")
+    w("_GROUP_INDEX = {r: gi for gi, g in enumerate(SIGNATURE_GROUPS)")
+    w("                for r in g[1]}")
     w("")
     w(textwrap.dedent("""\
         def run_rank(st, comm, rank):
-            \"\"\"Execute rank ``rank``'s proxy program (host-level dispatch).\"\"\"
-            for ranks, fn in zip(CLUSTER_RANKS, _MAINS):
-                if rank in ranks:
-                    st = fn(st, comm, rank)
-            return st
+            \"\"\"Execute rank ``rank``'s proxy program (grammar-compiled).\"\"\"
+            return _PT.run(_GROUP_INDEX[rank], st, comm)
+
+
+        def expand_rank_ids(rank):
+            \"\"\"Terminal-id stream rank ``rank`` replays (symbolic, no
+            execution) — the lossless-expansion oracle of this module.\"\"\"
+            return _expand_symbols(GROUP_PROGRAMS[_GROUP_INDEX[rank]], RULES)
 
 
         def program_signature(rank):

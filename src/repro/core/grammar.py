@@ -96,6 +96,12 @@ class Grammar:
 
     def rule_depth(self, rid: int) -> int:
         """Tree height with terminals as leaves (paper §2.6.2)."""
+        return self.rule_depths()[rid]
+
+    def rule_depths(self) -> dict[int, int]:
+        """Depths of every rule in one shared-memo pass — callers that need
+        all depths (non-terminal merge, codegen lowering) pay O(symbols)
+        total instead of O(rules * symbols)."""
         memo: dict[int, int] = {}
 
         def depth(r: int) -> int:
@@ -107,7 +113,9 @@ class Grammar:
             memo[r] = d
             return d
 
-        return depth(rid)
+        for r in self.rules:
+            depth(r)
+        return memo
 
     def to_json(self) -> str:
         return json.dumps({

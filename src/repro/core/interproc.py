@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from repro.core.events import is_comm
 from repro.core.grammar import Grammar, Sym, TerminalTable
 
 #: merged main-rule entry: (kind, ref, exp, ranks)
@@ -54,6 +55,62 @@ class MergedProgram:
                     out.extend([ref] * exp)
                 else:
                     self._expand(ref, exp, out)
+
+    # -- structure exposure (codegen lowering, §2.7) --------------------------
+    #
+    # Codegen lowers rule bodies into rolled loop nests; these accessors hand
+    # it the structure it needs (evaluation order, nesting depth, per-rule
+    # comm-axis footprints) so the emitter never re-derives grammar shape.
+
+    def rule_topo_order(self) -> list[int]:
+        """Children-first ordering of the global rules (deterministic: ids
+        ascending within a level of readiness)."""
+        seen: set[int] = set()
+        out: list[int] = []
+
+        def visit(rid: int) -> None:
+            if rid in seen:
+                return
+            seen.add(rid)
+            for kind, ref, _ in self.rules[rid]:
+                if kind == "r":
+                    visit(ref)
+            out.append(rid)
+
+        for rid in sorted(self.rules):
+            visit(rid)
+        return out
+
+    def rule_depths(self) -> dict[int, int]:
+        """Depth of every global rule (terminals = leaves), bottom-up."""
+        depths: dict[int, int] = {}
+        for rid in self.rule_topo_order():
+            d = 1
+            for kind, ref, _ in self.rules[rid]:
+                if kind == "r":
+                    d = max(d, 1 + depths[ref])
+            depths[rid] = d
+        return depths
+
+    def max_rule_depth(self) -> int:
+        """Deepest rule nesting — the scan-nest depth of compiled modules."""
+        return max(self.rule_depths().values(), default=0)
+
+    def rule_comm_axes(self) -> dict[int, frozenset]:
+        """Mesh axes touched by comm terminals reachable from each rule,
+        computed once bottom-up (drives per-group device hints)."""
+        axes: dict[int, frozenset] = {}
+        for rid in self.rule_topo_order():
+            acc: set[str] = set()
+            for kind, ref, _ in self.rules[rid]:
+                if kind == "t":
+                    ev = self.table.events[ref]
+                    if is_comm(ev):
+                        acc.update(ev.axes)
+                else:
+                    acc |= axes[ref]
+            axes[rid] = frozenset(acc)
+        return axes
 
     # -- size accounting -------------------------------------------------------
 
@@ -158,7 +215,7 @@ def merge_nonterminals(grammars: Sequence[Grammar],
     glob: dict[int, list[Sym]] = {}
     rmaps: list[dict[int, int]] = []
     for g, tmap in zip(grammars, tmaps):
-        depths = {rid: g.rule_depth(rid) for rid in g.rules}
+        depths = g.rule_depths()
         rmap: dict[int, int] = {}
         for rid in sorted((r for r in g.rules if r != g.main_id),
                           key=lambda r: depths[r]):

@@ -58,12 +58,16 @@ from repro.core.events import Event, METRIC_NAMES, N_METRICS, is_comm
 from repro.core.tracer import trace_fn
 from repro.sharding.collectives import DeviceComm, LocalSim
 
-_UNROLL_LIMIT = 4
+#: Exponents up to this unroll at trace time; above it ``rep`` emits a
+#: rolled ``fori_loop`` (one body trace regardless of n).  Shared with the
+#: program-table lowering in :mod:`repro.core.progtable`, so compiled and
+#: unrolled modules make identical unroll-vs-loop decisions.
+REP_UNROLL_THRESHOLD = 4
 
 
 def rep(fn, n: int, st: dict, comm) -> dict:
     """Repeat ``fn`` n times: unrolled when small, ``fori_loop`` otherwise."""
-    if n <= _UNROLL_LIMIT:
+    if n <= REP_UNROLL_THRESHOLD:
         for _ in range(n):
             st = fn(st, comm)
         return st
@@ -706,9 +710,29 @@ class ProxyProgram:
         st = jax.eval_shape(lambda: init_replay_state(self.module))
         comm = LocalSim()
         self._counters["metric_traces"] += 1
-        tr = trace_fn(lambda s: self.module.run_rank(s, comm, rank), st)
+        # exact_cond: generated modules' control flow is driven entirely by
+        # constant opcode tables, so the walker resolves every switch to the
+        # branch actually replayed — grammar-compiled and unrolled modules
+        # measure bit-identically (the codegen_reference parity bar)
+        tr = trace_fn(lambda s: self.module.run_rank(s, comm, rank), st,
+                      exact_cond=True)
         out = tr.total_compute()
         self._metrics_cache[key] = out
+        return out
+
+    def group_eqn_counts(self, comm=None) -> dict[tuple, int]:
+        """Traced-executable size per signature group: total jaxpr equation
+        count of one representative rank's ``run_rank``.  For grammar-
+        compiled modules this is O(grammar); for the unrolled reference it
+        grows with the trace — the size bar the CI guard pins."""
+        from repro.core.progtable import jaxpr_eqn_count
+        comm = comm or LocalSim()
+        st = jax.eval_shape(lambda: init_replay_state(self.module))
+        out: dict[tuple, int] = {}
+        for sig, grp in self.signature_groups():
+            jaxpr = jax.make_jaxpr(
+                lambda s, _r=grp[0]: self.module.run_rank(s, comm, _r))(st)
+            out[sig] = jaxpr_eqn_count(jaxpr)
         return out
 
     def expand_rank_ids(self, rank: int) -> list[int]:

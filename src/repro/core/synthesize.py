@@ -129,11 +129,24 @@ def _fit_terminals(table: TerminalTable, reps: dict[int, np.ndarray],
 def _assemble_result(store: TraceStore, grammars, merged, rank_ids, fits,
                      combos, solver: str, name: str,
                      axis_sizes: dict[str, int], count_scale: float,
-                     out_dir) -> SynthesisResult:
+                     out_dir, codegen: str = "table") -> SynthesisResult:
     """Codegen + module load + stats: the shared back half of
-    :func:`synthesize` and :func:`synthesize_corpus`."""
-    source = generate_source(merged, combos, name, axis_sizes,
-                             count_scale=count_scale)
+    :func:`synthesize` and :func:`synthesize_corpus`.
+
+    ``codegen`` picks the emitter: ``"table"`` (default) is the grammar-
+    compiled program-table flavor (executables sized O(grammar));
+    ``"unrolled"`` is the per-symbol reference oracle
+    (:mod:`repro.core.codegen_reference`) — same δ̄ and comm sequences,
+    trace-sized executables."""
+    if codegen == "table":
+        emit = generate_source
+    elif codegen == "unrolled":
+        from repro.core.codegen_reference import generate_source as emit
+    else:
+        raise ValueError(f"unknown codegen flavor: {codegen!r} "
+                         "(expected 'table' or 'unrolled')")
+    source = emit(merged, combos, name, axis_sizes,
+                  count_scale=count_scale)
     module = load_module(source, name=f"{name}_mod", out_dir=out_dir)
     proxy = ProxyProgram(source, module, merged, combos, axis_sizes)
 
@@ -151,6 +164,7 @@ def _assemble_result(store: TraceStore, grammars, merged, rank_ids, fits,
         "grammar_bytes": grammar_bytes,
         "compression_ratio": trace_bytes / max(grammar_bytes, 1),
         "source_lines": source.count("\n") + 1,
+        "codegen": codegen,
         "solver": solver,
         "mean_fit_rel_err": float(np.mean(fit_errs)) if fit_errs else 0.0,
         "max_fit_rel_err": float(np.max(fit_errs)) if fit_errs else 0.0,
@@ -169,7 +183,8 @@ def synthesize(fn: Callable | None = None, *args,
                threshold: float = 0.5,
                solver: str = "auto",
                count_scale: float = 1.0,
-               out_dir=None) -> SynthesisResult:
+               out_dir=None,
+               codegen: str = "table") -> SynthesisResult:
     """Synthesize a proxy-app from a step function, pre-recorded traces,
     or a saved columnar :class:`TraceStore` (``TraceStore.load(path)`` —
     traces are offline artifacts).
@@ -185,6 +200,10 @@ def synthesize(fn: Callable | None = None, *args,
     time-dilated execution; useful to keep CPU-host replay benchmarks
     fast.  The generated module's per-group device hints scale with it, so
     the mesh sweep scheduler packs time-dilated groups onto fewer devices.
+
+    ``codegen="table"`` (default) emits the grammar-compiled program-table
+    module; ``"unrolled"`` emits the per-symbol reference oracle — both
+    replay the same program with bit-identical δ̄ and comm sequences.
     """
     if store is None:
         if rank_traces is not None:
@@ -200,7 +219,8 @@ def synthesize(fn: Callable | None = None, *args,
     fits, combos, solver = _fit_terminals(merged.table, reps, solver,
                                           count_scale)
     return _assemble_result(store, grammars, merged, rank_ids, fits, combos,
-                            solver, name, axis_sizes, count_scale, out_dir)
+                            solver, name, axis_sizes, count_scale, out_dir,
+                            codegen=codegen)
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,20 @@ from repro.core.metrics import (
     COLLECTIVE_PRIMS, I_SCAN, collective_event_info, eqn_cost,
 )
 
+try:  # jax >= 0.4.x exposes Literal via jax.extend; older via jax.core
+    from jax.extend.core import Literal as _Literal
+except ImportError:  # pragma: no cover - old JAX fallback
+    from jax.core import Literal as _Literal
+
+#: primitives never constant-folded by the exact walker: higher-order (their
+#: sub-jaxprs are walked structurally) and anything with host side effects
+_NO_FOLD_PRIMS = frozenset({
+    "scan", "while", "cond", "pjit", "closed_call", "core_call", "custom_lin",
+    "remat", "remat2", "checkpoint", "shard_map", "custom_jvp_call",
+    "custom_vjp_call", "custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr",
+})
+_FOLD_SIZE_CAP = 1 << 16   # skip folding on large operands (opcode arrays ok)
+
 
 @dataclasses.dataclass
 class Trace:
@@ -70,12 +84,28 @@ class Trace:
 
 
 class JaxprWalker:
-    """Recursive jaxpr walk producing the template event stream."""
+    """Recursive jaxpr walk producing the template event stream.
 
-    def __init__(self, axis_sizes: dict[str, int] | None = None):
+    ``exact_cond=True`` switches on constant-propagated control-flow
+    resolution: jaxpr constants (and scan-carried constants / per-iteration
+    xs slices) flow through an environment, ``cond`` equations with a
+    resolved scalar index walk **only the selected branch**, and equations
+    whose inputs are fully constant fold to zero cost (they are program-
+    counter bookkeeping — e.g. the ``clamp`` a ``lax.switch`` inserts — not
+    workload).  This is how grammar-compiled proxy modules (scan-over-
+    opcodes + switch dispatch, :mod:`repro.core.progtable`) measure
+    bit-identically to the unrolled reference.  Default off: original-
+    program traces (which may use data-dependent ``lax.cond``) keep the
+    legacy branch-0 / max-cost semantics, so fidelity baselines are
+    untouched.
+    """
+
+    def __init__(self, axis_sizes: dict[str, int] | None = None,
+                 exact_cond: bool = False):
         self.events: list[Event] = []
         self.pending = np.zeros(N_METRICS, dtype=np.float64)
         self.axis_sizes: dict[str, int] = dict(axis_sizes or {})
+        self.exact_cond = bool(exact_cond)
         self._group_pool: dict[tuple, int] = {}   # handle canonicalization
 
     # -- event emission -------------------------------------------------------
@@ -113,22 +143,83 @@ class JaxprWalker:
 
     # -- recursion ------------------------------------------------------------
 
-    def walk(self, jaxpr) -> None:
-        """Walk a (possibly Closed) jaxpr, emitting events in program order."""
-        jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
-        for eqn in jaxpr.eqns:
-            self._walk_eqn(eqn)
+    def walk(self, jaxpr, env: dict | None = None) -> None:
+        """Walk a (possibly Closed) jaxpr, emitting events in program order.
 
-    def _walk_eqn(self, eqn) -> None:
+        ``env`` (exact mode only) maps jaxpr Vars to known host values;
+        the closed jaxpr's own constants are merged in."""
+        inner = getattr(jaxpr, "jaxpr", jaxpr)
+        if self.exact_cond:
+            env = dict(env or {})
+            for var, val in zip(inner.constvars, getattr(jaxpr, "consts", ())):
+                env.setdefault(var, np.asarray(val))
+        else:
+            env = None
+        for eqn in inner.eqns:
+            self._walk_eqn(eqn, env)
+
+    # -- constant environment (exact mode) --------------------------------------
+
+    @staticmethod
+    def _val(v, env):
+        """Known host value of an atom, or None."""
+        if isinstance(v, _Literal):
+            return np.asarray(v.val)
+        return None if env is None else env.get(v)
+
+    def _walk_sub(self, closed, invars, env) -> None:
+        """Walk a sub-jaxpr, mapping resolved outer invars onto its invars."""
+        if not self.exact_cond:
+            self.walk(closed)
+            return
+        inner = getattr(closed, "jaxpr", closed)
+        sub: dict = {}
+        if invars is not None:
+            for ivar, outer in zip(inner.invars, invars):
+                val = self._val(outer, env)
+                if val is not None:
+                    sub[ivar] = val
+        self.walk(closed, sub)
+
+    def _try_fold(self, eqn, env) -> bool:
+        """Eagerly evaluate a fully-constant equation; record its outputs in
+        ``env`` and treat it as free.  Constant equations in generated
+        modules are dispatch bookkeeping (switch index clamps, opcode
+        casts), not replayed workload — costing them would break δ̄ parity
+        with the unrolled reference, which has no dispatch machinery."""
+        name = eqn.primitive.name
+        if name in _NO_FOLD_PRIMS or name in COLLECTIVE_PRIMS \
+                or "callback" in name:
+            return False
+        for v in eqn.params.values():
+            if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+                return False
+        vals = []
+        for v in eqn.invars:
+            val = self._val(v, env)
+            if val is None or np.size(val) > _FOLD_SIZE_CAP:
+                return False
+            vals.append(val)
+        try:
+            out = eqn.primitive.bind(*[np.asarray(v) for v in vals],
+                                     **eqn.params)
+        except Exception:
+            return False
+        outs = out if eqn.primitive.multiple_results else [out]
+        for var, val in zip(eqn.outvars, outs):
+            env[var] = np.asarray(val)
+        return True
+
+    def _walk_eqn(self, eqn, env: dict | None = None) -> None:
         name = eqn.primitive.name
         if name in COLLECTIVE_PRIMS:
             self._emit_comm(eqn)
             return
         if name in ("pjit", "closed_call", "core_call", "custom_lin"):
-            self.walk(eqn.params["jaxpr"])
+            self._walk_sub(eqn.params["jaxpr"], eqn.invars, env)
             return
         if name in ("remat2", "remat", "checkpoint"):
-            self.walk(eqn.params["jaxpr"])
+            self._walk_sub(eqn.params["jaxpr"], eqn.invars, env)
             return
         if name in ("custom_jvp_call", "custom_vjp_call", "custom_jvp_call_jaxpr",
                     "custom_vjp_call_jaxpr"):
@@ -145,29 +236,93 @@ class JaxprWalker:
             self.walk(eqn.params["jaxpr"])
             return
         if name == "scan":
-            self._walk_scan(eqn)
+            self._walk_scan(eqn, env)
             return
         if name == "while":
             self._walk_while(eqn)
             return
         if name == "cond":
-            self._walk_cond(eqn)
+            self._walk_cond(eqn, env)
+            return
+        if env is not None and self._try_fold(eqn, env):
             return
         self.pending += eqn_cost(eqn)
 
     # -- higher-order handling --------------------------------------------------
 
-    def _walk_scan(self, eqn) -> None:
+    def _scan_layout(self, eqn):
+        nc = int(eqn.params.get("num_consts", 0))
+        ncar = int(eqn.params.get("num_carry", 0))
+        return nc, ncar
+
+    def _scan_iter_env(self, body, invals, t: int) -> dict | None:
+        """Body-invar environment for scan iteration ``t``: scan constants
+        pass through whole, xs operands are sliced per iteration, carries
+        stay unknown."""
+        if invals is None:
+            return None
+        nc, ncar, vals = invals
+        inner = getattr(body, "jaxpr", body)
+        bvars = inner.invars
+        env: dict = {}
+        for var, val in zip(bvars[:nc], vals[:nc]):
+            if val is not None:
+                env[var] = val
+        for var, val in zip(bvars[nc + ncar:], vals[nc + ncar:]):
+            if val is not None:
+                env[var] = np.asarray(val)[t]
+        return env
+
+    def _walk_scan(self, eqn, env: dict | None = None) -> None:
         body = eqn.params["jaxpr"]
         length = int(eqn.params["length"])
-        if _contains_collective(body):
-            # exact event sequence; Sequitur's RLE makes this O(1) in grammar
-            for _ in range(length):
-                self.walk(body)
-        else:
-            cost = _subtree_cost(body)
-            self.pending += cost * length
+        invals = None
+        if self.exact_cond:
+            nc, ncar = self._scan_layout(eqn)
+            invals = (nc, ncar, [self._val(v, env) for v in eqn.invars])
+        has_cond = self.exact_cond and _contains_cond(body)
+        xs_known = (invals is not None
+                    and len(invals[2]) > invals[0] + invals[1]
+                    and all(v is not None
+                            for v in invals[2][invals[0] + invals[1]:]))
+        if _contains_collective(body) or (has_cond and xs_known):
+            # exact event sequence; Sequitur's RLE makes this O(1) in grammar.
+            # cond-bearing bodies with known xs (switch dispatch over a
+            # constant opcode array) also walk per-iteration: each step
+            # resolves to exactly the branch the reference emitted inline,
+            # and no scan-step serialization is charged — the reference's
+            # straight-line statements charge none either.
+            for t in range(length):
+                self.walk(body, self._scan_iter_env(body, invals, t))
+            return
+        if has_cond:
+            # rolled rule body (cond nested below an exponent scan): cost one
+            # exact iteration with the loop-invariant constants, like the
+            # reference's rep()-scan of the same body
+            self.pending += self._exact_body_cost(body, invals) * length
             self.pending[I_SCAN] += length
+            return
+        cost = _subtree_cost(body)
+        self.pending += cost * length
+        self.pending[I_SCAN] += length
+
+    def _exact_body_cost(self, body, invals) -> np.ndarray:
+        """One-iteration 6-metric cost of a comm-free scan body, walked in
+        exact mode with the scan constants bound (xs/carries unknown)."""
+        w = JaxprWalker(self.axis_sizes, exact_cond=True)
+        env = self._scan_iter_env(body, invals, 0)
+        if env is not None and invals is not None:
+            nc, ncar, _ = invals
+            inner = getattr(body, "jaxpr", body)
+            # xs slices are iteration-dependent: drop them from the cost env
+            for var in inner.invars[nc + ncar:]:
+                env.pop(var, None)
+        w.walk(body, env)
+        w.flush()
+        vec = np.zeros(N_METRICS)
+        for e in w.events:
+            vec += e.vector
+        return vec
 
     def _walk_while(self, eqn) -> None:
         body = eqn.params["body_jaxpr"]
@@ -180,8 +335,14 @@ class JaxprWalker:
             self.pending += _subtree_cost(cond) + _subtree_cost(body)
             self.pending[I_SCAN] += 1
 
-    def _walk_cond(self, eqn) -> None:
+    def _walk_cond(self, eqn, env: dict | None = None) -> None:
         branches = eqn.params["branches"]
+        if self.exact_cond:
+            idx = self._val(eqn.invars[0], env)
+            if idx is not None and np.ndim(idx) == 0:
+                b = branches[min(max(int(idx), 0), len(branches) - 1)]
+                self._walk_sub(b, eqn.invars[1:], env)
+                return
         if any(_contains_collective(b) for b in branches):
             # SPMD safety requires identical collective skeletons; walk branch 0
             self.walk(branches[0])
@@ -207,6 +368,22 @@ def _contains_collective(jaxpr) -> bool:
     return False
 
 
+def _contains_cond(jaxpr) -> bool:
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "cond":
+            return True
+        for v in eqn.params.values():
+            if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+                if _contains_cond(v):
+                    return True
+            elif isinstance(v, (tuple, list)):
+                for b in v:
+                    if (hasattr(b, "eqns") or hasattr(b, "jaxpr")) and _contains_cond(b):
+                        return True
+    return False
+
+
 def _subtree_cost(jaxpr) -> np.ndarray:
     """Total 6-metric cost of a collective-free jaxpr subtree."""
     w = JaxprWalker()
@@ -224,14 +401,19 @@ def _subtree_cost(jaxpr) -> np.ndarray:
 
 
 def trace_fn(fn: Callable, *args, axis_sizes: dict[str, int] | None = None,
-             **kwargs) -> Trace:
+             exact_cond: bool = False, **kwargs) -> Trace:
     """Trace ``fn(*args, **kwargs)`` into a template event stream.
 
     Works on any JAX-traceable callable; args may be ShapeDtypeStructs
     (no allocation — the "binary only" analog is "staged artifact only").
+
+    ``exact_cond=True`` enables the walker's constant-propagated control-
+    flow resolution (see :class:`JaxprWalker`) — used when measuring
+    generated proxy modules, whose switch dispatch is driven entirely by
+    constant opcode arrays.
     """
     jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
-    w = JaxprWalker(axis_sizes)
+    w = JaxprWalker(axis_sizes, exact_cond=exact_cond)
     w.walk(jaxpr)
     w.flush()
     return Trace(w.events, w.axis_sizes)

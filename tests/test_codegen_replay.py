@@ -14,6 +14,10 @@ def test_fmt_rankset():
     assert _fmt_rankset(frozenset({0, 2, 4}), 8) == "frozenset(range(0, 5, 2))"
     assert _fmt_rankset(frozenset({1, 2, 3}), 8) == "frozenset(range(1, 4))"
     assert "frozenset((0, 3, 7,))" == _fmt_rankset(frozenset({0, 3, 7}), 8)
+    # regression: a 2-element set is always a literal, never a range —
+    # {0, 5} used to render as frozenset(range(0, 6, 5))
+    assert _fmt_rankset(frozenset({0, 5}), 8) == "frozenset((0, 5,))"
+    assert _fmt_rankset(frozenset({2, 3}), 8) == "frozenset((2, 3,))"
 
 
 def _mk_traces(n_ranks=4):
