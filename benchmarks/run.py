@@ -50,6 +50,10 @@ def main() -> None:
         # suite module so both entry points emit identical artifacts
         from benchmarks.synthesize_time import write_artifacts
         write_artifacts(results["synthesize_time"], out_dir=out.parent)
+    if "portability" in results:
+        from benchmarks.synthesize_time import write_artifacts
+        write_artifacts(results["portability"], snapshot="BENCH_7.json",
+                        suite="portability", out_dir=out.parent)
 
 
 if __name__ == "__main__":

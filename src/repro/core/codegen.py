@@ -91,7 +91,9 @@ def generate_source(merged: MergedProgram,
                     combos: Mapping[int, tuple],
                     name: str = "proxy",
                     axis_sizes: Mapping[str, int] | None = None,
-                    count_scale: float = 1.0) -> str:
+                    count_scale: float = 1.0,
+                    noise_models: Sequence[tuple[float, float]] | None = None,
+                    ) -> str:
     """Emit the grammar-compiled proxy-app module source.
 
     ``combos[gid]`` is ``(x, unroll)`` — the 11-int loop-turn vector and the
@@ -102,6 +104,11 @@ def generate_source(merged: MergedProgram,
     fitted with; the per-group device hints in ``SIGNATURE_GROUPS`` scale
     with it (see :func:`group_device_hint`), so a 1/20-dilated proxy does
     not claim the full traced collective span per group.
+
+    ``noise_models`` is the per-terminal ``(sigma, shift)`` table from
+    :meth:`repro.core.noise.NoiseModel.terminal_params` (aligned with
+    ``TERMINALS``); ``None`` emits an all-zeros table (unit factors).
+    The table is inert unless replay opts in with ``noise=NoiseConfig``.
     """
     axis_sizes = dict(axis_sizes or {})
     L: list[str] = []
@@ -148,6 +155,8 @@ def generate_source(merged: MergedProgram,
             w(f"    # t{gid}: MPI_Compute proxy, cluster {ev.cluster_id}")
             w(f"    ('compute', {tuple(int(v) for v in x)!r}, {int(unroll)}),")
     w(")")
+    w("")
+    w(_noise_models_block(merged, noise_models))
     w("")
 
     # -- rule bodies (children before parents, for readability) ---------------
@@ -207,7 +216,8 @@ def generate_source(merged: MergedProgram,
         w(f"    {tuple(prog)!r},")
     w(")")
     w("")
-    w("_PT = _ProgramTable(TERMINALS, RULES, GROUP_PROGRAMS)")
+    w("_PT = _ProgramTable(TERMINALS, RULES, GROUP_PROGRAMS, "
+      "noise=NOISE_MODELS)")
     w("_GROUP_INDEX = {r: gi for gi, g in enumerate(SIGNATURE_GROUPS)")
     w("                for r in g[1]}")
     w("")
@@ -232,6 +242,32 @@ def generate_source(merged: MergedProgram,
                                           if g is None or rank in g)))
             return tuple(sig)
     """))
+    return "\n".join(L)
+
+
+def _noise_models_block(merged: MergedProgram,
+                        noise_models: Sequence[tuple[float, float]] | None,
+                        ) -> str:
+    """``NOISE_MODELS`` table source, shared by both codegen flavors.
+
+    One ``(sigma, shift)`` float pair per terminal, aligned with the
+    terminal table; ``repr`` floats round-trip exactly, which the noise
+    property suite pins.  All-zeros (unit factors) when no model was
+    calibrated, so pre-noise pipelines emit a well-formed table too.
+    """
+    events = merged.table.events
+    if noise_models is None:
+        noise_models = ((0.0, 0.0),) * len(events)
+    if len(noise_models) != len(events):
+        raise ValueError("noise_models length does not match terminal table: "
+                         f"{len(noise_models)} vs {len(events)}")
+    L = ["#: per-terminal calibrated (sigma, shift) noise params — mean-one",
+         "#: multiplicative factors lowered by repro.core.noise; inert unless",
+         "#: replay opts in (ProxyProgram.*(noise=NoiseConfig(...)))",
+         "NOISE_MODELS = ("]
+    for gid, (sigma, shift) in enumerate(noise_models):
+        L.append(f"    ({float(sigma)!r}, {float(shift)!r}),  # t{gid}")
+    L.append(")")
     return "\n".join(L)
 
 

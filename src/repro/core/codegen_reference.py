@@ -27,8 +27,9 @@ import textwrap
 from typing import Mapping
 
 from repro.core.codegen import (
-    _comm_buffers, _fmt_rankset, _fmt_ranktuple, _main_runs, _syms_comm_axes,
-    _topo_order, compute_signature_groups, group_device_hint,
+    _comm_buffers, _fmt_rankset, _fmt_ranktuple, _main_runs,
+    _noise_models_block, _syms_comm_axes, _topo_order,
+    compute_signature_groups, group_device_hint,
 )
 from repro.core.events import is_comm
 from repro.core.interproc import MergedProgram
@@ -38,7 +39,8 @@ def generate_source(merged: MergedProgram,
                     combos: Mapping[int, tuple],
                     name: str = "proxy",
                     axis_sizes: Mapping[str, int] | None = None,
-                    count_scale: float = 1.0) -> str:
+                    count_scale: float = 1.0,
+                    noise_models=None) -> str:
     """Emit the unrolled proxy-app module source (one statement/symbol)."""
     axis_sizes = dict(axis_sizes or {})
     L: list[str] = []
@@ -52,6 +54,7 @@ def generate_source(merged: MergedProgram,
     w("Do not edit."  '"""')
     w("from jax import lax  # noqa: F401")
     w("from repro.core import blocks as _blocks")
+    w("from repro.core import noise as _noise")
     w("from repro.core.replay import rep as _rep")
     w("")
     w("CODEGEN = 'unrolled'")
@@ -67,12 +70,34 @@ def generate_source(merged: MergedProgram,
     w("ALL = frozenset(range(N_RANKS))")
     w("")
 
+    # -- noise params (shared table + this flavor's compact cost descs) --------
+    # _NOISE_DESCS is the unrolled twin of the table flavor's TERMINALS for
+    # noise lowering only: comm terminals carry just the payload bytes,
+    # compute terminals their (x, unroll) combo — enough for
+    # noise.lower_params to bind identical LoweredNoise records in both
+    # flavors (the bit-parity prerequisite).
+    w(_noise_models_block(merged, noise_models))
+    w("_NOISE_DESCS = (")
+    for gid, ev in enumerate(merged.table.events):
+        if is_comm(ev):
+            w(f"    ('comm', {int(ev.payload_bytes)}),  # t{gid}")
+        else:
+            combo = combos.get(gid)
+            if combo is None:
+                raise KeyError(f"no block combo for compute terminal {gid}")
+            x, unroll = combo
+            w(f"    ('compute', {tuple(int(v) for v in x)!r}, "
+              f"{int(unroll)}),  # t{gid}")
+    w(")")
+    w("_NZ = _noise.lower_params(NOISE_MODELS, _NOISE_DESCS)")
+    w("")
+
     # -- terminals -------------------------------------------------------------
     for gid, ev in enumerate(merged.table.events):
         if is_comm(ev):
             bname = bufs[(ev.shape, ev.dtype)]
             w(f"def t{gid}(st, comm):  # {ev.kind} {ev.dtype}{list(ev.shape)} over {ev.axes}")
-            w(f"    return comm.do(st, {bname!r}, kind={ev.kind!r}, "
+            w(f"    st = comm.do(st, {bname!r}, kind={ev.kind!r}, "
               f"axes={ev.axes!r}, detail={ev.detail!r}, "
               f"shape={ev.shape!r}, dtype={ev.dtype!r})")
         else:
@@ -81,8 +106,9 @@ def generate_source(merged: MergedProgram,
                 raise KeyError(f"no block combo for compute terminal {gid}")
             x, unroll = combo
             w(f"def t{gid}(st, comm):  # MPI_Compute proxy, cluster {ev.cluster_id}")
-            w(f"    return _blocks.run_combo(st, {tuple(int(v) for v in x)!r}, "
+            w(f"    st = _blocks.run_combo(st, {tuple(int(v) for v in x)!r}, "
               f"unroll={int(unroll)})")
+        w(f"    return _noise.perturb(st, _NZ[{gid}])")
         w("")
 
     # -- non-terminals (children before parents) -------------------------------

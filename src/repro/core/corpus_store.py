@@ -491,6 +491,16 @@ class CorpusStore:
     def content_hash(self, name: str) -> str:
         return self._entry(name)["content_hash"]
 
+    def noise_params(self, name: str):
+        """The scenario-local calibrated noise model recorded at
+        ``add_scenario`` time, or ``None`` for entries written before the
+        noise layer existed (pre-noise manifests stay loadable)."""
+        data = self._entry(name).get("noise")
+        if data is None:
+            return None
+        from repro.core import noise as noise_mod
+        return noise_mod.NoiseModel.from_json(data)
+
     def scenario_path(self, name: str) -> Path:
         return self.root / _SCENARIO_DIR / f"{name}.npz"
 
@@ -506,6 +516,7 @@ class CorpusStore:
         path = store.save(self.scenario_path(name))
         chash = store.content_hash()
         self.index.ingest(name, store.metrics)
+        from repro.core import noise as noise_mod
         self.manifest["scenarios"].append({
             "name": name,
             "file": str(path.relative_to(self.root)),
@@ -513,6 +524,13 @@ class CorpusStore:
             "n_ranks": store.n_ranks,
             "n_events": store.n_events,
             "n_compute_events": store.n_compute_events,
+            # scenario-LOCAL noise calibration (this scenario's own
+            # clustering at the store's rel_tol): an observability
+            # artifact riding the manifest.  Synthesis recalibrates
+            # against the JOINT cluster assignment so batch and
+            # incremental paths emit identical NOISE_MODELS tables.
+            "noise": noise_mod.calibrate(store,
+                                         rel_tol=self.rel_tol).to_json(),
         })
         self._stores[name] = store
         self._persist()

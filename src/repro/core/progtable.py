@@ -30,6 +30,7 @@ from jax import lax
 import jax.numpy as jnp
 
 from repro.core import blocks
+from repro.core import noise as noise_mod
 from repro.core.replay import REP_UNROLL_THRESHOLD, rep
 
 #: Symbol sequences shorter than this stay straight-line: a switch-scan
@@ -91,13 +92,24 @@ class ProgramTable:
     """
 
     def __init__(self, terminals: Sequence, rules: Mapping[int, Sequence],
-                 programs: Sequence):
+                 programs: Sequence, noise: Sequence | None = None):
         self.terminals = tuple(tuple(t) for t in terminals)
         self.rules = {int(rid): tuple(tuple(s) for s in body)
                       for rid, body in dict(rules).items()}
         self.programs = tuple(tuple(tuple(s) for s in seq)
                               for seq in programs)
-        self._term_fns = [self._lower_terminal(t) for t in self.terminals]
+        # Per-terminal (sigma, shift) noise params (the module's
+        # NOISE_MODELS table).  Lowered once through the shared
+        # repro.core.noise helpers; the wrappers are trace-time no-ops
+        # unless the replay state carries the noise key, so pre-noise
+        # modules (noise=None) and noise-disabled replay trace identical
+        # jaxprs.
+        if noise is not None:
+            self._noise = noise_mod.lower_params(noise, self.terminals)
+        else:
+            self._noise = (None,) * len(self.terminals)
+        self._term_fns = [self._lower_terminal(t, nz) for t, nz
+                          in zip(self.terminals, self._noise)]
         self._rule_fns: dict[int, object] = {}
         for rid in topo_order(self.rules):
             self._rule_fns[rid] = self._lower_seq(self.rules[rid])
@@ -106,14 +118,14 @@ class ProgramTable:
     # -- terminal lowering -----------------------------------------------------
 
     @staticmethod
-    def _lower_terminal(desc):
+    def _lower_terminal(desc, nz=None):
         kind = desc[0]
         if kind == "comm":
             _, buf, params = desc
             params = dict(params)
 
-            def comm_fn(st, comm, _buf=buf, _p=params):
-                return comm.do(st, _buf, **_p)
+            def comm_fn(st, comm, _buf=buf, _p=params, _nz=nz):
+                return noise_mod.perturb(comm.do(st, _buf, **_p), _nz)
 
             return comm_fn
         if kind == "compute":
@@ -121,8 +133,9 @@ class ProgramTable:
             x = tuple(int(v) for v in x)
             unroll = int(unroll)
 
-            def compute_fn(st, comm, _x=x, _u=unroll):
-                return blocks.run_combo(st, _x, unroll=_u)
+            def compute_fn(st, comm, _x=x, _u=unroll, _nz=nz):
+                return noise_mod.perturb(blocks.run_combo(st, _x, unroll=_u),
+                                         _nz)
 
             return compute_fn
         raise ValueError(f"unknown terminal kind: {kind!r}")

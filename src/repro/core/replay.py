@@ -53,8 +53,11 @@ from jax.sharding import PartitionSpec
 
 from repro import compat  # noqa: F401  (registers vmap rules on old JAX)
 from repro.core import blocks
+from repro.core import noise as noise_mod
 from repro.core import proxy_search
 from repro.core.events import Event, METRIC_NAMES, N_METRICS, is_comm
+from repro.core.noise import (FidelityDistribution, NoiseConfig,  # noqa: F401
+                              parse_fidelity_csv)
 from repro.core.tracer import trace_fn
 from repro.sharding.collectives import DeviceComm, LocalSim
 
@@ -266,12 +269,22 @@ class FidelityReport:
     comm_lossless: bool        # event-id sequences reproduced exactly
     mean: float                # δ̄, paper eq. 8
     mesh_checked: bool = False  # a mesh-sharded sweep executed finitely
+    seed: int = 0              # replay seed provenance (deterministic: 0)
+    n_replicas: int = 1        # deterministic replay is one replica
 
     def heatmap_csv(self) -> str:
         lines = ["metric," + ",".join(f"rank{p}" for p in range(self.delta.shape[1]))]
         for m, name in enumerate(METRIC_NAMES):
             lines.append(name + "," + ",".join(f"{v:.4f}" for v in self.delta[m]))
         return "\n".join(lines)
+
+    def to_csv(self) -> str:
+        """Heatmap CSV with seed/replica provenance headers — the same
+        parseable shape as :meth:`FidelityDistribution.to_csv`, so
+        downstream consumers never have to guess which replay produced a
+        bare float matrix (see :func:`repro.core.noise.parse_fidelity_csv`)."""
+        return (f"# seed={self.seed}\n# n_replicas={self.n_replicas}\n"
+                + self.heatmap_csv())
 
 
 class ProxyProgram:
@@ -380,9 +393,14 @@ class ProxyProgram:
             self._compiled[key] = jax.jit(traced)
         return self._compiled[key]
 
-    def _fn_for_group(self, sig, rep_rank: int, n: int, comm):
-        """Compiled executable replaying ``n`` stacked ranks of one group."""
-        key = (sig, self._comm_key(comm), n, self._shapes_key())
+    def _fn_for_group(self, sig, rep_rank: int, n: int, comm,
+                      tag: str | None = None):
+        """Compiled executable replaying ``n`` stacked states of one group.
+
+        ``tag`` disambiguates batched entries whose stacked state carries a
+        different pytree structure at the same ``n`` (the noisy-replica
+        states add the noise leaves) so the cache counters stay honest."""
+        key = (sig, self._comm_key(comm), n, tag, self._shapes_key())
         fn = self._compiled_batched.get(key)
         if fn is None:
             self._counters["batch_cache_misses"] += 1
@@ -453,17 +471,21 @@ class ProxyProgram:
         return comm
 
     def _fn_for_group_mesh(self, sig, rep_rank: int, n: int | None,
-                           placement: GroupPlacement, mesh):
+                           placement: GroupPlacement, mesh,
+                           noise: bool = False):
         """Compiled ``shard_map`` executable for one placed group.
 
         ``n`` is the stacked rank count (``None`` = unbatched: one rank's
         state, the sequential-mesh baseline).  Cached per (signature, mesh
         devices, placement, n, state shapes) — a group moved to a different
         mesh, device subset, or sub-mesh geometry compiles afresh instead
-        of aliasing.
+        of aliasing.  ``noise=True`` stacks ``n`` seeded replicas instead
+        of ranks: the shard_map in/out specs must then cover the extra
+        noise leaves, so the entry is keyed (and traced) separately.
         """
         mesh_ids = tuple(d.id for d in np.asarray(mesh.devices).flat)
-        key = (sig, "mesh", n, mesh_ids, placement.key(), self._shapes_key())
+        key = (sig, "mesh", n, noise, mesh_ids, placement.key(),
+               self._shapes_key())
         fn = self._compiled_batched.get(key)
         if fn is None:
             self._counters["batch_cache_misses"] += 1
@@ -471,8 +493,15 @@ class ProxyProgram:
             counters = self._counters
             comm = self._mesh_comm(placement)
             submesh = self._submesh_for(mesh, placement)
+
+            def state_proto():
+                st = init_replay_state(mod)
+                if noise:   # spec must mirror the noise-attached pytree
+                    st = noise_mod.attach(st, jax.random.PRNGKey(0))
+                return st
+
             spec = jax.tree.map(lambda _: PartitionSpec(),
-                                jax.eval_shape(lambda: init_replay_state(mod)))
+                                jax.eval_shape(state_proto))
 
             def traced(st):
                 counters["jit_traces"] += 1   # trace-time side effect
@@ -488,8 +517,21 @@ class ProxyProgram:
             self._counters["batch_cache_hits"] += 1
         return fn
 
+    def _noise_group_state(self, rep_rank: int, cfg: "NoiseConfig",
+                           seed: int = 0) -> dict:
+        """``n_replicas`` noise-attached copies of one group's initial state,
+        stacked on a leading replica axis.  Replica keys derive only from
+        ``(cfg.seed, group representative, replica index)`` — never from
+        placement — so LocalSim and mesh replay draw identical streams."""
+        base = init_replay_state(self.module, seed)
+        sts = [noise_mod.attach(base,
+                                noise_mod.replica_key(cfg.seed, rep_rank, j))
+               for j in range(cfg.n_replicas)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+
     def _group_work_mesh(self, ranks, seed: int, per_rank_seeds: bool,
-                         mesh, batched: bool = True) -> list[tuple]:
+                         mesh, batched: bool = True,
+                         noise: "NoiseConfig | None" = None) -> list[tuple]:
         """``(fn, input_state, group_ranks, stacked)`` units for a mesh sweep.
 
         ``batched=True`` emits exactly one unit — one ``shard_map``
@@ -498,11 +540,18 @@ class ProxyProgram:
         a shared seed, the byte-identical program runs once and the result
         is shared).  ``batched=False`` is the sequential mesh baseline: one
         dispatch per rank on the *same* placement, so results are
-        comparable bit-for-bit."""
+        comparable bit-for-bit.  ``noise=`` stacks seeded replicas instead
+        of ranks (one unit per group; ranks of a group share the replica
+        results, the run-level-platform-state reading of the noise model)."""
         work = []
         for pl in self.mesh_sweep_plan(mesh, ranks):
             grp = list(pl.ranks)
-            if batched and per_rank_seeds:
+            if noise is not None:
+                fn = self._fn_for_group_mesh(pl.sig, grp[0], noise.n_replicas,
+                                             pl, mesh, noise=True)
+                work.append((fn, self._noise_group_state(grp[0], noise, seed),
+                             grp, False))
+            elif batched and per_rank_seeds:
                 stacked = jax.tree.map(
                     lambda *xs: jnp.stack(xs),
                     *[init_replay_state(self.module, seed + r) for r in grp])
@@ -539,7 +588,8 @@ class ProxyProgram:
 
     def run_all(self, ranks: Sequence[int] | None = None, seed: int = 0,
                 comm=None, batched: bool = True,
-                per_rank_seeds: bool = False, mesh=None) -> dict[int, dict]:
+                per_rank_seeds: bool = False, mesh=None,
+                noise: "NoiseConfig | None" = None) -> dict[int, dict]:
         """Replay every rank; returns ``{rank: final state}``.
 
         ``batched=True`` (default) replays one signature group per compiled
@@ -571,13 +621,39 @@ class ProxyProgram:
         ``comm`` is ignored in mesh mode (the backend is derived from the
         placement); ``batched=False`` gives the sequential mesh baseline
         (one dispatch per rank on the same placement).
+
+        ``noise=NoiseConfig(...)`` replays ``n_replicas`` seeded noisy
+        replicas per signature group as ONE extra vmapped axis (the
+        default ``noise=None`` path is byte-identical to a build without
+        the noise layer).  Every leaf of a rank's result then carries a
+        leading replica axis; ranks of a group share the replica results
+        (the noise models run-level platform state, not per-rank jitter),
+        and the :data:`~repro.core.noise.NOISE_COMPUTE` /
+        :data:`~repro.core.noise.NOISE_COMM` leaves hold the perturbed
+        cost accumulators :meth:`fidelity` summarizes.
         """
         if ranks is not None:
             self._validate_ranks(ranks)
+        if noise is not None and per_rank_seeds:
+            raise ValueError("noise= and per_rank_seeds are mutually "
+                             "exclusive (both own the stacked batch axis)")
+        if noise is not None and not batched:
+            raise ValueError("noise= requires the batched replay path "
+                             "(replicas ride the vmapped group axis)")
         if mesh is not None:
             return self._run_all_mesh(ranks, seed, batched, per_rank_seeds,
-                                      mesh)
+                                      mesh, noise)
         comm = comm or LocalSim()
+        if noise is not None:
+            out = {}
+            for fn, arg, grp in self._group_work(ranks, seed, comm,
+                                                 False, noise=noise):
+                res = fn(arg)
+                for r in grp:   # replicas are group-level, shared by ranks
+                    out[r] = dict(res)
+            for v in out.values():
+                jax.block_until_ready(v)
+            return out
         out = {}
         if not batched:
             st = None if per_rank_seeds else init_replay_state(self.module, seed)
@@ -602,13 +678,14 @@ class ProxyProgram:
         return out
 
     def _run_all_mesh(self, ranks, seed: int, batched: bool,
-                      per_rank_seeds: bool, mesh) -> dict[int, dict]:
+                      per_rank_seeds: bool, mesh,
+                      noise: "NoiseConfig | None" = None) -> dict[int, dict]:
         """Mesh-sharded sweep body: dispatch every placed group first (jax
         dispatch is asynchronous — groups on disjoint device subsets overlap),
         gather/unstack after, block once at the end."""
         pending = []
         for fn, arg, grp, stacked in self._group_work_mesh(
-                ranks, seed, per_rank_seeds, mesh, batched):
+                ranks, seed, per_rank_seeds, mesh, batched, noise):
             pending.append((fn(arg), grp, stacked))
         out: dict[int, dict] = {}
         for res, grp, stacked in pending:
@@ -622,9 +699,22 @@ class ProxyProgram:
         return out
 
     def _group_work(self, ranks, seed: int, comm, per_rank_seeds: bool,
-                    ) -> list[tuple]:
+                    noise: "NoiseConfig | None" = None) -> list[tuple]:
         """One ``(compiled_fn, input_state, group_ranks)`` unit per signature
-        group — the shared work plan of :meth:`run_all` and :meth:`time_all`."""
+        group — the shared work plan of :meth:`run_all` and :meth:`time_all`.
+
+        With ``noise=``, each unit stacks ``n_replicas`` seeded noisy
+        replicas of the group's (shared) initial state on a leading axis —
+        the same one-vmapped-axis shape as ``per_rank_seeds``, so the
+        sweep scheduler and compile caches are reused as-is."""
+        if noise is not None:
+            work = []
+            for sig, grp in self.signature_groups(ranks):
+                fn = self._fn_for_group(sig, grp[0], noise.n_replicas, comm,
+                                        tag="noise")
+                work.append((fn, self._noise_group_state(grp[0], noise, seed),
+                             grp))
+            return work
         st = None if per_rank_seeds else init_replay_state(self.module, seed)
         work = []
         for sig, grp in self.signature_groups(ranks):
@@ -652,24 +742,31 @@ class ProxyProgram:
 
     def time_all(self, ranks: Sequence[int] | None = None, iters: int = 1,
                  seed: int = 0, batched: bool = True,
-                 per_rank_seeds: bool = False, mesh=None) -> float:
+                 per_rank_seeds: bool = False, mesh=None,
+                 noise: "NoiseConfig | None" = None) -> float:
         """Warm wall-clock seconds of one full multi-rank replay sweep.
 
         Mirrors :meth:`run_all`'s modes: per-rank baseline
         (``batched=False``), group-deduplicated (default), group-vmapped
-        (``per_rank_seeds=True``), and — with ``mesh=`` — the mesh-sharded
-        sweep (real collectives, one dispatch per placed group; the
-        ``batched=False`` variant times the sequential mesh baseline).
+        (``per_rank_seeds=True``), noisy-replica (``noise=NoiseConfig``,
+        one vmapped replica axis per group), and — with ``mesh=`` — the
+        mesh-sharded sweep (real collectives, one dispatch per placed
+        group; the ``batched=False`` variant times the sequential mesh
+        baseline).
         """
         ranks = list(range(self.merged.n_ranks) if ranks is None else ranks)
         self._validate_ranks(ranks)
+        if noise is not None and (per_rank_seeds or not batched):
+            raise ValueError("noise= requires the batched path and is "
+                             "mutually exclusive with per_rank_seeds")
         comm = LocalSim()
         if mesh is not None:
             work = [(fn, arg) for fn, arg, _, _ in self._group_work_mesh(
-                ranks, seed, per_rank_seeds, mesh, batched)]
+                ranks, seed, per_rank_seeds, mesh, batched, noise)]
         elif batched:
             work = [(fn, arg) for fn, arg, _ in
-                    self._group_work(ranks, seed, comm, per_rank_seeds)]
+                    self._group_work(ranks, seed, comm, per_rank_seeds,
+                                     noise=noise)]
         else:
             st = None if per_rank_seeds else init_replay_state(self.module, seed)
             work = [(self._fn_for_rank(r, comm),
@@ -738,10 +835,42 @@ class ProxyProgram:
     def expand_rank_ids(self, rank: int) -> list[int]:
         return self.merged.expand_rank(rank)
 
+    def _noise_totals(self, ranks: Sequence[int], cfg: "NoiseConfig",
+                      mesh=None) -> tuple[dict, dict]:
+        """Executed perturbed cost totals per rank.
+
+        Returns ``(compute, comm_bytes)`` dicts: ``compute[r]`` is the
+        ``(n_replicas, 6)`` float64 noise-accumulator matrix, ``comm[r]``
+        the ``(n_replicas,)`` perturbed collective-byte totals.  δ̄ is
+        normally measured by the static jaxpr walker, which runtime
+        randomness cannot reach — the noisy path instead *executes* the
+        replicas (LocalSim or mesh) and reads the accumulators the
+        perturb wrappers summed during replay."""
+        if mesh is not None:
+            units = [(fn, arg, grp) for fn, arg, grp, _ in
+                     self._group_work_mesh(ranks, 0, False, mesh, True,
+                                           noise=cfg)]
+        else:
+            units = self._group_work(ranks, 0, LocalSim(), False, noise=cfg)
+        pending = [(fn(arg), grp) for fn, arg, grp in units]
+        compute: dict[int, np.ndarray] = {}
+        comm_bytes: dict[int, np.ndarray] = {}
+        for res, grp in pending:
+            acc = np.asarray(jax.device_get(res[noise_mod.NOISE_COMPUTE]),
+                             dtype=np.float64)
+            cb = np.asarray(jax.device_get(res[noise_mod.NOISE_COMM]),
+                            dtype=np.float64)
+            for r in grp:       # replicas are group-level; ranks share them
+                compute[r] = acc
+                comm_bytes[r] = cb
+        return compute, comm_bytes
+
     def fidelity(self, original_rank_traces: Sequence[Sequence[Event]],
                  original_rank_keys: Sequence[Sequence[str]] | None = None,
                  sample_ranks: int | None = None,
-                 batched: bool = True, mesh=None) -> FidelityReport:
+                 batched: bool = True, mesh=None,
+                 noise: "NoiseConfig | None" = None,
+                 ) -> "FidelityReport | FidelityDistribution":
         """Compare proxy vs original per rank (paper §3.3.1).
 
         ``original_rank_traces`` is either per-rank Event lists or a
@@ -763,6 +892,20 @@ class ProxyProgram:
         finite in ``report.mesh_checked``.  δ̄ itself is placement-invariant
         by construction — walker metrics are keyed by (signature, state
         shapes) only — so mesh and local reports carry bit-identical deltas.
+
+        ``noise=NoiseConfig(...)`` returns a
+        :class:`~repro.core.noise.FidelityDistribution` instead: the proxy
+        side becomes the *executed* perturbed-cost accumulators over
+        ``n_replicas`` seeded replicas (one vmapped axis per group,
+        LocalSim by default, ``mesh=`` for the sharded sweep), each
+        replica's δ matrix computed against the same original totals.
+        Fixed ``(seed, n_replicas)`` is reproducible bit-for-bit and
+        identical between LocalSim and mesh (replica keys are
+        placement-invariant and the accumulator math never reads buffer
+        values).  Note the σ→0 limit of the executed totals tracks — but
+        is not bit-equal to — the float64 walker totals (float32
+        execution; rolled-loop scan-step accounting), so the bit-parity
+        contract binds only the untouched ``noise=None`` walker path.
         """
         if hasattr(original_rank_traces, "compute_totals"):
             # columnar TraceStore: per-rank totals in one vectorized pass,
@@ -793,6 +936,20 @@ class ProxyProgram:
                 for ev in original_rank_traces[r]:
                     if not is_comm(ev):
                         a[:, col] += ev.vector
+        if noise is not None:
+            compute, comm_b = self._noise_totals(ranks, noise, mesh)
+            bn = np.stack([compute[r] for r in ranks], axis=2)
+            replica_delta = np.stack(
+                [proxy_search.rel_error_matrix(a, bn[j])
+                 for j in range(noise.n_replicas)])
+            cb = np.stack([comm_b[r] for r in ranks], axis=1)
+            mesh_checked = mesh is not None and \
+                bool(np.isfinite(bn).all() and np.isfinite(cb).all())
+            return FidelityDistribution(
+                replica_delta=replica_delta, comm_bytes=cb,
+                ranks=tuple(ranks), seed=noise.seed,
+                n_replicas=noise.n_replicas, comm_lossless=lossless,
+                mesh_checked=mesh_checked)
         b = np.stack([self.rank_metrics(r, use_cache=batched) for r in ranks],
                      axis=1)
         delta = proxy_search.rel_error_matrix(a, b)

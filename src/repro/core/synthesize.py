@@ -32,6 +32,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core import noise as noise_mod
 from repro.core import proxy_search
 from repro.core.events import Event, cluster_vectors, is_comm
 from repro.core.grammar import Grammar, TerminalTable
@@ -69,15 +70,18 @@ class SynthesisResult:
         return cached
 
     def fidelity(self, sample_ranks: int | None = 16,
-                 batched: bool = True) -> FidelityReport:
+                 batched: bool = True, mesh=None, noise=None):
         """δ̄ report; ``batched`` uses the vectorized per-signature-group
         path (identical numbers, one walker trace per group).  The
         original side reads straight from the columnar store — no Event
-        materialization."""
+        materialization.  ``noise=NoiseConfig(...)`` returns the seeded
+        :class:`~repro.core.noise.FidelityDistribution` instead (see
+        :meth:`repro.core.replay.ProxyProgram.fidelity`)."""
         keys = [[g.table[i].key() for i in ids]
                 for g, ids in zip(self.grammars, self.rank_ids)]
         return self.proxy.fidelity(self.store, keys,
-                                   sample_ranks=sample_ranks, batched=batched)
+                                   sample_ranks=sample_ranks, batched=batched,
+                                   mesh=mesh, noise=noise)
 
 
 def compress_rank_traces(rank_traces: Sequence[Sequence[Event]],
@@ -129,7 +133,9 @@ def _fit_terminals(table: TerminalTable, reps: dict[int, np.ndarray],
 def _assemble_result(store: TraceStore, grammars, merged, rank_ids, fits,
                      combos, solver: str, name: str,
                      axis_sizes: dict[str, int], count_scale: float,
-                     out_dir, codegen: str = "table") -> SynthesisResult:
+                     out_dir, codegen: str = "table",
+                     noise_model: "noise_mod.NoiseModel | None" = None,
+                     ) -> SynthesisResult:
     """Codegen + module load + stats: the shared back half of
     :func:`synthesize` and :func:`synthesize_corpus`.
 
@@ -137,7 +143,11 @@ def _assemble_result(store: TraceStore, grammars, merged, rank_ids, fits,
     compiled program-table flavor (executables sized O(grammar));
     ``"unrolled"`` is the per-symbol reference oracle
     (:mod:`repro.core.codegen_reference`) — same δ̄ and comm sequences,
-    trace-sized executables."""
+    trace-sized executables.
+
+    ``noise_model`` is the calibrated :class:`~repro.core.noise.NoiseModel`
+    whose per-terminal ``(σ, shift)`` pairs land in the emitted module's
+    ``NOISE_MODELS`` table (both flavors; ``None`` emits unit factors)."""
     if codegen == "table":
         emit = generate_source
     elif codegen == "unrolled":
@@ -145,8 +155,10 @@ def _assemble_result(store: TraceStore, grammars, merged, rank_ids, fits,
     else:
         raise ValueError(f"unknown codegen flavor: {codegen!r} "
                          "(expected 'table' or 'unrolled')")
+    noise_models = (noise_model.terminal_params(merged.table.events)
+                    if noise_model is not None else None)
     source = emit(merged, combos, name, axis_sizes,
-                  count_scale=count_scale)
+                  count_scale=count_scale, noise_models=noise_models)
     module = load_module(source, name=f"{name}_mod", out_dir=out_dir)
     proxy = ProxyProgram(source, module, merged, combos, axis_sizes)
 
@@ -218,9 +230,12 @@ def synthesize(fn: Callable | None = None, *args,
                                                       threshold)
     fits, combos, solver = _fit_terminals(merged.table, reps, solver,
                                           count_scale)
+    # same rel_tol → same cluster assignment as compress_store, so the
+    # calibrated σ keys line up with the merged table's cluster ids
+    noise_model = noise_mod.calibrate(store, rel_tol=rel_tol)
     return _assemble_result(store, grammars, merged, rank_ids, fits, combos,
                             solver, name, axis_sizes, count_scale, out_dir,
-                            codegen=codegen)
+                            codegen=codegen, noise_model=noise_model)
 
 
 # ---------------------------------------------------------------------------
@@ -264,6 +279,7 @@ def _corpus_scenario_results(stores: dict[str, TraceStore],
                              count_scale: float, out_dir,
                              memo: dict | None = None,
                              id_of: dict[str, tuple] | None = None,
+                             noise_models: dict | None = None,
                              ) -> tuple[dict[str, SynthesisResult], int]:
     """Back half shared by batch and incremental corpus synthesis: map
     corpus-level fits onto each scenario's merged table and assemble its
@@ -274,7 +290,10 @@ def _corpus_scenario_results(stores: dict[str, TraceStore],
     assignments, threshold) *and* fit inputs (per-terminal target/x/
     unroll) are unchanged reuses its previous :class:`SynthesisResult`
     wholesale — no re-codegen, no module reload.  Returns ``(results,
-    n_reused)``.
+    n_reused)``.  ``noise_models[sname]`` is the scenario's calibrated
+    :class:`~repro.core.noise.NoiseModel` (a pure function of the
+    scenario content + joint cluster assignment, both already part of
+    the memo identity, so memo hits stay valid).
     """
     results: dict[str, SynthesisResult] = {}
     n_reused = 0
@@ -307,7 +326,7 @@ def _corpus_scenario_results(stores: dict[str, TraceStore],
         results[sname] = _assemble_result(
             stores[sname], grammars, merged, rank_ids, fits, combos, "pgd",
             sname.replace("-", "_"), stores[sname].axis_sizes, count_scale,
-            sdir)
+            sdir, noise_model=(noise_models or {}).get(sname))
         if rkey is not None:
             memo[rkey] = results[sname]
     return results, n_reused
@@ -406,19 +425,28 @@ def synthesize_corpus(scenarios=None, *,
 
     per: dict[str, tuple] = {}
     mergeds: list[MergedProgram] = []
+    noise_models: dict[str, noise_mod.NoiseModel] = {}
     for i, sname in enumerate(names):
+        cids = cids_all[offsets[i]:offsets[i + 1]]
         grammars, merged, rank_ids, _ = compress_store(
-            stores[sname], rel_tol, threshold,
-            cluster_ids=cids_all[offsets[i]:offsets[i + 1]], reps=reps)
+            stores[sname], rel_tol, threshold, cluster_ids=cids, reps=reps)
         per[sname] = (grammars, merged, rank_ids)
         mergeds.append(merged)
+        # calibrated against the JOINT assignment slice, so σ keys match
+        # the merged table's (joint) cluster ids — and so the incremental
+        # path, which calibrates from the persisted ClusterIndex's
+        # identical assignment, emits identical NOISE_MODELS tables
+        noise_models[sname] = noise_mod.calibrate(stores[sname],
+                                                  cluster_ids=cids,
+                                                  rel_tol=rel_tol)
 
     # one corpus table, one batched-PGD solve for every compute terminal
     table, gid_maps = corpus_terminal_table(mergeds)
     corpus_fits, _, _ = _fit_terminals(table, reps, "pgd", count_scale)
 
     results, _ = _corpus_scenario_results(stores, names, per, corpus_fits,
-                                          gid_maps, count_scale, out_dir)
+                                          gid_maps, count_scale, out_dir,
+                                          noise_models=noise_models)
     stats = _corpus_stats(names, table, corpus_fits, gid_maps, results)
     return CorpusResult(results=results, table=table, reps=reps, stats=stats)
 
@@ -531,9 +559,16 @@ def _synthesize_corpus_incremental(cstore, threshold: float,
         cstore.save_fits(table_fp)   # fully-cached runs stay read-only
 
     stores = {n: cstore.load_scenario(n) for n in names}
+    # same joint cluster assignment (the persisted ClusterIndex is pinned
+    # bit-identical to the batch path) + same metrics → identical noise
+    # params, so batch and incremental emit identical NOISE_MODELS tables
+    noise_models = {n: noise_mod.calibrate(stores[n],
+                                           cluster_ids=ids_by_name[n],
+                                           rel_tol=cstore.rel_tol)
+                    for n in names}
     results, n_result_reused = _corpus_scenario_results(
         stores, names, per, corpus_fits, gid_maps, count_scale, out_dir,
-        memo=cstore.memo, id_of=id_of)
+        memo=cstore.memo, id_of=id_of, noise_models=noise_models)
     stats = _corpus_stats(names, table, corpus_fits, gid_maps, results)
     stats.update(
         incremental=True,

@@ -302,6 +302,14 @@ class TraceStore:
             total += int(row_lens[comp_toks].sum())
         return total
 
+    def comm_occurrence_counts(self) -> np.ndarray:
+        """Per-comm-pool-entry occurrence counts across all ranks,
+        ``(len(comm_pool),)`` int64 — the weights the noise calibrator
+        uses so a collective repeated 10⁴ times dominates its kind's
+        payload-spread estimate over a one-off of the same kind."""
+        ct = self.tokens[self.tokens < 0]
+        return np.bincount(-ct - 1, minlength=len(self.comm_pool))
+
     def compute_totals(self) -> np.ndarray:
         """Per-rank compute-metric totals, ``(n_ranks, 6)`` (the original
         side of the fidelity comparison), in one vectorized pass."""

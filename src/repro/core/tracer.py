@@ -82,6 +82,15 @@ class Trace:
     def total_comm_bytes(self) -> int:
         return sum(e.payload_bytes for e in self.comm_events())
 
+    def compute_metrics_array(self) -> np.ndarray:
+        """``(n_compute_events, 6)`` float64 metric rows in stream order —
+        the per-event variance the noise calibrator consumes (the columnar
+        twin of ``TraceStore.metrics`` for a single template trace)."""
+        rows = [e.metrics for e in self.compute_events()]
+        if not rows:
+            return np.zeros((0, N_METRICS))
+        return np.asarray(rows, dtype=np.float64)
+
 
 class JaxprWalker:
     """Recursive jaxpr walk producing the template event stream.

@@ -274,6 +274,26 @@ class HloCost:
         for k, v in other.collective_by_kind.items():
             self.collective_by_kind[k] += v * mult
 
+    #: roofline weights mapping the 6-metric trace vector onto HLO-level
+    #: flop/byte totals: a transcendental costs ~8 flop-equivalents on the
+    #: VPU's polynomial pipelines, a gathered element moves a 4-byte word
+    #: through the (HBM-bound) gather unit.  scan_steps is deliberately
+    #: excluded — loop-turn bookkeeping is not hardware work, and keeping
+    #: it out makes predicted totals match the walker's measured totals.
+    TRANS_FLOP_WEIGHT = 8.0
+    GATHER_BYTE_WEIGHT = 4.0
+
+    @classmethod
+    def from_metric_vector(cls, vec) -> "HloCost":
+        """Project a 6-metric trace vector (``events.METRIC_NAMES`` order:
+        mxu_flops, vpu_elems, hbm_bytes, transcendentals, gather_elems,
+        scan_steps) onto roofline terms — the bridge between fitted
+        terminal costs and :mod:`repro.core.portability` predictions."""
+        mxu, vpu, hbm, trans, gather, _scan = (float(v) for v in vec)
+        return cls(flops=mxu + vpu + cls.TRANS_FLOP_WEIGHT * trans,
+                   bytes=hbm + cls.GATHER_BYTE_WEIGHT * gather,
+                   transcendentals=trans)
+
 
 _TRANS_OPS = {"exponential", "log", "tanh", "power", "rsqrt", "sqrt",
               "logistic", "sine", "cosine", "expm1", "log-plus-one"}

@@ -1,0 +1,172 @@
+"""Property tests for the calibrated noise models (variability-aware replay).
+
+Same convention as test_interproc_prop.py: a seeded deterministic corpus
+always runs; only the hypothesis-randomized exploration skips when
+hypothesis is absent (the gating condition is the optional dependency,
+not the JAX floor).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import noise
+from repro.core.events import CommEvent, ComputeEvent, is_comm
+from repro.core.synthesize import synthesize
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised in bare envs
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="randomized exploration needs hypothesis (requirements-dev.txt);"
+           " the deterministic corpus in this module still runs")
+
+
+# ---------------------------------------------------------------------------
+# factor distribution (deterministic, seeded)
+# ---------------------------------------------------------------------------
+
+
+def _samples(sigma, shift, n=4000, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+    return np.asarray(jax.vmap(
+        lambda k: noise.sample_factor(k, sigma, shift))(keys))
+
+
+def _check_factor_distribution(sigma, shift):
+    s = _samples(sigma, shift)
+    assert np.isfinite(s).all()
+    # shifted lognormal: strictly above the shift floor, hence positive
+    assert (s > shift - 1e-7).all() and (s > 0).all()
+    # mean-one by construction (the -sigma^2/2 drift correction)
+    assert abs(float(s.mean()) - 1.0) < 5 * s.std() / np.sqrt(len(s)) + 1e-3
+    want = noise.factor_variance(sigma, shift)
+    got = float(s.var())
+    assert got == pytest.approx(want, rel=0.25, abs=1e-6)
+
+
+def test_factor_distribution_grid():
+    for sigma in (0.01, 0.1, 0.5, 1.0):
+        for shift in (0.0, 0.5, 0.8):
+            _check_factor_distribution(sigma, shift)
+
+
+def test_variance_scales_with_sigma():
+    """Analytic and empirical variance both strictly increase with σ."""
+    sigmas = (0.01, 0.05, 0.2, 0.8)
+    for shift in (0.0, 0.8):
+        analytic = [noise.factor_variance(s, shift) for s in sigmas]
+        assert all(a < b for a, b in zip(analytic, analytic[1:]))
+        empirical = [float(_samples(s, shift).var()) for s in sigmas]
+        assert all(a < b for a, b in zip(empirical, empirical[1:]))
+    # shift compresses the multiplicative part: variance shrinks with shift
+    assert noise.factor_variance(0.5, 0.8) < noise.factor_variance(0.5, 0.0)
+
+
+def test_zero_sigma_degenerates_to_unit():
+    assert noise.factor_variance(0.0, 0.0) == 0.0
+    s = _samples(0.0, 0.7, n=64)
+    np.testing.assert_allclose(s, 1.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# calibration → emission round-trip
+# ---------------------------------------------------------------------------
+
+
+def _jittered_traces(n_ranks=4, reps=6, seed=7):
+    """Synthetic rank traces whose compute occurrences jitter ~3% around a
+    cluster center — calibration must see a nonzero log-spread."""
+    rng = np.random.default_rng(seed)
+    base = np.array([2.1e7, 3.3e5, 1.1e7, 8.2e3, 0., 0.])
+    comm = CommEvent("psum", (16,), "float32", ("x",))
+    perm = CommEvent("ppermute", (4, 4), "bfloat16", ("x",), ("shift", 1))
+    traces = []
+    for _r in range(n_ranks):
+        tr = []
+        for _ in range(reps):
+            f = 1.0 + 0.03 * rng.standard_normal()
+            tr += [ComputeEvent(tuple(base * f)), comm,
+                   ComputeEvent(tuple(base * (2 * f))), perm]
+        traces.append(tr)
+    return traces
+
+
+def test_params_roundtrip_through_emission():
+    """calibrate → synthesize → module.NOISE_MODELS is the exact
+    per-terminal table the model would emit (repr floats round-trip)."""
+    res = synthesize(rank_traces=_jittered_traces(), axis_sizes={"x": 4})
+    model = noise.calibrate(res.store, rel_tol=0.05)
+    want = model.terminal_params(res.merged.table.events)
+    got = res.proxy.module.NOISE_MODELS
+    assert tuple(got) == tuple(want)
+    # comm terminals carry the shifted-lognormal floor params
+    for (sig, shift), ev in zip(got, res.merged.table.events):
+        assert sig >= noise.SIGMA_FLOOR
+        if is_comm(ev):
+            assert shift == noise.COMM_SHIFT
+        else:
+            assert shift == 0.0
+    # the jitter is visible: at least one compute terminal above the floor
+    assert any(sig > noise.SIGMA_FLOOR for (sig, shift), ev
+               in zip(got, res.merged.table.events) if not is_comm(ev))
+
+
+def test_unrolled_flavor_emits_same_table():
+    res_t = synthesize(rank_traces=_jittered_traces(), axis_sizes={"x": 4},
+                       codegen="table")
+    res_u = synthesize(rank_traces=_jittered_traces(), axis_sizes={"x": 4},
+                       codegen="unrolled")
+    assert tuple(res_t.proxy.module.NOISE_MODELS) == \
+        tuple(res_u.proxy.module.NOISE_MODELS)
+
+
+def test_noise_model_json_roundtrip_exact():
+    model = noise.NoiseModel(
+        compute_sigmas={0: 0.1234567891234567, 3: noise.SIGMA_FLOOR},
+        comm_params={"psum": (0.7071067811865476, 0.8)},
+        sigma_floor=0.01)
+    back = noise.NoiseModel.from_json(model.to_json())
+    assert back == model
+
+
+def test_corpus_store_manifest_roundtrip(tmp_path):
+    from repro.core.corpus_store import CorpusStore
+    from repro.core.trace_ir import TraceStore
+    store = TraceStore.from_rank_traces(_jittered_traces(), {"x": 4})
+    cs = CorpusStore(tmp_path / "c", rel_tol=0.05)
+    cs.add_scenario("jitter", store)
+    got = cs.noise_params("jitter")
+    want = noise.calibrate(store, rel_tol=0.05)
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# hypothesis exploration (optional dependency)
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(sigma=st.floats(1e-3, 1.5), shift=st.floats(0.0, 0.95),
+           seed=st.integers(0, 2**31 - 1))
+    def test_factor_samples_positive_random(sigma, shift, seed):
+        s = _samples(sigma, shift, n=128, seed=seed)
+        assert np.isfinite(s).all() and (s > 0).all()
+        assert (s > shift - 1e-6).all()
+
+    @needs_hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(st.dictionaries(st.integers(0, 50),
+                           st.floats(1e-4, 2.0), max_size=6),
+           st.floats(1e-4, 1.0), st.floats(0.0, 0.99))
+    def test_noise_model_json_roundtrip_random(sigmas, csig, cshift):
+        model = noise.NoiseModel(compute_sigmas=sigmas,
+                                 comm_params={"all_gather": (csig, cshift)},
+                                 sigma_floor=0.01)
+        assert noise.NoiseModel.from_json(model.to_json()) == model

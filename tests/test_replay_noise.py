@@ -1,0 +1,208 @@
+"""Variability-aware replay: seeded noise determinism + provenance CSV.
+
+Covers the three load-bearing invariants of the noise tier:
+
+* **oracle parity off**: ``noise=None`` replay is byte-for-byte today's
+  deterministic δ̄ path — the perturb wrappers are trace-time no-ops
+  unless the state carries the noise key (both codegen flavors);
+* **seeded determinism on**: a fixed ``(seed, n_replicas)``
+  :class:`FidelityDistribution` is reproducible bit-for-bit, identical
+  between the table and unrolled flavors, and identical between LocalSim
+  and a forced-8-device mesh (replica keys are placement-invariant);
+* **provenance**: both fidelity CSVs carry seed/replica headers that
+  round-trip through :func:`repro.core.noise.parse_fidelity_csv`.
+"""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import noise
+from repro.core.events import CommEvent, ComputeEvent
+from repro.core.replay import FidelityDistribution, NoiseConfig
+from repro.core.synthesize import synthesize
+
+
+def _run(prog: str, timeout: int = 420):
+    proc = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                          text=True, timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+_TRACE_SRC = """\
+def _traces(n_ranks=4, reps=6, seed=7):
+    import numpy as np
+    from repro.core.events import CommEvent, ComputeEvent
+    rng = np.random.default_rng(seed)
+    base = np.array([2.1e6, 3.3e4, 1.1e6, 8.2e2, 0., 0.])
+    comm = CommEvent("psum", (16,), "float32", ("x",))
+    perm = CommEvent("ppermute", (4, 4), "bfloat16", ("x",), ("shift", 1))
+    out = []
+    for r in range(n_ranks):
+        tr = []
+        for _ in range(reps):
+            f = 1.0 + 0.03 * rng.standard_normal()
+            tr += [ComputeEvent(tuple(base * f)), comm,
+                   ComputeEvent(tuple(base * (2 * f))), perm]
+        if r == 0:
+            tr = tr + [comm]            # second signature group
+        out.append(tr)
+    return out
+"""
+exec(_TRACE_SRC)  # defines _traces for this module AND the subprocess progs
+
+
+def _synth(codegen="table", n_ranks=4):
+    return synthesize(rank_traces=_traces(n_ranks), # noqa: F821
+                      axis_sizes={"x": n_ranks},
+                      name=f"noise_{codegen}_{n_ranks}", codegen=codegen)
+
+
+CFG = NoiseConfig(seed=3, n_replicas=4)
+
+
+# ---------------------------------------------------------------------------
+# oracle parity when disabled
+# ---------------------------------------------------------------------------
+
+
+def test_noise_none_is_todays_delta_both_flavors():
+    """noise=None must be the plain deterministic FidelityReport — same
+    type, same δ, bit-identical across codegen flavors (the emitted
+    NOISE_MODELS table is inert without opt-in)."""
+    for flavor in ("table", "unrolled"):
+        res = _synth(flavor)
+        assert res.proxy.module.NOISE_MODELS      # table emitted...
+        plain = res.fidelity(sample_ranks=None)
+        off = res.fidelity(sample_ranks=None, noise=None)
+        assert type(off) is type(plain)
+        assert not isinstance(off, FidelityDistribution)
+        np.testing.assert_array_equal(off.delta, plain.delta)
+        # provenance defaults on the deterministic report
+        assert (off.seed, off.n_replicas) == (0, 1)
+    t = _synth("table").fidelity(sample_ranks=None)
+    u = _synth("unrolled").fidelity(sample_ranks=None)
+    np.testing.assert_array_equal(t.delta, u.delta)
+
+
+# ---------------------------------------------------------------------------
+# seeded determinism when enabled
+# ---------------------------------------------------------------------------
+
+
+def test_distribution_reproducible_and_seed_sensitive():
+    res = _synth()
+    a = res.fidelity(sample_ranks=None, noise=CFG)
+    b = res.fidelity(sample_ranks=None, noise=CFG)
+    assert isinstance(a, FidelityDistribution)
+    assert (a.seed, a.n_replicas) == (CFG.seed, CFG.n_replicas)
+    np.testing.assert_array_equal(a.replica_delta, b.replica_delta)
+    np.testing.assert_array_equal(a.comm_bytes, b.comm_bytes)
+    c = res.fidelity(sample_ranks=None,
+                     noise=NoiseConfig(seed=CFG.seed + 1,
+                                       n_replicas=CFG.n_replicas))
+    assert not np.array_equal(a.replica_delta, c.replica_delta)
+    # replicas genuinely differ (nonzero σ was calibrated from the jitter)
+    assert np.ptp(a.replica_means) > 0
+
+
+def test_noisy_flavor_parity():
+    """Table and unrolled modules bind the same NOISE_MODELS to the same
+    per-occurrence key stream → bit-identical distributions."""
+    a = _synth("table").fidelity(sample_ranks=None, noise=CFG)
+    b = _synth("unrolled").fidelity(sample_ranks=None, noise=CFG)
+    np.testing.assert_array_equal(a.replica_delta, b.replica_delta)
+    np.testing.assert_array_equal(a.comm_bytes, b.comm_bytes)
+
+
+def test_distribution_stats_shapes():
+    res = _synth()
+    d = res.fidelity(sample_ranks=None, noise=CFG)
+    n_rep, n_metrics, n_ranks = d.replica_delta.shape
+    assert (n_rep, n_ranks) == (CFG.n_replicas, 4)
+    assert d.delta_mean.shape == d.delta_std.shape == (n_metrics, n_ranks)
+    assert d.replica_means.shape == (n_rep,)
+    lo, hi = d.ci()
+    assert lo <= d.mean <= hi
+    assert d.metric_bands().shape == (n_metrics, 2)
+    assert d.comm_bytes.shape == (n_rep, n_ranks)
+    assert (d.comm_bytes > 0).all()
+    assert d.comm_lossless
+
+
+def test_run_all_noise_axis_and_guards():
+    res = _synth()
+    states = res.proxy.run_all(noise=CFG)
+    for st in states.values():
+        acc = st[noise.NOISE_COMPUTE]
+        assert acc.shape[0] == CFG.n_replicas
+        # replica perturbations differ along the leading axis
+        assert np.ptp(np.asarray(acc).sum(axis=tuple(
+            range(1, acc.ndim))), axis=0) > 0
+    assert res.proxy.time_all(noise=CFG) > 0
+    with pytest.raises(ValueError, match="per_rank_seeds"):
+        res.proxy.run_all(noise=CFG, per_rank_seeds=True)
+    with pytest.raises(ValueError, match="batched"):
+        res.proxy.run_all(noise=CFG, batched=False)
+
+
+def test_noise_config_validates():
+    with pytest.raises(ValueError):
+        NoiseConfig(n_replicas=0)
+
+
+# ---------------------------------------------------------------------------
+# provenance CSV round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_fidelity_csv_provenance_roundtrip():
+    res = _synth()
+    rep = res.fidelity(sample_ranks=None)
+    meta, delta = noise.parse_fidelity_csv(rep.to_csv())
+    assert meta["seed"] == 0 and meta["n_replicas"] == 1
+    assert meta["ranks"] == (0, 1, 2, 3)
+    np.testing.assert_allclose(delta, rep.delta, atol=5e-5)
+
+    dist = res.fidelity(sample_ranks=None, noise=CFG)
+    meta, delta = noise.parse_fidelity_csv(dist.to_csv())
+    assert meta["seed"] == CFG.seed
+    assert meta["n_replicas"] == CFG.n_replicas
+    assert meta["ranks"] == dist.ranks
+    np.testing.assert_allclose(delta, dist.delta_mean, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# forced 8-device mesh (subprocess): LocalSim ≡ mesh bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_distribution_bit_identical_to_local():
+    out = _run(textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np
+        import jax
+        from repro.core.replay import NoiseConfig, submesh_axis_sizes
+        from repro.core.synthesize import synthesize
+        from repro.launch.mesh import make_replay_mesh
+    """) + _TRACE_SRC + textwrap.dedent("""\
+        res = synthesize(rank_traces=_traces(8), axis_sizes={"x": 8},
+                         name="noise_mesh")
+        cfg = NoiseConfig(seed=3, n_replicas=4)
+        local = res.fidelity(sample_ranks=None, noise=cfg)
+        mesh = make_replay_mesh(
+            submesh_axis_sizes(jax.device_count(), {"x": 8}))
+        on_mesh = res.fidelity(sample_ranks=None, noise=cfg, mesh=mesh)
+        assert np.array_equal(local.replica_delta, on_mesh.replica_delta)
+        assert np.array_equal(local.comm_bytes, on_mesh.comm_bytes)
+        assert on_mesh.mesh_checked and not local.mesh_checked
+        # reproducible on re-run over the mesh as well
+        again = res.fidelity(sample_ranks=None, noise=cfg, mesh=mesh)
+        assert np.array_equal(on_mesh.replica_delta, again.replica_delta)
+        print("OK", float(local.mean))
+    """))
+    assert "OK" in out
