@@ -16,7 +16,8 @@ import time         # noqa: E402
 from pathlib import Path  # noqa: E402
 
 SUITES = ("compression_table", "minime_compare", "replay_time",
-          "synthesize_time", "codegen_parity", "portability", "proxy_dryrun")
+          "synthesize_time", "codegen_parity", "portability", "proxy_dryrun",
+          "corpus_scale")
 
 
 def main() -> None:
@@ -54,6 +55,10 @@ def main() -> None:
         from benchmarks.synthesize_time import write_artifacts
         write_artifacts(results["portability"], snapshot="BENCH_7.json",
                         suite="portability", out_dir=out.parent)
+    if "corpus_scale" in results:
+        from benchmarks.synthesize_time import write_artifacts
+        write_artifacts(results["corpus_scale"], snapshot="BENCH_8.json",
+                        suite="corpus_scale", out_dir=out.parent)
 
 
 if __name__ == "__main__":

@@ -1,166 +1,339 @@
-"""Streaming corpus store: append-only directory-of-npz + incremental
-joint clustering.
+"""Streaming corpus store: sharded directory-of-npz + incremental joint
+clustering with per-scenario partial sums.
 
-ROADMAP's "stream the corpus" item: the scenario zoo grows continuously,
-so the trace corpus must be an on-disk artifact that accumulates — not an
-in-memory list re-clustered from scratch per added workload.  A
+ROADMAP's "fleet-scale corpus" item: the scenario zoo grows continuously
+and from several appender processes at once, so the trace corpus must be
+an on-disk artifact whose appends are **commutative** — not a single
+serial manifest re-clustered from scratch per added workload.  A
 :class:`CorpusStore` is a directory::
 
     corpus/
-      manifest.json            # ordered scenario entries + content hashes
-      scenarios/<name>.npz     # one TraceStore artifact per scenario
-      cluster_index.npz        # the running joint-clustering state
-      fit_cache.npz            # content-addressed block-combination fits
+      manifest.json              # header: version, rel_tol, n_shards, ...
+      shards/shard-NN.json       # scenario entries, keyed by content hash
+      scenarios/<name>.npz       # one TraceStore artifact per scenario
+      scenarios/<name>.buckets.npz   # its pass-1 bucket table (sidecar)
+      cluster_index.npz          # merged index cache (rebuildable)
+      fit_cache.npz              # content-addressed block-combination fits
+      grammar_cache.json         # content-addressed Sequitur rules
+      locks/*.lock               # per-shard flock files
 
-**Incremental joint clustering with exact parity.**  The corpus-level
-clustering (:func:`repro.core.events.cluster_vectors` over every
-scenario's concatenated metrics) has two passes:
+**Sharded manifests.**  Scenario entries live in per-shard manifests —
+the shard is picked by content hash — and every shard write is a
+file-locked read-modify-write followed by an atomic rename, so two
+appender processes never corrupt a shard and never lose each other's
+entries.  *Manifest order* is canonical: shards in index order, entries
+within a shard sorted by ``(content_hash, name)``.  The store's state is
+therefore a pure function of its scenario **set** — append order,
+appender count, and worker scheduling all wash out, which is what makes
+parallel ingest bit-identical to serial ingest by construction.
 
-1. log-space bucketing — per-element quantization keys, buckets numbered
-   by first appearance, per-bucket float64 sums accumulated in stream
-   order.  Under *append* this pass is exactly incremental: a new
-   scenario's events land after every existing event in the concatenated
-   stream, so matching them against the persisted bucket keys and
-   continuing the in-order ``np.add.at`` accumulation reproduces the
-   one-shot sums bit for bit (new quantization keys get fresh buckets in
-   first-appearance order — the "genuinely novel events spawn new
-   clusters" path);
-2. the greedy bucket merge (:func:`repro.core.events.merge_buckets`) —
-   O(n_buckets²·6), independent of corpus length, so the
-   :class:`ClusterIndex` re-derives cluster representatives from its
-   running bucket table on demand instead of re-touching event data.
+**Joint clustering with per-scenario partial sums.**  The corpus-level
+clustering (see :func:`repro.core.events.combine_bucket_tables`) keeps
+one pass-1 bucket table *per scenario*: distinct quantization keys,
+float64 partial sums accumulated in the scenario's own event order, and
+per-row bucket ids.  Deriving the joint clusters renumbers buckets by
+first appearance in manifest order and folds the partial sums
+left-to-right in that order — O(total distinct keys), never re-touching
+event data.  Consequences:
+
+* **append** is exactly incremental (a new scenario's partials fold in
+  at its manifest position);
+* **removal** is O(remaining events): drop the scenario's table,
+  renumber, refold — no metrics reload, no full rebuild
+  (:meth:`CorpusStore.remove_scenario`);
+* the same fold implements the batch path
+  (:func:`repro.core.events.cluster_corpus`), so incremental and
+  from-scratch synthesis stay bit-identical by construction.
+
+This replaced the v1 event-order global accumulation — a deliberate,
+documented invariant change (float association differs at scenario
+boundaries, at most one ulp per fold).  v1 stores migrate on first open:
+the manifest is resharded and the index npz (now versioned) rebuilds
+once from the scenario artifacts.
 
 The load-bearing invariant (pinned by tests and the CI incremental job):
-``synthesize_corpus(store=...)`` after any sequence of
-:meth:`~CorpusStore.add_scenario` calls yields per-scenario δ̄
-**bit-identical** to a from-scratch ``synthesize_corpus`` over the same
-scenarios in manifest order.
+``synthesize_corpus(store=...)`` after any sequence of appends/removals
+yields per-scenario δ̄ **bit-identical** to a from-scratch
+``synthesize_corpus`` over the same scenarios in manifest order.
 
-``remove_scenario`` breaks append-only stream order, so it rebuilds the
-index from the remaining scenarios' metrics (a partial ``.npz`` column
-load — no comm-pool parse) in manifest order; the parity invariant then
-holds for the reduced set.
+:meth:`CorpusStore.add_scenarios` fans the per-scenario ingest front
+half (npz write, hashing, bucket table, noise calibration, grammar
+warm-up — pure NumPy, no JAX dispatch) across a worker pool; workers
+import no accelerator code, and the parent merges their bucket tables
+deterministically in manifest order.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
+import os
+import tempfile
 from pathlib import Path
 from typing import Iterator, Sequence
 
 import numpy as np
 
 from repro.core.events import (
-    N_METRICS, bucketize_keys, merge_buckets, quantize_metrics,
+    N_METRICS, combine_bucket_tables, quantize_metrics,
+    scenario_bucket_table,
 )
-from repro.core.proxy_search import FitResult
 from repro.core.trace_ir import TraceStore
 
-_MANIFEST_VERSION = 1
+try:                         # POSIX advisory locks; absent on some platforms
+    import fcntl
+except ImportError:          # pragma: no cover - non-POSIX fallback
+    fcntl = None
+
+_MANIFEST_VERSION = 2
+_INDEX_VERSION = 2
+_N_SHARDS_DEFAULT = 16
 _MANIFEST = "manifest.json"
 _INDEX = "cluster_index.npz"
 _FITS = "fit_cache.npz"
 _GRAMMARS = "grammar_cache.json"
 _SCENARIO_DIR = "scenarios"
+_SHARD_DIR = "shards"
+_LOCK_DIR = "locks"
 
 
-def _atomic_npz_write(path: Path, writer) -> None:
-    """Write-then-rename so a crash mid-write never truncates the live
-    file (the same pattern the manifest uses)."""
-    tmp = path.with_name(path.name + ".tmp")
-    with open(tmp, "wb") as f:
-        writer(f)
-    tmp.replace(path)
+class ToleranceMismatchError(ValueError):
+    """A persisted clustering artifact disagrees with the store's
+    ``rel_tol``.  Raised loudly instead of silently re-clustering: a
+    readable index built at a different tolerance means mixed store
+    directories or hand-edited artifacts, not bit rot."""
+
+
+class IndexFormatError(ValueError):
+    """Unversioned/old-version index artifact — the store rebuilds it
+    once (the v1 → v2 migration path)."""
 
 
 # ---------------------------------------------------------------------------
-# incremental joint-clustering index
+# crash-safe writes + cross-process locking
+# ---------------------------------------------------------------------------
+
+
+def _atomic_npz_write(path: Path, writer) -> None:
+    """Write-then-rename so a crash (or SIGKILL) mid-write never
+    truncates the live file.  The tmp name is unique per writer
+    (``mkstemp``), so two processes racing on the same target each
+    rename a complete file — last one wins, both are valid."""
+    path = Path(path)
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent),
+                               prefix=path.name + ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            writer(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        with contextlib.suppress(OSError):
+            os.unlink(tmp)
+        raise
+
+
+def _atomic_json_write(path: Path, obj, sort_keys: bool = True) -> None:
+    """JSON twin of :func:`_atomic_npz_write` — same contract: readers
+    (and reopeners after a kill) observe either the old or the new
+    manifest, never a truncated one.  ``sort_keys=False`` for payloads
+    whose dict order is semantic (the grammar cache)."""
+    path = Path(path)
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent),
+                               prefix=path.name + ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, indent=1, sort_keys=sort_keys)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        with contextlib.suppress(OSError):
+            os.unlink(tmp)
+        raise
+
+
+@contextlib.contextmanager
+def _file_lock(path: Path):
+    """Exclusive advisory lock serializing cross-process read-modify-
+    write of one shard manifest (or the header).  Degrades to no locking
+    where ``fcntl`` is unavailable — single-appender only there."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "a+") as f:
+        if fcntl is not None:
+            fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            if fcntl is not None:
+                fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+
+
+# ---------------------------------------------------------------------------
+# per-scenario bucket tables + the incremental joint-clustering index
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
-class ClusterIndex:
-    """Running corpus-clustering state: the pass-1 bucket table plus the
-    per-scenario bucket assignments, in ingestion order."""
+class ScenarioBuckets:
+    """One scenario's pass-1 bucket table (the partial-sums unit the
+    corpus clustering folds): distinct quantization keys in
+    first-appearance order, per-key float64 sums accumulated in the
+    scenario's own event order, row counts, and per-row local ids.
+
+    Pure per-scenario data — computable in an ingest worker with no view
+    of the rest of the corpus, persisted as a ``.buckets.npz`` sidecar so
+    concurrent appenders never contend on a shared index file."""
 
     rel_tol: float
-    keys: np.ndarray                      # (n_buckets, 6) int64 quant keys
-    sums: np.ndarray                      # (n_buckets, 6) float64 running
-    counts: np.ndarray                    # (n_buckets,) int64
-    buckets: dict[str, np.ndarray]        # scenario -> per-row bucket id
+    keys: np.ndarray          # (k, 6) int64 quantization keys
+    psums: np.ndarray         # (k, 6) float64 in-scenario partial sums
+    counts: np.ndarray        # (k,) int64
+    local_ids: np.ndarray     # (n_rows,) int64 → rows of ``keys``
+
+    @classmethod
+    def from_metrics(cls, metrics: np.ndarray, rel_tol: float,
+                     ) -> "ScenarioBuckets":
+        keys, psums, counts, local_ids = scenario_bucket_table(
+            np.asarray(metrics, dtype=np.float64), rel_tol)
+        return cls(rel_tol=rel_tol, keys=keys, psums=psums, counts=counts,
+                   local_ids=local_ids)
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.local_ids.shape[0])
+
+    def astuple(self) -> tuple:
+        return (self.keys, self.psums, self.counts, self.local_ids)
+
+    def save(self, path) -> None:
+        meta = json.dumps({"version": _INDEX_VERSION,
+                           "rel_tol": self.rel_tol})
+
+        def write(f):
+            np.savez(f, keys=self.keys, psums=self.psums,
+                     counts=self.counts, local_ids=self.local_ids,
+                     meta=np.asarray(meta))
+
+        _atomic_npz_write(Path(path), write)
+
+    @classmethod
+    def load(cls, path, expected_rel_tol: float | None = None,
+             ) -> "ScenarioBuckets":
+        with np.load(path) as z:
+            meta = json.loads(str(z["meta"]))
+            if meta.get("version") != _INDEX_VERSION:
+                raise IndexFormatError(
+                    f"bucket sidecar {path} has version "
+                    f"{meta.get('version')!r}, expected {_INDEX_VERSION}")
+            rel_tol = float(meta["rel_tol"])
+            if expected_rel_tol is not None and rel_tol != expected_rel_tol:
+                raise ToleranceMismatchError(
+                    f"bucket sidecar {path} was clustered at rel_tol="
+                    f"{rel_tol}, the store expects {expected_rel_tol}; "
+                    "refusing to silently re-cluster under a mismatched "
+                    "tolerance")
+            return cls(rel_tol=rel_tol,
+                       keys=z["keys"].astype(np.int64),
+                       psums=z["psums"].astype(np.float64),
+                       counts=z["counts"].astype(np.int64),
+                       local_ids=z["local_ids"].astype(np.int64))
+
+
+@dataclasses.dataclass
+class ClusterIndex:
+    """Running corpus-clustering state: one :class:`ScenarioBuckets` per
+    scenario plus the derivation order (= manifest order).
+
+    Derivation (:meth:`derive`) renumbers buckets by first appearance in
+    ``order`` and folds partial sums left-to-right in that order — see
+    :func:`repro.core.events.combine_bucket_tables`, the single shared
+    implementation that keeps this index bit-identical to the batch
+    path.  Mutations (:meth:`ingest`, :meth:`remove`, :meth:`set_order`)
+    only touch per-scenario tables and invalidate the derived cache, so
+    removal costs O(remaining events) at the next derive instead of a
+    full rebuild from metrics."""
+
+    rel_tol: float
+    tables: dict[str, ScenarioBuckets]
+    order: list[str]
 
     def __post_init__(self):
-        self._derived: tuple[np.ndarray, dict[int, np.ndarray]] | None = None
+        self._derived: dict | None = None
 
     @classmethod
     def empty(cls, rel_tol: float = 0.05) -> "ClusterIndex":
-        return cls(rel_tol=rel_tol,
-                   keys=np.zeros((0, N_METRICS), dtype=np.int64),
-                   sums=np.zeros((0, N_METRICS), dtype=np.float64),
-                   counts=np.zeros(0, dtype=np.int64),
-                   buckets={})
+        return cls(rel_tol=rel_tol, tables={}, order=[])
 
     @property
     def n_buckets(self) -> int:
-        return int(self.keys.shape[0])
+        return int(self._derive_full()["n_buckets"])
 
     @property
     def n_clusters(self) -> int:
         return len(self.derive()[1])
 
-    # -- ingest ----------------------------------------------------------------
+    # -- mutation --------------------------------------------------------------
 
     def ingest(self, name: str, metrics: np.ndarray) -> None:
-        """Append one scenario's compute metrics to the running bucket
-        table — the incremental half of ``cluster_vectors`` pass 1.
+        """Append one scenario's compute metrics as a fresh bucket table
+        (partial sums accumulated in the scenario's own event order)."""
+        self.ingest_table(name,
+                          ScenarioBuckets.from_metrics(metrics, self.rel_tol))
 
-        Rows matching a persisted quantization key join that bucket (the
-        float64 sum continues exactly where the one-shot accumulation
-        would be); novel keys get fresh buckets numbered by first
-        appearance, exactly as the concatenated stream would number them.
-        """
-        if name in self.buckets:
+    def ingest_table(self, name: str, sb: ScenarioBuckets) -> None:
+        """Merge a pre-computed bucket table (the parallel-ingest path:
+        workers build tables, the parent folds them in manifest order)."""
+        if name in self.tables:
             raise ValueError(f"scenario {name!r} already in cluster index")
-        metrics = np.asarray(metrics, dtype=np.float64)
-        if metrics.shape[0] == 0:
-            self.buckets[name] = np.zeros(0, dtype=np.int64)
-            return
-        local_ids, uniq = bucketize_keys(
-            quantize_metrics(metrics, self.rel_tol))
-        by_key = {k.tobytes(): i for i, k in enumerate(self.keys)}
-        gids = np.empty(len(uniq), dtype=np.int64)
-        novel: list[np.ndarray] = []
-        for i, k in enumerate(uniq):
-            kb = k.tobytes()
-            gid = by_key.get(kb)
-            if gid is None:
-                gid = len(by_key)
-                by_key[kb] = gid
-                novel.append(k)
-            gids[i] = gid
-        if novel:
-            self.keys = np.concatenate([self.keys, np.stack(novel)])
-            self.sums = np.concatenate(
-                [self.sums, np.zeros((len(novel), N_METRICS))])
-            self.counts = np.concatenate(
-                [self.counts, np.zeros(len(novel), dtype=np.int64)])
-        bucket_ids = gids[local_ids]
-        # np.add.at is an unbuffered in-order accumulation: continuing it
-        # on the persisted sums reproduces the one-shot concatenated-stream
-        # accumulation bit for bit (the appended rows come last either way)
-        np.add.at(self.sums, bucket_ids, metrics)
-        self.counts = self.counts + np.bincount(bucket_ids,
-                                                minlength=self.n_buckets)
-        self.buckets[name] = bucket_ids
+        if sb.rel_tol != self.rel_tol:
+            raise ToleranceMismatchError(
+                f"bucket table for {name!r} was clustered at rel_tol="
+                f"{sb.rel_tol}, index expects {self.rel_tol}")
+        self.tables[name] = sb
+        self.order.append(name)
         self._derived = None
+
+    def remove(self, name: str) -> None:
+        """Drop one scenario — O(1) now, O(remaining events) at the next
+        :meth:`derive` (renumber + refold the surviving partial sums)."""
+        if name not in self.tables:
+            raise KeyError(f"scenario {name!r} not in cluster index")
+        del self.tables[name]
+        self.order.remove(name)
+        self._derived = None
+
+    def set_order(self, order: Sequence[str]) -> None:
+        """Pin the derivation order (the store's canonical manifest
+        order).  Must be a permutation of the ingested scenarios."""
+        order = list(order)
+        if set(order) != set(self.tables) or len(order) != len(self.tables):
+            raise ValueError(
+                f"order {order!r} is not a permutation of the indexed "
+                f"scenarios {sorted(self.tables)!r}")
+        if order != self.order:
+            self.order = order
+            self._derived = None
 
     @classmethod
     def rebuild(cls, rel_tol: float,
                 scenario_metrics: Sequence[tuple[str, np.ndarray]],
-                ) -> "ClusterIndex":
-        """Fresh index over the given scenarios in order — the one-shot
-        semantics, used after removal."""
+                expected_rel_tol: float | None = None) -> "ClusterIndex":
+        """Fresh index over the given scenarios in order — the from-
+        scratch semantics, used for self-healing and as the timing
+        baseline the partial-sums removal is measured against.
+
+        ``expected_rel_tol`` guards miswired callers: rebuilding under a
+        tolerance different from the store's raises instead of silently
+        re-clustering."""
+        if expected_rel_tol is not None and rel_tol != expected_rel_tol:
+            raise ToleranceMismatchError(
+                f"asked to rebuild the cluster index at rel_tol={rel_tol} "
+                f"but the store expects {expected_rel_tol}; refusing to "
+                "silently re-cluster under a mismatched tolerance")
         idx = cls.empty(rel_tol)
         for name, metrics in scenario_metrics:
             idx.ingest(name, metrics)
@@ -168,58 +341,134 @@ class ClusterIndex:
 
     # -- derivation ------------------------------------------------------------
 
-    def derive(self) -> tuple[np.ndarray, dict[int, np.ndarray]]:
-        """(bucket→cluster remap, cluster representatives) — pass 2 of
-        ``cluster_vectors`` over the running bucket table.  Cached until
-        the next ingest."""
+    def _derive_full(self) -> dict:
         if self._derived is None:
-            if self.n_buckets == 0:
-                self._derived = (np.zeros(0, dtype=np.int64), {})
-            else:
-                self._derived = merge_buckets(self.sums, self.counts,
-                                              self.rel_tol)
+            ids_list, reps, state = combine_bucket_tables(
+                [self.tables[n].astuple() for n in self.order],
+                self.rel_tol, return_state=True)
+            state["ids"] = dict(zip(self.order, ids_list))
+            self._derived = state
         return self._derived
+
+    def derive(self) -> tuple[dict[str, np.ndarray], dict[int, np.ndarray]]:
+        """(per-scenario cluster ids, cluster representatives) — the
+        joint clustering folded in ``order``.  Cached until the next
+        mutation."""
+        d = self._derive_full()
+        return d["ids"], d["reps"]
 
     def assignments(self, name: str) -> np.ndarray:
         """Cluster id per compute row of one scenario (aligned with its
         ``TraceStore.metrics``)."""
-        remap, _ = self.derive()
-        return remap[self.buckets[name]]
+        return self._derive_full()["ids"][name]
+
+    def match_clusters(self, metrics: np.ndarray,
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """Map arbitrary metric rows onto the derived corpus clusters
+        *without* re-clustering: exact quantization-key lookup with a
+        nearest-representative fallback for unseen keys.  Pure NumPy —
+        the serve tier's hot path.  Returns ``(cluster_ids, matched)``
+        where ``matched[i]`` is False for fallback rows."""
+        metrics = np.asarray(metrics, dtype=np.float64)
+        if metrics.ndim != 2 or metrics.shape[1] != N_METRICS:
+            raise ValueError(f"expected (n, {N_METRICS}) metrics array")
+        d = self._derive_full()
+        n = metrics.shape[0]
+        cids = np.zeros(n, dtype=np.int64)
+        matched = np.zeros(n, dtype=bool)
+        if n == 0:
+            return cids, matched
+        if d["n_buckets"] == 0:
+            raise ValueError("cannot match against an empty cluster index")
+        by_key, remap = d["by_key"], d["remap"]
+        q = np.ascontiguousarray(quantize_metrics(metrics, self.rel_tol))
+        for i in range(n):
+            gid = by_key.get(q[i].tobytes())
+            if gid is not None:
+                cids[i] = remap[gid]
+                matched[i] = True
+        if not matched.all():
+            reps = d["reps"]
+            rep_ids = np.fromiter(reps.keys(), dtype=np.int64,
+                                  count=len(reps))
+            rep_mat = np.stack([reps[int(c)] for c in rep_ids])
+            v = metrics[~matched][:, None, :]
+            denom = np.maximum(
+                np.maximum(np.abs(rep_mat[None]), np.abs(v)), 1e-30)
+            dist = (np.abs(rep_mat[None] - v) / denom).max(axis=2)
+            cids[~matched] = rep_ids[np.argmin(dist, axis=1)]
+        return cids, matched
 
     # -- persistence -----------------------------------------------------------
 
-    def save(self, path, order: Sequence[str]) -> None:
-        """Persist as npz (atomically: tmp + rename); per-scenario bucket
-        arrays are concatenated in ``order`` (the manifest order) with an
-        extents array."""
-        order = list(order)
-        chunks = [self.buckets[n] for n in order]
-        extents = np.cumsum([0] + [len(c) for c in chunks])
-        flat = (np.concatenate(chunks) if chunks
-                else np.zeros(0, dtype=np.int64))
-        meta = json.dumps({"rel_tol": self.rel_tol, "order": order})
+    def save(self, path, order: Sequence[str] | None = None) -> None:
+        """Persist as a versioned npz (atomically: tmp + rename) — the
+        merged cache of the per-scenario sidecars; always rebuildable."""
+        names = list(self.order if order is None else order)
+        if set(names) != set(self.tables):
+            raise ValueError("save order must cover exactly the indexed "
+                             "scenarios")
+        tabs = [self.tables[n] for n in names]
+        kext = np.cumsum([0] + [len(t.keys) for t in tabs])
+        rext = np.cumsum([0] + [t.n_rows for t in tabs])
+        cat = {
+            "keys": (np.concatenate([t.keys for t in tabs]) if tabs
+                     else np.zeros((0, N_METRICS), dtype=np.int64)),
+            "psums": (np.concatenate([t.psums for t in tabs]) if tabs
+                      else np.zeros((0, N_METRICS), dtype=np.float64)),
+            "counts": (np.concatenate([t.counts for t in tabs]) if tabs
+                       else np.zeros(0, dtype=np.int64)),
+            "local_ids": (np.concatenate([t.local_ids for t in tabs]) if tabs
+                          else np.zeros(0, dtype=np.int64)),
+        }
+        meta = json.dumps({"version": _INDEX_VERSION, "rel_tol": self.rel_tol,
+                           "order": names})
 
         def write(f):
-            np.savez(f, keys=self.keys, sums=self.sums, counts=self.counts,
-                     bucket_ids=flat, bucket_extents=extents,
-                     meta=np.asarray(meta))
+            np.savez(f, key_extents=kext, row_extents=rext,
+                     meta=np.asarray(meta), **cat)
 
         _atomic_npz_write(Path(path), write)
 
     @classmethod
-    def load(cls, path) -> "ClusterIndex":
+    def load(cls, path, expected_rel_tol: float | None = None,
+             ) -> "ClusterIndex":
+        """Load a persisted index.  Raises :class:`IndexFormatError` for
+        pre-v2 artifacts (callers rebuild once — the migration path) and
+        :class:`ToleranceMismatchError` when the artifact's ``rel_tol``
+        disagrees with ``expected_rel_tol`` (loud, never a silent
+        re-cluster)."""
         with np.load(path) as z:
             meta = json.loads(str(z["meta"]))
-            order = meta["order"]
-            flat = z["bucket_ids"].astype(np.int64)
-            extents = z["bucket_extents"].astype(np.int64)
-            buckets = {n: flat[extents[i]:extents[i + 1]]
-                       for i, n in enumerate(order)}
-            return cls(rel_tol=float(meta["rel_tol"]),
-                       keys=z["keys"].astype(np.int64),
-                       sums=z["sums"].astype(np.float64),
-                       counts=z["counts"].astype(np.int64),
-                       buckets=buckets)
+            if meta.get("version") != _INDEX_VERSION:
+                raise IndexFormatError(
+                    f"cluster index {path} has version "
+                    f"{meta.get('version')!r}, expected {_INDEX_VERSION} "
+                    "(pre-v2 stores rebuild once on open)")
+            rel_tol = float(meta["rel_tol"])
+            if expected_rel_tol is not None and rel_tol != expected_rel_tol:
+                raise ToleranceMismatchError(
+                    f"cluster index {path} was clustered at rel_tol="
+                    f"{rel_tol}, the store expects {expected_rel_tol}; "
+                    "refusing to silently re-cluster under a mismatched "
+                    "tolerance")
+            order = list(meta["order"])
+            kext = z["key_extents"].astype(np.int64)
+            rext = z["row_extents"].astype(np.int64)
+            keys = z["keys"].astype(np.int64)
+            psums = z["psums"].astype(np.float64)
+            counts = z["counts"].astype(np.int64)
+            ids = z["local_ids"].astype(np.int64)
+            tables = {
+                n: ScenarioBuckets(
+                    rel_tol=rel_tol,
+                    keys=keys[kext[i]:kext[i + 1]],
+                    psums=psums[kext[i]:kext[i + 1]],
+                    counts=counts[kext[i]:kext[i + 1]],
+                    local_ids=ids[rext[i]:rext[i + 1]])
+                for i, n in enumerate(order)
+            }
+            return cls(rel_tol=rel_tol, tables=tables, order=order)
 
 
 # ---------------------------------------------------------------------------
@@ -238,7 +487,7 @@ class FitCache:
     observability and coarse invalidation."""
 
     def __init__(self):
-        self._fits: dict[str, FitResult] = {}
+        self._fits: dict = {}
 
     def __len__(self):
         return len(self._fits)
@@ -246,10 +495,10 @@ class FitCache:
     def __contains__(self, key: str) -> bool:
         return key in self._fits
 
-    def get(self, key: str) -> FitResult | None:
+    def get(self, key: str):
         return self._fits.get(key)
 
-    def put(self, key: str, fr: FitResult) -> None:
+    def put(self, key: str, fr) -> None:
         self._fits[key] = fr
 
     def save(self, path) -> None:
@@ -274,6 +523,9 @@ class FitCache:
 
     @classmethod
     def load(cls, path) -> "FitCache":
+        # lazy: proxy_search pulls in jax, and the ingest worker pool
+        # (which imports this module) never touches the fit cache
+        from repro.core.proxy_search import FitResult
         cache = cls()
         with np.load(path) as z:
             for i, k in enumerate(z["keys"].tolist()):
@@ -305,6 +557,12 @@ class GrammarCache:
     run entirely — on a warm store, re-opened in a fresh process, every
     unchanged rank stream resolves from this cache, so grammar inference
     on incremental appends costs only the new scenario's novel streams.
+
+    The parallel-ingest workers warm this cache speculatively: each runs
+    the scenario-local front half and returns its rules, so later joint
+    synthesis hits whenever the joint cluster partition restricted to the
+    scenario equals the local one (the common case; a miss just re-runs
+    Sequitur — the cache is content-addressed, never a correctness risk).
 
     Rules are pure int/str structures, so unlike the in-memory front-half
     memo they persist (``grammar_cache.json``); rule dicts alias across
@@ -344,6 +602,16 @@ class GrammarCache:
         self._rules[key] = rules
         self.dirty = True
 
+    def merge(self, rules_by_key: dict[str, dict[int, list[tuple]]]) -> int:
+        """Fold another cache's rule entries in (the parallel-ingest
+        merge); existing keys win.  Returns the number added."""
+        added = 0
+        for k, rules in rules_by_key.items():
+            if k not in self._rules:
+                self.put(k, rules)
+                added += 1
+        return added
+
     def save(self, path) -> None:
         path = Path(path)
         if not self._rules:
@@ -357,9 +625,8 @@ class GrammarCache:
                    "entries": {k: {str(rid): [list(s) for s in body]
                                    for rid, body in rules.items()}
                                for k, rules in self._rules.items()}}
-        tmp = path.with_name(path.name + ".tmp")
-        tmp.write_text(json.dumps(payload))
-        tmp.replace(path)
+        # sort_keys=False: rid order is semantic (see comment above)
+        _atomic_json_write(path, payload, sort_keys=False)
         self.dirty = False
 
     @classmethod
@@ -377,51 +644,131 @@ class GrammarCache:
 
 
 # ---------------------------------------------------------------------------
+# the ingest front half (worker-pool safe: pure NumPy, no JAX imports)
+# ---------------------------------------------------------------------------
+
+
+def _entry_sort_key(entry: dict) -> tuple[str, str]:
+    return (entry["content_hash"], entry["name"])
+
+
+def _ingest_front_half(root, name: str, src, rel_tol: float,
+                       threshold: float = 0.5, warm_grammars: bool = False,
+                       ) -> tuple[str, dict, ScenarioBuckets, dict]:
+    """The per-scenario half of ingest with no view of the corpus: write
+    the scenario npz + bucket sidecar, hash, calibrate noise, and
+    (optionally) warm the grammar cache with the scenario-local front
+    half.  Pure NumPy throughout — this is the function
+    :meth:`CorpusStore.add_scenarios` fans across the worker pool, so it
+    must not import any accelerator code.
+
+    ``src`` is a :class:`TraceStore` or a path to one (paths are the
+    fleet-scale case: workers load their own inputs, nothing large rides
+    the pipe).  Returns ``(name, manifest_entry, buckets, grammar_rules)``
+    for the parent to merge under the shard locks."""
+    root = Path(root)
+    store = src if isinstance(src, TraceStore) else TraceStore.load(src)
+    path = store.save(root / _SCENARIO_DIR / f"{name}.npz")
+    chash = store.content_hash()
+    sb = ScenarioBuckets.from_metrics(store.metrics, rel_tol)
+    sb.save(root / _SCENARIO_DIR / f"{name}.buckets.npz")
+    from repro.core import noise as noise_mod   # lazy: numpy-only module
+    entry = {
+        "name": name,
+        "file": f"{_SCENARIO_DIR}/{name}.npz",
+        "content_hash": chash,
+        "n_ranks": store.n_ranks,
+        "n_events": store.n_events,
+        "n_compute_events": store.n_compute_events,
+        # scenario-LOCAL noise calibration (this scenario's own
+        # clustering at the store's rel_tol): an observability artifact
+        # riding the manifest.  Synthesis recalibrates against the JOINT
+        # cluster assignment so batch and incremental paths emit
+        # identical NOISE_MODELS tables.
+        "noise": noise_mod.calibrate(store, rel_tol=rel_tol).to_json(),
+    }
+    rules: dict = {}
+    if warm_grammars:
+        from repro.core.trace_ir import compress_store   # numpy-only
+        gc = GrammarCache()
+        compress_store(store, rel_tol, threshold, grammar_cache=gc)
+        rules = gc._rules
+    return name, entry, sb, rules
+
+
+# ---------------------------------------------------------------------------
 # the store
 # ---------------------------------------------------------------------------
 
 
 class CorpusStore:
-    """Append-only on-disk trace corpus with incremental joint clustering.
+    """Sharded on-disk trace corpus with incremental joint clustering.
 
     ::
 
         cs = CorpusStore("corpus/")            # opens or creates
         cs.add_scenario("transformer-dp", store)
+        cs.add_scenarios(items, n_workers=4)   # parallel batch ingest
         corp = synthesize_corpus(store=cs)     # incremental synthesis
 
-    Scenario order is ingestion order (the manifest list); the clustering
-    and the δ̄-parity invariant are defined relative to it.
+    Scenario order is **canonical**, not ingestion order: shards in index
+    order, entries within a shard sorted by ``(content_hash, name)``.
+    The clustering and the δ̄-parity invariant are defined relative to
+    that order, which is a pure function of the scenario set — so any mix
+    of appenders, worker counts, and append interleavings converges to
+    the same bit-identical store state.
     """
 
-    def __init__(self, root, rel_tol: float | None = None):
+    def __init__(self, root, rel_tol: float | None = None,
+                 n_shards: int | None = None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         (self.root / _SCENARIO_DIR).mkdir(exist_ok=True)
+        (self.root / _SHARD_DIR).mkdir(exist_ok=True)
         self._stores: dict[str, TraceStore] = {}
         #: in-memory front-half memo used by incremental synthesis
         #: (grammar objects are not persistable; the on-disk caches are
-        #: the cluster index and the fit cache)
+        #: the cluster index and the fit/grammar caches)
         self.memo: dict = {}
 
         mpath = self.root / _MANIFEST
         if mpath.exists():
             manifest = json.loads(mpath.read_text())
-            if manifest.get("version") != _MANIFEST_VERSION:
+            version = manifest.get("version")
+            if version not in (1, _MANIFEST_VERSION):
                 raise ValueError(
-                    f"unsupported corpus manifest version "
-                    f"{manifest.get('version')!r} in {mpath}")
+                    f"unsupported corpus manifest version {version!r} "
+                    f"in {mpath}")
             if rel_tol is not None and rel_tol != manifest["rel_tol"]:
                 raise ValueError(
                     f"corpus at {self.root} was built with rel_tol="
                     f"{manifest['rel_tol']}, asked to open with {rel_tol}")
-            self.manifest = manifest
+            if version == 1:
+                self._migrate_v1(manifest)
+            else:
+                if n_shards is not None and n_shards != manifest["n_shards"]:
+                    raise ValueError(
+                        f"corpus at {self.root} has {manifest['n_shards']} "
+                        f"shards, asked to open with {n_shards}")
+                self.manifest = manifest
+                self._shards = [self._read_shard(self._shard_path(i))
+                                for i in range(self.n_shards)]
         else:
             self.manifest = {"version": _MANIFEST_VERSION,
                              "rel_tol": 0.05 if rel_tol is None else rel_tol,
-                             "scenarios": [],
+                             "n_shards": n_shards or _N_SHARDS_DEFAULT,
                              "table_fingerprint": None}
+            self._shards = [[] for _ in range(self.n_shards)]
             self._write_manifest()
+
+        seen: set[str] = set()
+        for e in self._iter_entries():
+            if e["name"] in seen:
+                raise ValueError(
+                    f"corpus at {self.root} lists scenario "
+                    f"{e['name']!r} in more than one shard (two appenders "
+                    "raced on the same name with different content)")
+            seen.add(e["name"])
 
         self.index = self._load_or_rebuild_index()
         fpath = self.root / _FITS
@@ -440,26 +787,78 @@ class CorpusStore:
             # costs a Sequitur re-run, never correctness
             self.grammars = GrammarCache()
 
+    # -- open-time migration / healing -----------------------------------------
+
+    def _migrate_v1(self, manifest: dict) -> None:
+        """One-time v1 → v2 migration: reshard the flat scenario list and
+        adopt the canonical order.  The v1 index npz fails the version
+        check downstream and rebuilds once (writing the sidecars), as
+        documented — v1's event-order accumulation is superseded by the
+        partial-sums semantics, so derived reps may move by an ulp."""
+        entries = manifest.get("scenarios", [])
+        self.manifest = {"version": _MANIFEST_VERSION,
+                         "rel_tol": manifest["rel_tol"],
+                         "n_shards": _N_SHARDS_DEFAULT,
+                         "table_fingerprint":
+                             manifest.get("table_fingerprint")}
+        self._shards = [[] for _ in range(self.n_shards)]
+        for e in entries:
+            self._shards[self._shard_of(e["content_hash"])].append(e)
+        for i, shard in enumerate(self._shards):
+            shard.sort(key=_entry_sort_key)
+            if shard:
+                _atomic_json_write(self._shard_path(i),
+                                   {"version": _MANIFEST_VERSION,
+                                    "entries": shard})
+        self._write_manifest()
+
     def _load_or_rebuild_index(self) -> ClusterIndex:
-        """Load the persisted cluster index, validating it against the
-        manifest (the source of truth).  A missing, corrupt, or stale
-        index — e.g. a crash between the two persist writes — is rebuilt
-        from the scenario artifacts, so the store self-heals instead of
-        silently serving assignments inconsistent with its contents."""
+        """Load the merged cluster-index cache, validating it against the
+        manifest (the source of truth).  A missing, corrupt, stale, or
+        pre-v2 index refreshes from the per-scenario bucket sidecars
+        (falling back to a metrics column load where a sidecar is also
+        gone), so the store self-heals instead of silently serving
+        assignments inconsistent with its contents.  A *tolerance
+        mismatch* is not healed: it raises
+        :class:`ToleranceMismatchError` loudly."""
         ipath = self.root / _INDEX
         names = self.names
+        idx: ClusterIndex | None = None
         if ipath.exists():
             try:
-                idx = ClusterIndex.load(ipath)
-                if idx.rel_tol == self.rel_tol \
-                        and set(idx.buckets) == set(names):
-                    return idx
+                idx = ClusterIndex.load(ipath, expected_rel_tol=self.rel_tol)
+            except ToleranceMismatchError:
+                raise
             except Exception:
-                pass
-        idx = ClusterIndex.rebuild(
-            self.rel_tol, [(n, self._metrics_of(n)) for n in names])
+                idx = None            # corrupt or pre-v2: rebuild below
+        if idx is not None and set(idx.tables) == set(names):
+            idx.set_order(names)
+            return idx
+        tables: dict[str, ScenarioBuckets] = (
+            {} if idx is None
+            else {n: idx.tables[n] for n in names if n in idx.tables})
+        for n in names:
+            if n in tables:
+                continue
+            spath = self._sidecar_path(n)
+            sb: ScenarioBuckets | None = None
+            if spath.exists():
+                try:
+                    sb = ScenarioBuckets.load(spath,
+                                              expected_rel_tol=self.rel_tol)
+                except ToleranceMismatchError:
+                    raise
+                except Exception:
+                    sb = None
+            if sb is None:
+                sb = ScenarioBuckets.from_metrics(self._metrics_of(n),
+                                                  self.rel_tol)
+                sb.save(spath)        # heal the sidecar (v1 → v2 migration)
+            tables[n] = sb
+        idx = ClusterIndex(rel_tol=self.rel_tol, tables=tables,
+                           order=list(names))
         if names:
-            idx.save(ipath, names)
+            idx.save(ipath)
         return idx
 
     # -- basic accessors -------------------------------------------------------
@@ -469,21 +868,31 @@ class CorpusStore:
         return float(self.manifest["rel_tol"])
 
     @property
+    def n_shards(self) -> int:
+        return int(self.manifest["n_shards"])
+
+    def _iter_entries(self) -> Iterator[dict]:
+        for shard in self._shards:
+            yield from shard
+
+    @property
     def names(self) -> list[str]:
-        return [e["name"] for e in self.manifest["scenarios"]]
+        """Scenario names in canonical manifest order (shard-major,
+        content-hash sorted within a shard)."""
+        return [e["name"] for e in self._iter_entries()]
 
     def __len__(self) -> int:
-        return len(self.manifest["scenarios"])
+        return sum(len(s) for s in self._shards)
 
     def __contains__(self, name: str) -> bool:
-        return any(e["name"] == name for e in self.manifest["scenarios"])
+        return any(e["name"] == name for e in self._iter_entries())
 
     def __iter__(self) -> Iterator[tuple[str, TraceStore]]:
         for name in self.names:
             yield name, self.load_scenario(name)
 
     def _entry(self, name: str) -> dict:
-        for e in self.manifest["scenarios"]:
+        for e in self._iter_entries():
             if e["name"] == name:
                 return e
         raise KeyError(f"scenario {name!r} not in corpus")
@@ -504,51 +913,149 @@ class CorpusStore:
     def scenario_path(self, name: str) -> Path:
         return self.root / _SCENARIO_DIR / f"{name}.npz"
 
+    def _sidecar_path(self, name: str) -> Path:
+        return self.root / _SCENARIO_DIR / f"{name}.buckets.npz"
+
+    # -- shard plumbing --------------------------------------------------------
+
+    def _shard_of(self, content_hash: str) -> int:
+        return int(content_hash[:8], 16) % self.n_shards
+
+    def _shard_path(self, i: int) -> Path:
+        return self.root / _SHARD_DIR / f"shard-{i:02d}.json"
+
+    def _lock_path(self, stem: str) -> Path:
+        return self.root / _LOCK_DIR / f"{stem}.lock"
+
+    @staticmethod
+    def _read_shard(path: Path) -> list[dict]:
+        if not path.exists():
+            return []
+        data = json.loads(path.read_text())
+        if data.get("version") != _MANIFEST_VERSION:
+            raise ValueError(f"unsupported shard manifest version "
+                             f"{data.get('version')!r} in {path}")
+        return sorted(data["entries"], key=_entry_sort_key)
+
+    def _append_entry(self, entry: dict) -> None:
+        """Commit one scenario entry to its shard: flock the shard,
+        re-read it from disk (picking up concurrent appenders), insert in
+        canonical position, atomic-rename the new shard file."""
+        i = self._shard_of(entry["content_hash"])
+        with _file_lock(self._lock_path(f"shard-{i:02d}")):
+            cur = self._read_shard(self._shard_path(i))
+            if any(e["name"] == entry["name"] for e in cur):
+                raise ValueError(
+                    f"scenario {entry['name']!r} already in corpus")
+            cur.append(entry)
+            cur.sort(key=_entry_sort_key)
+            _atomic_json_write(self._shard_path(i),
+                               {"version": _MANIFEST_VERSION, "entries": cur})
+        self._shards[i] = cur
+
+    def _remove_entry(self, entry: dict) -> None:
+        i = self._shard_of(entry["content_hash"])
+        with _file_lock(self._lock_path(f"shard-{i:02d}")):
+            cur = [e for e in self._read_shard(self._shard_path(i))
+                   if e["name"] != entry["name"]]
+            _atomic_json_write(self._shard_path(i),
+                               {"version": _MANIFEST_VERSION, "entries": cur})
+        self._shards[i] = cur
+
     # -- mutation --------------------------------------------------------------
 
-    def add_scenario(self, name: str, store: TraceStore) -> str:
-        """Append one scenario: write its npz, extend the cluster index
-        incrementally, record its content hash.  Returns the hash."""
-        if name in self:
-            raise ValueError(f"scenario {name!r} already in corpus")
+    @staticmethod
+    def _validate_name(name: str) -> None:
         if "/" in name or name in (".", ".."):
             raise ValueError(f"invalid scenario name {name!r}")
-        path = store.save(self.scenario_path(name))
-        chash = store.content_hash()
-        self.index.ingest(name, store.metrics)
-        from repro.core import noise as noise_mod
-        self.manifest["scenarios"].append({
-            "name": name,
-            "file": str(path.relative_to(self.root)),
-            "content_hash": chash,
-            "n_ranks": store.n_ranks,
-            "n_events": store.n_events,
-            "n_compute_events": store.n_compute_events,
-            # scenario-LOCAL noise calibration (this scenario's own
-            # clustering at the store's rel_tol): an observability
-            # artifact riding the manifest.  Synthesis recalibrates
-            # against the JOINT cluster assignment so batch and
-            # incremental paths emit identical NOISE_MODELS tables.
-            "noise": noise_mod.calibrate(store,
-                                         rel_tol=self.rel_tol).to_json(),
-        })
+
+    def add_scenario(self, name: str, store: TraceStore) -> str:
+        """Append one scenario: write its npz + bucket sidecar, commit
+        the shard entry under the shard lock, fold its bucket table into
+        the cluster index.  Returns the content hash."""
+        self._validate_name(name)
+        if name in self:
+            raise ValueError(f"scenario {name!r} already in corpus")
+        _, entry, sb, _ = _ingest_front_half(self.root, name, store,
+                                             self.rel_tol)
+        self._append_entry(entry)
+        self.index.ingest_table(name, sb)
         self._stores[name] = store
-        self._persist()
-        return chash
+        self._finish_mutation()
+        return entry["content_hash"]
+
+    def add_scenarios(self, items, n_workers: int = 0,
+                      threshold: float = 0.5, warm_grammars: bool = True,
+                      ) -> dict[str, str]:
+        """Batch ingest; ``n_workers > 0`` fans the per-scenario front
+        half (:func:`_ingest_front_half`: npz write, hashing, bucket
+        table, noise calibration, grammar warm-up — all pure NumPy)
+        across a process pool, then merges the returned bucket tables
+        deterministically in canonical manifest order, so the final state
+        is bit-identical to ``n_workers=0`` serial ingest.
+
+        ``items`` is a sequence of ``(name, TraceStore | path)`` pairs —
+        paths are the fleet-scale form (each worker loads its own input).
+        ``warm_grammars`` runs the scenario-local Sequitur front half in
+        the worker and folds the rules into the persistent grammar cache,
+        so the first joint synthesis after ingest skips Sequitur for
+        every stream whose joint partition matches the local one.
+        Returns ``{name: content_hash}``."""
+        items = [(name, src) for name, src in items]
+        for name, _ in items:
+            self._validate_name(name)
+            if name in self:
+                raise ValueError(f"scenario {name!r} already in corpus")
+        if len({n for n, _ in items}) != len(items):
+            raise ValueError("duplicate scenario names in batch")
+
+        if n_workers and len(items) > 1:
+            import multiprocessing as mp
+            from concurrent.futures import ProcessPoolExecutor
+            method = ("fork" if "fork" in mp.get_all_start_methods()
+                      else "spawn")
+            ctx = mp.get_context(method)
+            with ProcessPoolExecutor(
+                    max_workers=min(n_workers, len(items)),
+                    mp_context=ctx) as ex:
+                futs = [ex.submit(_ingest_front_half, str(self.root), name,
+                                  src if isinstance(src, TraceStore)
+                                  else str(src),
+                                  self.rel_tol, threshold, warm_grammars)
+                        for name, src in items]
+                results = [f.result() for f in futs]
+        else:
+            results = [_ingest_front_half(self.root, name, src, self.rel_tol,
+                                          threshold, warm_grammars)
+                       for name, src in items]
+
+        hashes: dict[str, str] = {}
+        for name, entry, sb, rules in results:
+            self._append_entry(entry)
+            self.index.ingest_table(name, sb)
+            self.grammars.merge(rules)
+            hashes[name] = entry["content_hash"]
+        for name, src in items:
+            if isinstance(src, TraceStore):
+                self._stores[name] = src
+        self._finish_mutation()
+        self.save_grammars()
+        return hashes
 
     def remove_scenario(self, name: str) -> None:
-        """Drop a scenario and rebuild the cluster index over the
-        remaining set (removal breaks append-only stream order, so the
-        bucket table is re-accumulated from the survivors' metrics via a
-        partial column load — still no comm-pool parse, no re-synthesis)."""
+        """Drop a scenario in O(remaining events): delete its shard
+        entry, npz, and bucket sidecar, and drop its partial-sum table
+        from the cluster index — the survivors' buckets renumber and
+        their partials refold (in manifest order) at the next derive.  No
+        metrics reload, no full rebuild; post-removal clustering is
+        bit-identical to a from-scratch index over the survivors."""
         entry = self._entry(name)
-        self.manifest["scenarios"].remove(entry)
+        self._remove_entry(entry)
         self._stores.pop(name, None)
         self.scenario_path(name).unlink(missing_ok=True)
-        self.index = ClusterIndex.rebuild(
-            self.rel_tol,
-            [(n, self._metrics_of(n)) for n in self.names])
-        self._persist()
+        self._sidecar_path(name).unlink(missing_ok=True)
+        self.index.remove(name)
+        self._finish_mutation()
 
     def _metrics_of(self, name: str) -> np.ndarray:
         cached = self._stores.get(name)
@@ -571,27 +1078,65 @@ class CorpusStore:
                                            dict[int, np.ndarray]]:
         """Per-scenario cluster ids (aligned to each scenario's metrics
         rows) + the joint cluster representatives — bit-identical to
-        ``cluster_vectors`` over the manifest-order concatenation."""
-        ids = {n: self.index.assignments(n) for n in self.names}
-        return ids, self.index.derive()[1]
+        :func:`repro.core.events.cluster_corpus` over the manifest-order
+        scenario metrics."""
+        ids, reps = self.index.derive()
+        return dict(ids), reps
 
     # -- persistence -----------------------------------------------------------
 
     def _write_manifest(self) -> None:
-        tmp = self.root / (_MANIFEST + ".tmp")
-        tmp.write_text(json.dumps(self.manifest, indent=1, sort_keys=True))
-        tmp.replace(self.root / _MANIFEST)
+        _atomic_json_write(self.root / _MANIFEST, self.manifest)
 
-    def _persist(self) -> None:
-        self._write_manifest()
-        self.index.save(self.root / _INDEX, self.names)
+    def _finish_mutation(self) -> None:
+        """Sync the index with the manifest view and re-pin canonical
+        order.  The locked shard re-read inside ``_append_entry`` makes
+        concurrent appenders' commits visible to this handle, so fold in
+        their sidecar tables (a scenario's sidecar is always written
+        *before* its shard entry commits) and drop tables for scenarios
+        removed elsewhere.  The merged index cache write is atomic but
+        last-writer-wins across processes — harmless, because open-time
+        validation refreshes any stale cache from the sidecars."""
+        names = self.names
+        current = set(names)
+        for n in list(self.index.tables):
+            if n not in current:
+                self.index.remove(n)
+        for n in names:
+            if n in self.index.tables:
+                continue
+            sb: ScenarioBuckets | None = None
+            spath = self._sidecar_path(n)
+            if spath.exists():
+                try:
+                    sb = ScenarioBuckets.load(spath,
+                                              expected_rel_tol=self.rel_tol)
+                except ToleranceMismatchError:
+                    raise
+                except Exception:
+                    sb = None
+            if sb is None:
+                sb = ScenarioBuckets.from_metrics(self._metrics_of(n),
+                                                  self.rel_tol)
+                sb.save(spath)
+            self.index.ingest_table(n, sb)
+        self.index.set_order(names)
+        self.index.save(self.root / _INDEX)
 
     def save_fits(self, table_fingerprint: str | None = None) -> None:
         """Persist the fit cache (called by incremental synthesis after a
-        solve) and record the corpus table version in the manifest."""
+        solve) and record the corpus table version in the manifest header
+        (under the header lock — concurrent synthesizers last-write-wins
+        on this observability field, never on scenario entries)."""
         if table_fingerprint is not None:
-            self.manifest["table_fingerprint"] = table_fingerprint
-            self._write_manifest()
+            with _file_lock(self._lock_path("manifest")):
+                mpath = self.root / _MANIFEST
+                if mpath.exists():     # pick up concurrent header edits
+                    on_disk = json.loads(mpath.read_text())
+                    if on_disk.get("version") == _MANIFEST_VERSION:
+                        self.manifest = on_disk
+                self.manifest["table_fingerprint"] = table_fingerprint
+                self._write_manifest()
         self.fits.save(self.root / _FITS)
 
     def save_grammars(self) -> None:

@@ -271,6 +271,109 @@ def cluster_vectors(metrics: np.ndarray, rel_tol: float = 0.05,
     return remap[bucket_ids], reps
 
 
+def scenario_bucket_table(metrics: np.ndarray, rel_tol: float = 0.05,
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                     np.ndarray]:
+    """Pass-1 bucket table of ONE scenario: ``(keys, psums, counts,
+    local_ids)``.
+
+    ``keys`` are the scenario's distinct quantization keys in
+    first-appearance order, ``psums[b]`` the float64 sum of bucket ``b``'s
+    rows accumulated *in the scenario's own event order* (``np.add.at``),
+    ``counts[b]`` its row count, and ``local_ids`` the per-row bucket id.
+
+    The partial sums are label-invariant — each bucket's value is the
+    in-order sum of its own rows, regardless of how buckets are numbered —
+    which is what lets :func:`combine_bucket_tables` renumber and refold
+    them under corpus append *and* removal without re-touching event data.
+    """
+    metrics = np.asarray(metrics, dtype=np.float64)
+    if metrics.ndim != 2 or metrics.shape[1] != N_METRICS:
+        raise ValueError(f"expected (n, {N_METRICS}) metrics array")
+    if metrics.shape[0] == 0:
+        return (np.zeros((0, N_METRICS), dtype=np.int64),
+                np.zeros((0, N_METRICS), dtype=np.float64),
+                np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
+    local_ids, uniq = bucketize_keys(quantize_metrics(metrics, rel_tol))
+    psums = np.zeros((len(uniq), N_METRICS), dtype=np.float64)
+    np.add.at(psums, local_ids, metrics)
+    counts = np.bincount(local_ids, minlength=len(uniq)).astype(np.int64)
+    return uniq, psums, counts, local_ids
+
+
+def combine_bucket_tables(tables: Sequence[tuple], rel_tol: float = 0.05,
+                          return_state: bool = False):
+    """Fold per-scenario bucket tables (list order = manifest order) into
+    the joint corpus clustering: ``(per-scenario cluster_ids, reps)``.
+
+    Global buckets are numbered by first appearance across the tables —
+    identical to the numbering ``bucketize_keys`` would assign over the
+    concatenated event stream, because each scenario's local buckets are
+    already in first-appearance order.  Each global bucket's float64 sum
+    is the **ordered sum of per-scenario partial sums**: for a bucket
+    touched by scenarios ``s1 < s2 < …`` the total is
+    ``(psum_s1 + psum_s2) + …``, folded left-to-right in list order.
+
+    This is *the* corpus clustering semantics (see
+    :class:`repro.core.corpus_store.ClusterIndex`): a pure function of the
+    ordered scenario list, exactly incremental under append (a new table
+    folds in last), and sublinear under removal (drop a table, renumber,
+    refold — no event data touched).  For a single table it is
+    bit-identical to :func:`cluster_vectors`; for several it differs from
+    event-order accumulation over the concatenation only in the float
+    association at scenario boundaries (``(Σa + b1) + b2`` vs
+    ``Σa + (b1 + b2)``) — the documented invariant change that bought
+    O(remaining) removal.
+
+    ``return_state=True`` additionally returns the derivation internals
+    ``{"by_key", "remap", "reps", "n_buckets"}`` (key bytes → global
+    bucket id, bucket → cluster remap) so the corpus index can answer
+    nearest-cluster lookups without re-deriving.
+    """
+    by_key: dict[bytes, int] = {}
+    gids_per: list[np.ndarray] = []
+    for keys, _psums, _counts, _ids in tables:
+        g = np.empty(len(keys), dtype=np.int64)
+        for j, k in enumerate(np.ascontiguousarray(keys, dtype=np.int64)):
+            kb = k.tobytes()
+            gid = by_key.get(kb)
+            if gid is None:
+                gid = len(by_key)
+                by_key[kb] = gid
+            g[j] = gid
+        gids_per.append(g)
+    n_buckets = len(by_key)
+    sums = np.zeros((n_buckets, N_METRICS), dtype=np.float64)
+    counts = np.zeros(n_buckets, dtype=np.int64)
+    for (_keys, psums, pcounts, _ids), g in zip(tables, gids_per):
+        # one partial per (scenario, bucket): fancy += folds this
+        # scenario's partials onto the running sums in list order
+        sums[g] += psums
+        counts[g] += pcounts
+    if n_buckets == 0:
+        remap, reps = np.zeros(0, dtype=np.int64), {}
+    else:
+        remap, reps = merge_buckets(sums, counts, rel_tol)
+    ids_list = [remap[g[ids]] if len(ids) else np.zeros(0, dtype=np.int64)
+                for (_k, _p, _c, ids), g in zip(tables, gids_per)]
+    if return_state:
+        return ids_list, reps, {"by_key": by_key, "remap": remap,
+                                "reps": reps, "n_buckets": n_buckets}
+    return ids_list, reps
+
+
+def cluster_corpus(metrics_list: Sequence[np.ndarray],
+                   rel_tol: float = 0.05,
+                   ) -> tuple[list[np.ndarray], dict[int, np.ndarray]]:
+    """Joint clustering of several scenarios' metric arrays, in order —
+    the batch-path twin of the streaming
+    :class:`repro.core.corpus_store.ClusterIndex` (both build on
+    :func:`scenario_bucket_table` + :func:`combine_bucket_tables`, so the
+    two stay bit-identical by construction)."""
+    tables = [scenario_bucket_table(m, rel_tol) for m in metrics_list]
+    return combine_bucket_tables(tables, rel_tol)
+
+
 def cluster_compute_events(
     events: Iterable[ComputeEvent], rel_tol: float = 0.05
 ) -> tuple[list[ComputeEvent], dict[int, np.ndarray]]:

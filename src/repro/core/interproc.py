@@ -177,6 +177,20 @@ def corpus_terminal_table(programs: Sequence[MergedProgram],
     return merge_terminal_tables([p.table for p in programs])
 
 
+def compute_gid_index(table: TerminalTable) -> dict[int, int]:
+    """``{joint cluster id -> corpus gid}`` over a corpus terminal
+    table's compute terminals.
+
+    The inverse lookup the serve tier needs: a query trace's metric rows
+    map onto joint cluster ids (``ClusterIndex.match_clusters``), and
+    this index maps those onto the corpus-gid-keyed fit coefficients
+    (``CorpusResult.fits``) — pure dict work, no clustering or fitting.
+    Cluster ids are unique across a corpus table's compute terminals by
+    construction (they key the union, ``X|<cid>``)."""
+    return {ev.cluster_id: gid for gid, ev in enumerate(table.events)
+            if not is_comm(ev) and ev.cluster_id >= 0}
+
+
 def table_fingerprint(table: TerminalTable) -> str:
     """Content version of a terminal table: sha256 over the ordered
     terminal keys.

@@ -48,7 +48,6 @@ import math
 
 import numpy as np
 
-from repro.core import blocks
 from repro.core.events import (CommEvent, ComputeEvent, N_METRICS,
                                cluster_vectors)
 
@@ -117,6 +116,9 @@ def _desc_cost(desc) -> tuple[tuple | None, float]:
     """
     kind = desc[0]
     if kind == "compute":
+        # lazy: blocks pulls in jax, and calibration (the only noise entry
+        # point the corpus-ingest worker pool touches) never lowers costs
+        from repro.core import blocks
         _, x, unroll = desc
         vec = blocks.combo_cost(np.asarray(x, dtype=np.float64), int(unroll))
         return tuple(float(v) for v in vec), 0.0

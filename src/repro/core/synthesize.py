@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.core import noise as noise_mod
 from repro.core import proxy_search
-from repro.core.events import Event, cluster_vectors, is_comm
+from repro.core.events import Event, cluster_corpus, is_comm
 from repro.core.grammar import Grammar, TerminalTable
 from repro.core.interproc import (
     MergedProgram, corpus_terminal_table, table_fingerprint,
@@ -250,6 +250,11 @@ class CorpusResult:
     table: TerminalTable               # corpus terminal table (shared)
     reps: dict[int, np.ndarray]        # joint cluster representatives
     stats: dict
+    #: corpus-gid-keyed block-combination fits (one per compute terminal
+    #: of ``table``) — the serve tier featurizes scenarios over these
+    #: coefficients without touching per-scenario modules
+    fits: dict[int, proxy_search.FitResult] = dataclasses.field(
+        default_factory=dict)
 
     def report(self, sample_ranks: int | None = None) -> dict:
         """Aggregate fidelity/compression report: per-scenario δ̄ and
@@ -371,8 +376,9 @@ def synthesize_corpus(scenarios=None, *,
 
     ``store=`` accepts a :class:`repro.core.corpus_store.CorpusStore`
     instead: synthesis then runs **incrementally** over everything the
-    store holds, in manifest (ingestion) order — cluster assignments come
-    from the store's persisted :class:`~repro.core.corpus_store.
+    store holds, in canonical manifest order (shard-major, content-hash
+    sorted — a pure function of the scenario set) — cluster assignments
+    come from the store's persisted :class:`~repro.core.corpus_store.
     ClusterIndex`, unchanged scenarios reuse their memoized grammar front
     half, and only compute terminals without a content-addressed cached
     fit re-solve (still in one ``fit_batch`` dispatch).  Per-scenario δ̄
@@ -383,8 +389,10 @@ def synthesize_corpus(scenarios=None, *,
     Versus a per-scenario :func:`synthesize` loop:
 
     * compute events cluster **jointly** across scenarios
-      (:func:`cluster_vectors` over the concatenated metrics arrays), so a
-      compute behaviour shared by two workloads is one terminal, not two;
+      (:func:`cluster_corpus`: one pass-1 bucket table per scenario,
+      partial sums folded in list order — the same semantics the
+      streaming store derives incrementally), so a compute behaviour
+      shared by two workloads is one terminal, not two;
     * the per-scenario merged tables union into one corpus terminal table
       (:func:`corpus_terminal_table`), and every block-combination fit
       solves in **one** batched-PGD device call;
@@ -416,18 +424,19 @@ def synthesize_corpus(scenarios=None, *,
             stores[sname] = st
     names = list(stores)
 
-    # joint clustering across every scenario's compute events
-    sizes = [stores[n].n_compute_events for n in names]
-    offsets = np.cumsum([0] + sizes)
-    all_metrics = (np.concatenate([stores[n].metrics for n in names])
-                   if sum(sizes) else np.zeros((0, 6)))
-    cids_all, reps = cluster_vectors(all_metrics, rel_tol)
+    # joint clustering across every scenario's compute events: the
+    # per-scenario partial-sums fold (one pass-1 bucket table per
+    # scenario, folded in list order) — the same semantics the streaming
+    # CorpusStore's ClusterIndex derives incrementally, which is what
+    # keeps batch and incremental synthesis bit-identical
+    cids_list, reps = cluster_corpus([stores[n].metrics for n in names],
+                                     rel_tol)
 
     per: dict[str, tuple] = {}
     mergeds: list[MergedProgram] = []
     noise_models: dict[str, noise_mod.NoiseModel] = {}
     for i, sname in enumerate(names):
-        cids = cids_all[offsets[i]:offsets[i + 1]]
+        cids = cids_list[i]
         grammars, merged, rank_ids, _ = compress_store(
             stores[sname], rel_tol, threshold, cluster_ids=cids, reps=reps)
         per[sname] = (grammars, merged, rank_ids)
@@ -448,7 +457,8 @@ def synthesize_corpus(scenarios=None, *,
                                           gid_maps, count_scale, out_dir,
                                           noise_models=noise_models)
     stats = _corpus_stats(names, table, corpus_fits, gid_maps, results)
-    return CorpusResult(results=results, table=table, reps=reps, stats=stats)
+    return CorpusResult(results=results, table=table, reps=reps, stats=stats,
+                        fits=corpus_fits)
 
 
 # ---------------------------------------------------------------------------
@@ -582,4 +592,5 @@ def _synthesize_corpus_incremental(cstore, threshold: float,
         n_grammar_cache_misses=cstore.grammars.misses - g_miss0,
         grammar_ms=round(front_profile.get("grammar_ms", 0.0), 3),
     )
-    return CorpusResult(results=results, table=table, reps=reps, stats=stats)
+    return CorpusResult(results=results, table=table, reps=reps, stats=stats,
+                        fits=corpus_fits)

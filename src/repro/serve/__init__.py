@@ -1,1 +1,2 @@
 from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.proxy_service import ProxyService, QueryResult  # noqa: F401

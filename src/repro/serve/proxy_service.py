@@ -1,0 +1,198 @@
+"""Proxy-serving query tier: "give me a proxy shaped like X" without
+re-synthesis.
+
+The fleet-scale payoff of the corpus store (ROADMAP "Fleet-scale
+corpus"): profiling feeds a trace in, placement/procurement asks which
+known workload it resembles and what it would cost on each chip — the
+automated profiling → prediction loop of Synapse (PAPERS.md).  The
+serving discipline mirrors :class:`repro.serve.engine.ServeEngine`: pay
+the compile/synthesis cost once up front, then answer every request from
+warm state at fixed cost.
+
+:class:`ProxyService` wraps a :class:`~repro.core.corpus_store.
+CorpusStore`.  Construction runs **one** incremental corpus synthesis
+(on a warm store: fully cache-resolved) and precomputes a feature
+embedding per scenario.  A query then:
+
+1. maps the query trace's metric rows onto the corpus clusters with the
+   index's exact-key/nearest-rep matcher (pure NumPy, no re-clustering);
+2. featurizes the trace over the corpus terminal-table **fit
+   coefficients** (per-cluster block-combination loop counts, summed
+   over the trace's rows) plus its **comm-kind histogram** (payload ×
+   occurrence mass per collective kind);
+3. returns the nearest scenario's *cached pre-assembled proxy module*
+   and a memoized cross-chip :func:`~repro.core.portability.
+   predict_profile` estimate.
+
+No Sequitur, no fit dispatch, no codegen on the hot path — the
+``stats`` counters pin this (``n_warm_synthesis`` stays 1 however many
+queries run), and tests assert it by poisoning the cold-path entry
+points after warm-up.
+
+Featurizing over fit coefficients rather than raw metrics deliberately
+measures distance in *proxy space*: two traces that synthesize to the
+same block combinations are the same workload to the serving tier, even
+if their raw metric magnitudes differ.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.events import COMM_KINDS
+from repro.core.interproc import compute_gid_index
+from repro.core.portability import (
+    CHIPS, REFERENCE_CHIP, ProfilePrediction, predict_profile,
+)
+from repro.core.trace_ir import TraceStore
+
+_KIND_INDEX = {k: i for i, k in enumerate(COMM_KINDS)}
+_N_COEF = 11                       # block-combination loop counts (x_1..x_11)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """Answer to one nearest-scenario query."""
+
+    name: str                      # nearest corpus scenario
+    distance: float                # embedding distance to it
+    distances: dict[str, float]    # all scenarios, for inspection
+    module: object                 # its cached pre-assembled proxy module
+    profile: ProfilePrediction     # cross-chip roofline estimate
+    matched_frac: float            # fraction of rows exact-key matched
+
+    @property
+    def module_path(self) -> str:
+        """The generated proxy source on disk — reloadable anywhere via
+        :func:`repro.core.replay.load_saved_module`."""
+        return self.module.__proxy_path__
+
+
+def _unit_log(v: np.ndarray) -> np.ndarray:
+    """log1p then L2-normalize: comparable across trace lengths and
+    robust to the metric magnitude spread."""
+    v = np.log1p(np.maximum(np.asarray(v, dtype=np.float64), 0.0))
+    n = float(np.linalg.norm(v))
+    return v / n if n > 0 else v
+
+
+class ProxyService:
+    """Warm-cache nearest-scenario serving over a corpus store.
+
+    ::
+
+        svc = ProxyService(cstore)                 # one warm synthesis
+        ans = svc.query(trace_store, chip="v5p")   # hot path: pure NumPy
+        ans.module.__proxy_path__                  # pre-assembled proxy
+        ans.profile.step_time                      # cross-chip estimate
+
+    ``chip`` is the default target for profile predictions; per-query
+    ``chip=`` overrides.  ``count_scale``/``threshold``/``out_dir``
+    forward to the warm :func:`~repro.core.synthesize.synthesize_corpus`
+    call (``out_dir`` makes the cached modules land somewhere durable).
+    """
+
+    def __init__(self, cstore, *, chip: str = REFERENCE_CHIP,
+                 threshold: float = 0.5, count_scale: float = 1.0,
+                 out_dir=None):
+        if not cstore.names:
+            raise ValueError("cannot serve an empty corpus")
+        if chip not in CHIPS:
+            raise ValueError(f"unknown chip {chip!r} (have {sorted(CHIPS)})")
+        from repro.core.synthesize import synthesize_corpus   # lazy: jax
+        self._cstore = cstore
+        self.chip = chip
+        self.stats = {
+            "n_warm_synthesis": 0,
+            "n_queries": 0,
+            "n_module_cache_hits": 0,
+            "n_profile_cache_hits": 0,
+            "n_profile_cache_misses": 0,
+            "n_matched_rows": 0,
+            "n_fallback_rows": 0,
+        }
+        # the single cold-path synthesis (on a warm store this resolves
+        # from the persisted grammar/fit caches and the result memo)
+        self.corpus = synthesize_corpus(store=cstore, threshold=threshold,
+                                        count_scale=count_scale,
+                                        out_dir=out_dir)
+        self.stats["n_warm_synthesis"] += 1
+
+        # cluster id -> fit-coefficient row, via the corpus terminal table
+        gid_of = compute_gid_index(self.corpus.table)
+        n_cids = (max(gid_of) + 1) if gid_of else 0
+        self._coef = np.zeros((n_cids, _N_COEF))
+        for cid, gid in gid_of.items():
+            fr = self.corpus.fits.get(gid)
+            if fr is not None:
+                self._coef[cid] = np.asarray(fr.x, dtype=np.float64)
+
+        ids_by_name, _ = cstore.cluster_assignments()
+        self._embeddings = {
+            name: self._featurize(cstore.load_scenario(name),
+                                  ids_by_name[name])
+            for name in cstore.names
+        }
+        self._profiles: dict[tuple[str, str], ProfilePrediction] = {}
+
+    # -- featurization (pure NumPy) --------------------------------------------
+
+    def _featurize(self, store: TraceStore, cids: np.ndarray) -> np.ndarray:
+        """Embed one trace: summed fit-coefficient mass over its compute
+        rows ⊕ comm-kind payload·occurrence histogram, each log-scaled
+        and unit-normalized."""
+        comp = np.zeros(_N_COEF)
+        if len(cids) and len(self._coef):
+            valid = cids[(cids >= 0) & (cids < len(self._coef))]
+            comp = self._coef[valid].sum(axis=0)
+        comm = np.zeros(len(COMM_KINDS))
+        occ = store.comm_occurrence_counts()
+        for c, ev in enumerate(store.comm_pool):
+            comm[_KIND_INDEX[ev.kind]] += float(occ[c]) * ev.payload_bytes
+        return np.concatenate([_unit_log(comp), _unit_log(comm)])
+
+    def embedding(self, name: str) -> np.ndarray:
+        """The precomputed embedding of a corpus scenario."""
+        return self._embeddings[name]
+
+    # -- the hot path ----------------------------------------------------------
+
+    def query(self, store: TraceStore, chip: str | None = None,
+              ) -> QueryResult:
+        """Nearest corpus scenario for a query trace — index matching +
+        embedding distance + cached module/profile lookup; no synthesis
+        stage runs."""
+        self.stats["n_queries"] += 1
+        cids, matched = self._cstore.index.match_clusters(store.metrics)
+        self.stats["n_matched_rows"] += int(matched.sum())
+        self.stats["n_fallback_rows"] += int((~matched).sum())
+        q = self._featurize(store, cids)
+        distances = {n: float(np.linalg.norm(q - e))
+                     for n, e in self._embeddings.items()}
+        name = min(distances, key=distances.get)
+        module = self.corpus.results[name].proxy.module   # pre-assembled
+        self.stats["n_module_cache_hits"] += 1
+        profile = self.predict_profile(name, chip)
+        return QueryResult(
+            name=name, distance=distances[name], distances=distances,
+            module=module, profile=profile,
+            matched_frac=(float(matched.mean()) if len(matched) else 1.0))
+
+    def predict_profile(self, name: str, chip: str | None = None,
+                        ) -> ProfilePrediction:
+        """Memoized cross-chip roofline estimate for a corpus scenario's
+        proxy module (the prediction is a pure function of the cached
+        module, so one computation per (scenario, chip) serves every
+        query)."""
+        chip = chip or self.chip
+        key = (name, chip)
+        hit = self._profiles.get(key)
+        if hit is None:
+            self.stats["n_profile_cache_misses"] += 1
+            hit = predict_profile(self.corpus.results[name].proxy.module,
+                                  chip)
+            self._profiles[key] = hit
+        else:
+            self.stats["n_profile_cache_hits"] += 1
+        return hit

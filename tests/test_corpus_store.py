@@ -9,7 +9,7 @@ import pytest
 
 from repro.core import proxy_search
 from repro.core.corpus_store import ClusterIndex, CorpusStore, FitCache
-from repro.core.events import CommEvent, ComputeEvent, cluster_vectors
+from repro.core.events import CommEvent, ComputeEvent, cluster_corpus
 from repro.core.synthesize import synthesize_corpus
 from repro.core.trace_ir import TraceStore
 
@@ -41,15 +41,18 @@ def test_add_iterate_reload(tmp_path):
     stores = _zoo3()
     cs = CorpusStore(tmp_path / "corpus")
     hashes = {n: cs.add_scenario(n, st) for n, st in stores.items()}
-    assert cs.names == ["a", "b", "c"]
+    # names come back in canonical manifest order (shard-major,
+    # content-hash sorted) — a pure function of the scenario set, not of
+    # ingestion order
+    assert sorted(cs.names) == ["a", "b", "c"]
     assert len(cs) == 3 and "b" in cs and "zz" not in cs
     for n, st in cs:
         orig = stores[n]
         assert np.array_equal(st.tokens, orig.tokens)
         assert st.content_hash() == hashes[n] == cs.content_hash(n)
-    # a second handle reads everything back from disk
+    # a second handle reads everything back from disk, same order
     cs2 = CorpusStore(tmp_path / "corpus")
-    assert cs2.names == ["a", "b", "c"]
+    assert cs2.names == cs.names
     for n in cs2.names:
         assert cs2.load_scenario(n).content_hash() == hashes[n]
         assert cs2.scenario_path(n).exists()
@@ -59,13 +62,57 @@ def test_manifest_layout(tmp_path):
     cs = CorpusStore(tmp_path / "c")
     cs.add_scenario("a", _store([_V1]))
     manifest = json.loads((tmp_path / "c" / "manifest.json").read_text())
-    assert manifest["version"] == 1
+    assert manifest["version"] == 2
     assert manifest["rel_tol"] == 0.05
-    (entry,) = manifest["scenarios"]
+    assert manifest["n_shards"] == 16
+    # scenario entries live in per-shard manifests keyed by content hash
+    (shard_file,) = (tmp_path / "c" / "shards").glob("shard-*.json")
+    shard = json.loads(shard_file.read_text())
+    assert shard["version"] == 2
+    (entry,) = shard["entries"]
     assert entry["name"] == "a"
     assert entry["file"] == "scenarios/a.npz"
     assert set(entry) >= {"content_hash", "n_ranks", "n_events",
                           "n_compute_events"}
+    # the shard is the one the entry's content hash selects
+    i = int(entry["content_hash"][:8], 16) % 16
+    assert shard_file.name == f"shard-{i:02d}.json"
+
+
+def test_v1_manifest_migrates_on_open(tmp_path):
+    """A v1 store (flat scenario list, pre-partial-sums index) reshards
+    and rebuilds its index once on open; clustering matches a fresh v2
+    store over the same scenarios."""
+    stores = _zoo3()
+    root = tmp_path / "c"
+    cs = CorpusStore(root)
+    for n, st in stores.items():
+        cs.add_scenario(n, st)
+    ids0, reps0 = cs.cluster_assignments()
+
+    # rewrite the store as a v1 layout: flat manifest, no shards/sidecars
+    entries = [dict(e) for e in cs._iter_entries()]
+    import shutil
+    shutil.rmtree(root / "shards")
+    (root / "cluster_index.npz").unlink()
+    for n in stores:
+        (root / "scenarios" / f"{n}.buckets.npz").unlink()
+    (root / "manifest.json").write_text(json.dumps(
+        {"version": 1, "rel_tol": 0.05, "scenarios": entries,
+         "table_fingerprint": None}))
+
+    cs2 = CorpusStore(root)
+    manifest = json.loads((root / "manifest.json").read_text())
+    assert manifest["version"] == 2
+    assert cs2.names == cs.names
+    ids1, reps1 = cs2.cluster_assignments()
+    for n in cs.names:
+        np.testing.assert_array_equal(ids0[n], ids1[n])
+    for cid in reps0:
+        np.testing.assert_array_equal(reps0[cid], reps1[cid])
+    # sidecars healed
+    for n in stores:
+        assert (root / "scenarios" / f"{n}.buckets.npz").exists()
 
 
 def test_content_hash_sensitivity():
@@ -107,21 +154,18 @@ def test_rel_tol_pinned_by_manifest(tmp_path):
 
 
 def test_index_matches_oneshot_clustering(tmp_path):
-    """Per-scenario assignments + reps == cluster_vectors over the
-    manifest-order concatenation, bit for bit."""
+    """Per-scenario assignments + reps == cluster_corpus over the
+    manifest-order scenario metrics, bit for bit."""
     stores = _zoo3()
     cs = CorpusStore(tmp_path / "c")
     for n, st in stores.items():
         cs.add_scenario(n, st)
     ids, reps = cs.cluster_assignments()
 
-    all_metrics = np.concatenate([stores[n].metrics for n in cs.names])
-    want_ids, want_reps = cluster_vectors(all_metrics, cs.rel_tol)
-    off = 0
-    for n in cs.names:
-        k = stores[n].n_compute_events
-        np.testing.assert_array_equal(ids[n], want_ids[off:off + k])
-        off += k
+    want_ids, want_reps = cluster_corpus(
+        [stores[n].metrics for n in cs.names], cs.rel_tol)
+    for i, n in enumerate(cs.names):
+        np.testing.assert_array_equal(ids[n], want_ids[i])
     assert set(reps) == set(want_reps)
     for cid in reps:
         np.testing.assert_array_equal(reps[cid], want_reps[cid])
@@ -169,21 +213,29 @@ def test_index_empty_scenario():
     assert idx.n_clusters == 0
 
 
-def test_remove_scenario_rebuilds(tmp_path):
+def test_remove_scenario_o_remaining(tmp_path):
+    """Removal drops the scenario's partial-sum table and refolds the
+    survivors — no full rebuild (the index never re-touches metrics) and
+    bit-identical to one-shot clustering over the survivors."""
     stores = _zoo3()
     cs = CorpusStore(tmp_path / "c")
     for n, st in stores.items():
         cs.add_scenario(n, st)
     cs.remove_scenario("b")
-    assert cs.names == ["a", "c"] and not cs.scenario_path("b").exists()
-    # index now equals one-shot clustering over the survivors
-    all_metrics = np.concatenate([stores[n].metrics for n in ("a", "c")])
-    want_ids, _ = cluster_vectors(all_metrics, cs.rel_tol)
+    assert set(cs.names) == {"a", "c"}
+    assert not cs.scenario_path("b").exists()
+    assert not cs._sidecar_path("b").exists()
+    # index now equals one-shot clustering over the survivors in order
+    want_ids, _ = cluster_corpus([stores[n].metrics for n in cs.names],
+                                 cs.rel_tol)
     ids, _ = cs.cluster_assignments()
-    np.testing.assert_array_equal(
-        np.concatenate([ids["a"], ids["c"]]), want_ids)
+    for i, n in enumerate(cs.names):
+        np.testing.assert_array_equal(ids[n], want_ids[i])
     with pytest.raises(KeyError):
         cs.content_hash("b")
+    # O(remaining): the surviving tables are the SAME objects — removal
+    # renumbered and refolded partials, it did not rebuild from metrics
+    assert set(cs.index.tables) == {"a", "c"}
 
 
 # ---------------------------------------------------------------------------
@@ -212,10 +264,14 @@ def test_incremental_append_bit_identical(tmp_path):
     synthesize_corpus(store=cs)                   # warm caches over {a, b}
     cs.add_scenario("c", stores["c"])
     corp_inc = synthesize_corpus(store=cs)
-    corp_bat = synthesize_corpus([(n, stores[n]) for n in ("a", "b", "c")])
-    _assert_same_corpus(corp_inc, corp_bat, ("a", "b", "c"))
+    corp_bat = synthesize_corpus([(n, stores[n]) for n in cs.names])
+    _assert_same_corpus(corp_inc, corp_bat, cs.names)
     assert corp_inc.stats["incremental"]
-    assert corp_inc.stats["n_front_reused"] >= 2
+    # unchanged scenarios skip Sequitur: either via the front-half memo
+    # (joint cluster ids unchanged) or, when the append's canonical
+    # position relabels clusters, via the label-invariant grammar cache
+    assert (corp_inc.stats["n_front_reused"]
+            + corp_inc.stats["n_grammar_cache_hits"]) >= 2
 
 
 def test_incremental_single_dispatch_for_misses(tmp_path, monkeypatch):
@@ -264,8 +320,8 @@ def test_incremental_after_remove_bit_identical(tmp_path):
     synthesize_corpus(store=cs)
     cs.remove_scenario("a")
     corp_inc = synthesize_corpus(store=cs)
-    corp_bat = synthesize_corpus([(n, stores[n]) for n in ("b", "c")])
-    _assert_same_corpus(corp_inc, corp_bat, ("b", "c"))
+    corp_bat = synthesize_corpus([(n, stores[n]) for n in cs.names])
+    _assert_same_corpus(corp_inc, corp_bat, cs.names)
 
 
 def test_store_kwarg_validation(tmp_path):
@@ -292,9 +348,8 @@ def test_duplicate_content_scenarios_assemble_separately(tmp_path):
         corp.results["right"].proxy.module.__name__
     assert (out / "left").is_dir() and (out / "right").is_dir()
     corp_bat = synthesize_corpus(
-        [("left", cs.load_scenario("left")),
-         ("right", cs.load_scenario("right"))])
-    _assert_same_corpus(corp, corp_bat, ("left", "right"))
+        [(n, cs.load_scenario(n)) for n in cs.names])
+    _assert_same_corpus(corp, corp_bat, cs.names)
 
 
 def test_index_self_heals_when_missing_or_corrupt(tmp_path):
@@ -335,7 +390,7 @@ def test_zoo_ingest_one_at_a_time(tmp_path):
     added = ingest_scenarios(cs, ["transformer-dp", "ssm-decode"],
                              n_ranks=4, steps=2)
     assert added == ["transformer-dp", "ssm-decode"]
-    assert cs.names == ["transformer-dp", "ssm-decode"]
+    assert set(cs.names) == {"transformer-dp", "ssm-decode"}
     assert ingest_scenarios(cs, ["transformer-dp", "ssm-decode"],
                             n_ranks=4, steps=2) == []
     corp = synthesize_corpus(store=cs)
@@ -401,8 +456,8 @@ def test_grammar_cache_persists_and_hits_on_reopen(tmp_path):
     # streams hit the cache; only c's novel streams missed
     assert corp2.stats["n_front_reused"] == 0
     assert corp2.stats["n_grammar_cache_hits"] >= 2
-    corp_bat = synthesize_corpus([(n, stores[n]) for n in ("a", "b", "c")])
-    _assert_same_corpus(corp2, corp_bat, ("a", "b", "c"))
+    corp_bat = synthesize_corpus([(n, stores[n]) for n in cs2.names])
+    _assert_same_corpus(corp2, corp_bat, cs2.names)
 
 
 def test_grammar_cache_warm_append_all_unchanged_hit(tmp_path):
@@ -452,3 +507,177 @@ def test_grammar_cache_empty_save_removes_file(tmp_path):
     assert p.exists() and not cache.dirty
     GrammarCache().save(p)
     assert not p.exists()
+
+
+# ---------------------------------------------------------------------------
+# loud tolerance validation (never silently re-cluster under a mismatch)
+# ---------------------------------------------------------------------------
+
+
+def test_index_load_rejects_tolerance_mismatch(tmp_path):
+    from repro.core.corpus_store import ToleranceMismatchError
+    idx = ClusterIndex.empty(0.1)
+    idx.ingest("a", np.asarray([_V1]))
+    p = tmp_path / "idx.npz"
+    idx.save(p)
+    back = ClusterIndex.load(p, expected_rel_tol=0.1)   # matching OK
+    assert back.rel_tol == 0.1
+    with pytest.raises(ToleranceMismatchError, match="rel_tol"):
+        ClusterIndex.load(p, expected_rel_tol=0.05)
+
+
+def test_index_rebuild_rejects_tolerance_mismatch():
+    from repro.core.corpus_store import ToleranceMismatchError
+    with pytest.raises(ToleranceMismatchError, match="rel_tol"):
+        ClusterIndex.rebuild(0.1, [("a", np.asarray([_V1]))],
+                             expected_rel_tol=0.05)
+    idx = ClusterIndex.rebuild(0.05, [("a", np.asarray([_V1]))],
+                               expected_rel_tol=0.05)
+    assert idx.n_clusters == 1
+
+
+def test_store_open_rejects_mismatched_index_loudly(tmp_path):
+    """A readable index built at a different tolerance means mixed store
+    dirs, not bit rot — the store must refuse, not silently re-cluster."""
+    from repro.core.corpus_store import ToleranceMismatchError
+    cs = CorpusStore(tmp_path / "c")
+    cs.add_scenario("a", _store([_V1]))
+    rogue = ClusterIndex.empty(0.1)
+    rogue.ingest("a", _store([_V1]).metrics)
+    rogue.save(tmp_path / "c" / "cluster_index.npz")
+    with pytest.raises(ToleranceMismatchError, match="rel_tol"):
+        CorpusStore(tmp_path / "c")
+
+
+# ---------------------------------------------------------------------------
+# concurrent appenders + crash safety
+# ---------------------------------------------------------------------------
+
+
+def _appender_proc(root, items):
+    """Child-process appender: open the store and append (name, path)
+    scenarios one at a time — racing any sibling appenders on the shard
+    manifests."""
+    cs = CorpusStore(root)
+    for name, path in items:
+        cs.add_scenario(name, TraceStore.load(path))
+
+
+def _save_zoo(stores, tmp_path):
+    return {n: (n, str(st.save(tmp_path / f"in_{n}.npz")))
+            for n, st in stores.items()}
+
+
+def test_concurrent_appenders_bit_identical(tmp_path):
+    """Two processes appending disjoint scenarios to one store: the final
+    state is bit-identical to serial ingestion of the union (in either
+    order — store state is a pure function of the scenario set)."""
+    import multiprocessing as mp
+
+    stores = _zoo3()
+    items = _save_zoo(stores, tmp_path)
+    root = tmp_path / "shared"
+    CorpusStore(root)                                   # create
+    ctx = mp.get_context("fork")
+    procs = [ctx.Process(target=_appender_proc,
+                         args=(str(root), [items["a"], items["b"]])),
+             ctx.Process(target=_appender_proc,
+                         args=(str(root), [items["c"]]))]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=120)
+        assert p.exitcode == 0
+
+    cs = CorpusStore(root)
+    serial = CorpusStore(tmp_path / "serial")
+    for n, st in stores.items():
+        serial.add_scenario(n, st)
+    assert cs.names == serial.names
+    for n in stores:
+        assert cs.content_hash(n) == serial.content_hash(n)
+    ids_c, reps_c = cs.cluster_assignments()
+    ids_s, reps_s = serial.cluster_assignments()
+    for n in stores:
+        np.testing.assert_array_equal(ids_c[n], ids_s[n])
+    assert set(reps_c) == set(reps_s)
+    for cid in reps_c:
+        np.testing.assert_array_equal(reps_c[cid], reps_s[cid])
+
+
+def _churn_proc(root, items):
+    for name, path in items:
+        cs = CorpusStore(root)
+        cs.add_scenario(name, TraceStore.load(path))
+
+
+def test_kill_mid_write_leaves_store_loadable(tmp_path):
+    """SIGKILL an appender mid-append: every manifest/shard/index write
+    is tmp-file + atomic rename, so a fresh handle always opens a
+    consistent store (possibly missing the in-flight scenario) and its
+    clustering self-heals to match the surviving manifest."""
+    import multiprocessing as mp
+    import time
+
+    base = {f"s{i}": _store([_V1, _V2] if i % 2 else [_V3, _V1],
+                            n_ranks=2 + i % 3)
+            for i in range(12)}
+    items = list(_save_zoo(base, tmp_path).values())
+    root = tmp_path / "victim"
+    CorpusStore(root)
+    ctx = mp.get_context("fork")
+    p = ctx.Process(target=_churn_proc, args=(str(root), items))
+    p.start()
+    time.sleep(0.4)
+    p.kill()                                           # SIGKILL, mid-write
+    p.join(timeout=60)
+
+    cs = CorpusStore(root)                             # must not raise
+    json.loads((root / "manifest.json").read_text())   # valid JSON
+    for sp in (root / "shards").glob("shard-*.json"):
+        json.loads(sp.read_text())
+    # every listed scenario is fully readable and consistently clustered
+    want_ids, _ = cluster_corpus(
+        [cs.load_scenario(n).metrics for n in cs.names], cs.rel_tol)
+    ids, _ = cs.cluster_assignments()
+    for i, n in enumerate(cs.names):
+        np.testing.assert_array_equal(ids[n], want_ids[i])
+
+
+def test_parallel_add_scenarios_matches_serial(tmp_path):
+    """add_scenarios with a worker pool lands bit-identical store state
+    (names, hashes, clustering) to one-at-a-time serial ingest."""
+    stores = _zoo3()
+    items = list(_save_zoo(stores, tmp_path).values())
+
+    par = CorpusStore(tmp_path / "par")
+    hashes = par.add_scenarios(items, n_workers=2)
+    ser = CorpusStore(tmp_path / "ser")
+    for n, st in stores.items():
+        ser.add_scenario(n, st)
+
+    assert par.names == ser.names
+    for n in stores:
+        assert hashes[n] == ser.content_hash(n)
+    ids_p, reps_p = par.cluster_assignments()
+    ids_s, reps_s = ser.cluster_assignments()
+    for n in stores:
+        np.testing.assert_array_equal(ids_p[n], ids_s[n])
+    for cid in reps_s:
+        np.testing.assert_array_equal(reps_p[cid], reps_s[cid])
+    # the worker pool warmed the grammar cache with the scenario-local
+    # front half
+    assert len(par.grammars) > 0
+    # and synthesis over either store is bit-identical
+    corp_p = synthesize_corpus(store=par)
+    corp_s = synthesize_corpus(store=ser)
+    _assert_same_corpus(corp_p, corp_s, par.names)
+
+
+def test_add_scenarios_rejects_duplicates(tmp_path):
+    cs = CorpusStore(tmp_path / "c")
+    cs.add_scenario("a", _store([_V1]))
+    with pytest.raises(ValueError, match="already in corpus"):
+        cs.add_scenarios([("a", _store([_V2]))])
+    with pytest.raises(ValueError, match="duplicate"):
+        cs.add_scenarios([("x", _store([_V1])), ("x", _store([_V2]))])

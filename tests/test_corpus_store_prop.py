@@ -2,10 +2,13 @@
 module per repo convention).
 
 The property: **incremental ingest in any scenario order produces the
-same cluster reps and δ̄ as one-shot clustering on the union in that
+same cluster reps and δ̄ as one-shot clustering of the scenarios in that
 order** — i.e. the :class:`~repro.core.corpus_store.ClusterIndex` is an
-exact streaming decomposition of ``cluster_vectors``, for every
-permutation of the corpus.
+exact streaming decomposition of ``cluster_corpus`` (the per-scenario
+partial-sums fold), for every permutation of the corpus.  And since the
+store's canonical manifest order is a pure function of the scenario set,
+two stores ingested in *different* orders converge to bit-identical
+state — including after removals.
 
 The deterministic half (seeded example corpus + fixed permutations)
 always runs; only the hypothesis-randomized exploration skips when
@@ -17,7 +20,7 @@ import numpy as np
 import pytest
 
 from repro.core.corpus_store import ClusterIndex, CorpusStore
-from repro.core.events import CommEvent, ComputeEvent, cluster_vectors
+from repro.core.events import CommEvent, ComputeEvent, cluster_corpus
 from repro.core.synthesize import synthesize_corpus
 from repro.core.trace_ir import TraceStore
 
@@ -35,24 +38,34 @@ needs_hypothesis = pytest.mark.skipif(
 
 def _check_order_invariance(scenario_metrics, rel_tol=0.05):
     """The property body, hypothesis-free: streaming ingest of the given
-    (name, metrics) sequence equals one-shot clustering of the
-    concatenation, bit for bit."""
+    (name, metrics) sequence equals one-shot ``cluster_corpus`` of the
+    same sequence, bit for bit — then removing the first scenario equals
+    one-shot clustering of the survivors (the O(remaining) removal is an
+    exact refold, not an approximation)."""
     idx = ClusterIndex.empty(rel_tol)
     for name, metrics in scenario_metrics:
         idx.ingest(name, metrics)
-    chunks = [m for _, m in scenario_metrics if len(m)]
-    concat = (np.concatenate(chunks) if chunks else np.zeros((0, 6)))
-    want_ids, want_reps = cluster_vectors(concat, rel_tol)
-    off = 0
-    for name, metrics in scenario_metrics:
-        k = len(metrics)
-        np.testing.assert_array_equal(idx.assignments(name),
-                                      want_ids[off:off + k])
-        off += k
+    want_ids, want_reps = cluster_corpus(
+        [m for _, m in scenario_metrics], rel_tol)
+    for i, (name, _) in enumerate(scenario_metrics):
+        np.testing.assert_array_equal(idx.assignments(name), want_ids[i])
     _, reps = idx.derive()
     assert set(reps) == set(want_reps)
     for cid in reps:
         np.testing.assert_array_equal(reps[cid], want_reps[cid])
+
+    if len(scenario_metrics) > 1:
+        gone, survivors = scenario_metrics[0], scenario_metrics[1:]
+        idx.remove(gone[0])
+        want_ids, want_reps = cluster_corpus(
+            [m for _, m in survivors], rel_tol)
+        for i, (name, _) in enumerate(survivors):
+            np.testing.assert_array_equal(idx.assignments(name),
+                                          want_ids[i])
+        _, reps = idx.derive()
+        assert set(reps) == set(want_reps)
+        for cid in reps:
+            np.testing.assert_array_equal(reps[cid], want_reps[cid])
 
 
 def _seeded_metrics(seed: int, n: int) -> np.ndarray:
@@ -87,9 +100,10 @@ def test_order_invariance_with_empty_and_singleton():
 
 
 def test_delta_order_invariance_end_to_end(tmp_path):
-    """δ̄ half of the property: for two different ingestion orders, the
-    incremental corpus δ̄ equals the from-scratch corpus δ̄ on the union
-    in that same order."""
+    """δ̄ half of the property: stores ingested in two different orders
+    converge to the same canonical state — each bit-identical to the
+    from-scratch corpus on its manifest-order scenario list, and to each
+    other."""
     v1 = (2.1e7, 3.3e5, 1.1e7, 8.2e3, 0., 0.)
     v2 = (4.4e6, 1.2e4, 2.2e6, 0., 7.0, 1.0)
     v3 = (9.9e8, 5.5e5, 3.3e7, 1.1e3, 0., 2.0)
@@ -104,17 +118,57 @@ def test_delta_order_invariance_end_to_end(tmp_path):
 
     stores = {"a": _store([v1, v2]), "b": _store([v2, v3]),
               "c": _store([v3, v1])}
+    deltas_per_order = []
     for i, order in enumerate((("a", "b", "c"), ("c", "a", "b"))):
         cs = CorpusStore(tmp_path / f"corpus{i}")
         for n in order:
             cs.add_scenario(n, stores[n])
         corp_inc = synthesize_corpus(store=cs)
-        corp_bat = synthesize_corpus([(n, stores[n]) for n in order])
-        for n in order:
+        corp_bat = synthesize_corpus([(n, stores[n]) for n in cs.names])
+        row = {}
+        for n in cs.names:
             fi = corp_inc.results[n].fidelity(sample_ranks=None)
             fb = corp_bat.results[n].fidelity(sample_ranks=None)
             assert fi.comm_lossless and fb.comm_lossless
             np.testing.assert_array_equal(fi.delta, fb.delta)
+            row[n] = fi.delta
+        deltas_per_order.append(row)
+    # ingestion order washes out entirely
+    first, second = deltas_per_order
+    assert set(first) == set(second)
+    for n in first:
+        np.testing.assert_array_equal(first[n], second[n])
+
+
+def test_removal_order_invariance_end_to_end(tmp_path):
+    """Append {a,b,c} then remove b: store state (assignments + reps) is
+    bit-identical to a store that only ever saw {a,c}."""
+    parts = {"a": _seeded_metrics(10, 8), "b": _seeded_metrics(11, 6),
+             "c": _seeded_metrics(12, 9)}
+    comm = CommEvent("psum", (4,), "float32", ("x",))
+
+    def _store(metrics):
+        tr = []
+        for v in metrics:
+            tr += [ComputeEvent(tuple(v)), comm]
+        return TraceStore.from_rank_traces([list(tr), list(tr)], {"x": 2})
+
+    churn = CorpusStore(tmp_path / "churn")
+    for n in ("a", "b", "c"):
+        churn.add_scenario(n, _store(parts[n]))
+    churn.remove_scenario("b")
+    clean = CorpusStore(tmp_path / "clean")
+    for n in ("a", "c"):
+        clean.add_scenario(n, _store(parts[n]))
+
+    assert churn.names == clean.names
+    ids_x, reps_x = churn.cluster_assignments()
+    ids_y, reps_y = clean.cluster_assignments()
+    for n in churn.names:
+        np.testing.assert_array_equal(ids_x[n], ids_y[n])
+    assert set(reps_x) == set(reps_y)
+    for cid in reps_x:
+        np.testing.assert_array_equal(reps_x[cid], reps_y[cid])
 
 
 # ---------------------------------------------------------------------------

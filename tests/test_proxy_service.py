@@ -1,0 +1,113 @@
+"""Serve-tier tests: nearest-scenario queries answer from the warm
+cache — one synthesis at construction, then a pure-NumPy hot path (no
+Sequitur, no fit dispatch, no codegen), pinned by stats counters and by
+poisoning the cold-path entry points after warm-up."""
+import numpy as np
+import pytest
+
+from repro.core import proxy_search, sequitur
+from repro.core.corpus_store import CorpusStore
+from repro.core.events import CommEvent, ComputeEvent
+from repro.core.portability import CHIPS
+from repro.core.replay import load_saved_module
+from repro.core.trace_ir import TraceStore
+from repro.serve.proxy_service import ProxyService
+
+_V1 = (2.1e7, 3.3e5, 1.1e7, 8.2e3, 0., 0.)
+_V2 = (4.4e6, 1.2e4, 2.2e6, 0., 7.0, 1.0)
+_V3 = (9.9e8, 5.5e5, 3.3e7, 1.1e3, 0., 2.0)
+
+
+def _store(vectors, kind="psum", n_ranks=4):
+    comm = CommEvent(kind, (8,), "float32", ("x",))
+    tr = []
+    for v in vectors:
+        tr += [ComputeEvent(tuple(v)), comm]
+    return TraceStore.from_rank_traces([list(tr) for _ in range(n_ranks)],
+                                       {"x": n_ranks})
+
+
+@pytest.fixture(scope="module")
+def svc(tmp_path_factory):
+    root = tmp_path_factory.mktemp("serve")
+    cs = CorpusStore(root / "corpus")
+    cs.add_scenario("heavy", _store([_V3, _V3, _V1]))
+    cs.add_scenario("light", _store([_V2, _V2], kind="all_gather"))
+    cs.add_scenario("mixed", _store([_V1, _V2, _V3]))
+    return ProxyService(cs, out_dir=root / "modules")
+
+
+def test_query_nearest_is_self(svc):
+    """A corpus scenario's own trace is its own nearest neighbor, every
+    row exact-key matched."""
+    for name, vecs, kind in (("heavy", [_V3, _V3, _V1], "psum"),
+                             ("light", [_V2, _V2], "all_gather")):
+        ans = svc.query(_store(vecs, kind=kind))
+        assert ans.name == name
+        assert ans.distance == pytest.approx(0.0, abs=1e-12)
+        assert ans.matched_frac == 1.0
+
+
+def test_query_novel_trace_falls_back(svc):
+    """Unseen metric rows map through the nearest-rep fallback and still
+    produce a ranked answer."""
+    novel = tuple(v * 1.7 + 13.0 for v in _V3)
+    ans = svc.query(_store([novel, novel, _V3]))
+    assert ans.name in svc.corpus.results
+    assert 0.0 < ans.matched_frac < 1.0
+    assert set(ans.distances) == {"heavy", "light", "mixed"}
+
+
+def test_query_returns_loadable_module_and_profile(svc, tmp_path):
+    ans = svc.query(_store([_V3, _V3, _V1]), chip="v5p")
+    # the module is pre-assembled and on disk — reloadable elsewhere
+    mod = load_saved_module(ans.module_path, name="reloaded_proxy")
+    assert mod.TERMINALS == ans.module.TERMINALS
+    assert ans.profile.chip == "v5p"
+    assert ans.profile.step_time > 0.0
+    assert np.all(ans.profile.t_total >= 0.0)
+
+
+def test_hot_path_answers_from_cache(svc, monkeypatch):
+    """After warm-up, queries must not re-enter synthesis: poison the
+    Sequitur kernel, the fit solvers, and corpus synthesis itself — the
+    hot path never touches them, and the counters agree."""
+    def _boom(*a, **kw):
+        raise AssertionError("cold path entered on a warm query")
+
+    import repro.core.synthesize as synth_mod
+    monkeypatch.setattr(sequitur, "compress", _boom)
+    monkeypatch.setattr(sequitur.Sequitur, "push", _boom, raising=True)
+    monkeypatch.setattr(proxy_search, "fit_batch", _boom)
+    monkeypatch.setattr(proxy_search, "fit_combination", _boom)
+    monkeypatch.setattr(synth_mod, "synthesize_corpus", _boom)
+
+    q0 = svc.stats["n_queries"]
+    for _ in range(5):
+        ans = svc.query(_store([_V1, _V2, _V3]))
+        assert ans.name == "mixed"
+    assert svc.stats["n_warm_synthesis"] == 1          # construction only
+    assert svc.stats["n_queries"] == q0 + 5
+    assert svc.stats["n_module_cache_hits"] == svc.stats["n_queries"]
+
+
+def test_profile_cache_memoizes_per_chip(svc):
+    h0 = svc.stats["n_profile_cache_hits"]
+    m0 = svc.stats["n_profile_cache_misses"]
+    p1 = svc.predict_profile("heavy", "v4")            # first: miss
+    p2 = svc.predict_profile("heavy", "v4")            # repeat: hit
+    assert p1 is p2
+    assert svc.stats["n_profile_cache_misses"] == m0 + 1
+    assert svc.stats["n_profile_cache_hits"] == h0 + 1
+    # chip default + all chips resolvable
+    for chip in CHIPS:
+        assert svc.predict_profile("light", chip).chip == chip
+
+
+def test_service_rejects_empty_store_and_bad_chip(tmp_path):
+    cs = CorpusStore(tmp_path / "empty")
+    with pytest.raises(ValueError, match="empty corpus"):
+        ProxyService(cs)
+    cs.add_scenario("a", _store([_V1]))
+    with pytest.raises(ValueError, match="unknown chip"):
+        ProxyService(cs, chip="v999")
