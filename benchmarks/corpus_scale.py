@@ -1,7 +1,7 @@
 """Fleet-scale corpus benchmarks: parallel ingest, O(remaining) removal,
-and serve-tier query latency.
+and the serve tier (query latency, batched throughput, refresh cost).
 
-Rows (→ ``artifacts/BENCH_8.json``):
+Rows (→ ``artifacts/BENCH_9.json``):
 
 1. **parallel_ingest** — the five-scenario zoo appended to a fresh
    :class:`~repro.core.corpus_store.CorpusStore` serially vs via
@@ -25,12 +25,28 @@ Rows (→ ``artifacts/BENCH_8.json``):
 3. **query_latency** — :class:`~repro.serve.proxy_service.ProxyService`
    over the ingested corpus: one warm synthesis at construction, then
    repeated nearest-scenario queries (index match + embedding distance +
-   cached module/profile) timed per query.  Counters hard-assert the hot
-   path never re-enters synthesis.
+   cached module/profile) timed per query, with the per-stage
+   ``match/featurize/distance/profile`` latency split from the service's
+   :class:`~repro.serve.engine.StageTimers`.  Counters hard-assert the
+   hot path never re-enters synthesis.
+
+4. **batched_query_throughput** — N single :meth:`ProxyService.query`
+   calls vs one :meth:`ProxyService.query_batch` over the same traces
+   (one vectorized cluster match + one distance computation instead of N
+   of each).  Answers are hard-asserted identical (names, bit-equal
+   distances); target ≥3× throughput.
+
+5. **refresh_vs_rewarm** — mutate a warm store (append + remove), then
+   catch the service up via :meth:`ProxyService.refresh` (selective
+   re-embedding, ``n_warm_synthesis`` stays 1) vs the pre-subscription
+   baseline: throw the service away and rebuild store handle + service
+   from disk.  Refreshed answers are hard-asserted equal to the rebuilt
+   service's.
 
 ``--smoke`` runs the reduced zoo (4 ranks, 2 steps) with the same hard
 asserts and no timing thresholds — parallel-ingest parity, removal
-parity, and one query round-trip — the CI ``incremental-corpus`` job's
+parity, query round-trip, batched-vs-sequential parity, and
+refresh-vs-rebuilt parity — the CI ``incremental-corpus`` job's
 fleet-scale leg.  Full runs also append rows to
 ``artifacts/benchmarks.json`` via the shared ``write_artifacts``.
 """
@@ -238,7 +254,107 @@ def _query_row(scenarios=_ZOO, n_queries: int = 20,
             "self_match_rate": round(self_hits / n_queries, 3),
             "n_warm_synthesis": svc.stats["n_warm_synthesis"],
             "n_profile_cache_misses": svc.stats["n_profile_cache_misses"],
+            # per-stage latency split (StageTimers accumulators)
+            **{k: svc.stats[k] for k in ("match_ms", "featurize_ms",
+                                         "distance_ms", "profile_ms")},
             "answers_from_cache": True,
+        }
+
+
+def _batched_query_row(scenarios=_ZOO, n_queries: int = 60,
+                       n_ranks=None, steps=None) -> dict:
+    """N single ``query()`` calls vs one ``query_batch`` over the same
+    probes: the batch pays one vectorized cluster match, one shared
+    featurization memo (look-alike probes featurize once), and one
+    distance computation.  Answers hard-asserted identical — names and
+    bit-equal distances."""
+    from repro.core.corpus_store import CorpusStore
+    from repro.serve.proxy_service import ProxyService
+
+    stores = _build_zoo(scenarios, n_ranks, steps)
+    with tempfile.TemporaryDirectory() as td:
+        cs = CorpusStore(td)
+        for n, st in stores.items():
+            cs.add_scenario(n, st)
+        svc = ProxyService(cs)
+        names = list(stores)
+        probes = [stores[names[i % len(names)]] for i in range(n_queries)]
+        svc.query_batch(probes)               # warm both code paths
+
+        t0 = time.perf_counter()
+        seq = [svc.query(p) for p in probes]
+        t_seq = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        bat = svc.query_batch(probes)
+        t_bat = time.perf_counter() - t0
+
+        for s, b in zip(seq, bat):
+            assert b.name == s.name, (b.name, s.name)
+            assert b.distance == s.distance   # same bits, not just approx
+        assert svc.stats["n_warm_synthesis"] == 1
+        return {
+            "program": f"batched_query_{len(scenarios)}scenarios",
+            "n_queries": n_queries,
+            "sequential_ms": round(t_seq * 1e3, 1),
+            "batched_ms": round(t_bat * 1e3, 1),
+            "batched_speedup": round(t_seq / max(t_bat, 1e-12), 2),
+            "speedup_target": 3.0,
+            "sequential_queries_per_sec": round(n_queries / max(t_seq, 1e-12)),
+            "batched_queries_per_sec": round(n_queries / max(t_bat, 1e-12)),
+            "answers_identical_to_sequential": True,
+        }
+
+
+def _refresh_row(scenarios=_ZOO, n_ranks=None, steps=None) -> dict:
+    """Corpus mutation (append a replayed scenario + remove a victim)
+    under a warm service: the subscribed :meth:`ProxyService.refresh`
+    (incremental synthesis + selective re-embedding, ``n_warm_synthesis``
+    stays 1) vs the pre-subscription baseline — throw the service away
+    and rebuild a store handle + service from disk.  Refreshed answers
+    hard-asserted equal to the rebuilt service's."""
+    from repro.core.corpus_store import CorpusStore
+    from repro.serve.proxy_service import ProxyService
+
+    stores = _build_zoo(scenarios, n_ranks, steps)
+    with tempfile.TemporaryDirectory() as td:
+        cs = CorpusStore(td)
+        for n, st in stores.items():
+            cs.add_scenario(n, st)
+        svc = ProxyService(cs)
+        names = list(stores)
+        svc.query(stores[names[0]])           # warm the hot path
+        victim = names[-1]
+        cs.add_scenario(f"{names[0]}-replay", stores[names[0]])
+        cs.remove_scenario(victim)
+
+        t0 = time.perf_counter()
+        svc.refresh()
+        t_refresh = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        rebuilt = ProxyService(CorpusStore(td))     # fresh handle, from disk
+        t_rewarm = time.perf_counter() - t0
+
+        assert svc._names == rebuilt._names
+        for n in rebuilt._names:
+            np.testing.assert_array_equal(svc.embedding(n),
+                                          rebuilt.embedding(n))
+        survivors = [n for n in names if n != victim]
+        for n in survivors:
+            a, b = svc.query(stores[n]), rebuilt.query(stores[n])
+            assert (a.name, a.distance) == (b.name, b.distance), n
+        assert svc.stats["n_warm_synthesis"] == 1   # refresh != re-warm
+        return {
+            "program": f"refresh_{len(scenarios)}scenarios",
+            "mutation": f"+{names[0]}-replay -{victim}",
+            "refresh_ms": round(t_refresh * 1e3, 1),
+            "rewarm_ms": round(t_rewarm * 1e3, 1),
+            "refresh_speedup": round(t_rewarm / max(t_refresh, 1e-12), 2),
+            "n_reembedded": svc.stats["n_reembedded"],
+            "n_profile_invalidated": svc.stats["n_profile_invalidated"],
+            "n_warm_synthesis": svc.stats["n_warm_synthesis"],
+            "answers_identical_to_rebuilt": True,
         }
 
 
@@ -246,7 +362,8 @@ def run() -> list[dict]:
     # removal runs with stretched traces (steps=48) so the O(remaining
     # events) rebuild term dominates its constant factors and the
     # contrast with the O(distinct buckets) refold is measurable
-    return [_ingest_row(), _removal_row(steps=48), _query_row()]
+    return [_ingest_row(), _removal_row(steps=48), _query_row(),
+            _batched_query_row(), _refresh_row()]
 
 
 def smoke() -> None:
@@ -264,6 +381,15 @@ def smoke() -> None:
     print(", ".join(f"{k}={v}" for k, v in query.items()))
     assert query["answers_from_cache"], query
     assert query["self_match_rate"] == 1.0, query
+
+    batched = _batched_query_row(n_queries=8, n_ranks=4, steps=2)
+    print(", ".join(f"{k}={v}" for k, v in batched.items()))
+    assert batched["answers_identical_to_sequential"], batched
+
+    refresh = _refresh_row(n_ranks=4, steps=2)
+    print(", ".join(f"{k}={v}" for k, v in refresh.items()))
+    assert refresh["answers_identical_to_rebuilt"], refresh
+    assert refresh["n_warm_synthesis"] == 1, refresh
     print("corpus scale smoke OK")
 
 
@@ -280,4 +406,4 @@ if __name__ == "__main__":
         rows = run()
         for r in rows:
             print(", ".join(f"{k}={v}" for k, v in r.items()))
-        write_artifacts(rows, snapshot="BENCH_8.json", suite="corpus_scale")
+        write_artifacts(rows, snapshot="BENCH_9.json", suite="corpus_scale")

@@ -57,7 +57,7 @@ def main() -> None:
                         suite="portability", out_dir=out.parent)
     if "corpus_scale" in results:
         from benchmarks.synthesize_time import write_artifacts
-        write_artifacts(results["corpus_scale"], snapshot="BENCH_8.json",
+        write_artifacts(results["corpus_scale"], snapshot="BENCH_9.json",
                         suite="corpus_scale", out_dir=out.parent)
 
 

@@ -70,6 +70,7 @@ import hashlib
 import json
 import os
 import tempfile
+import threading
 from pathlib import Path
 from typing import Iterator, Sequence
 
@@ -243,6 +244,58 @@ class ScenarioBuckets:
                        local_ids=z["local_ids"].astype(np.int64))
 
 
+#: one (6,) int64 quantization key as fixed-width bytes.  Distinct
+#: equal-length byte strings stay distinct under the S-dtype trailing-null
+#: stripping (same length → same stripped form ⇔ same raw bytes), so
+#: sorting/searching this view is equality-exact.
+_KEY_DTYPE = f"S{8 * N_METRICS}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterMatcher:
+    """Immutable snapshot of the derived cluster-lookup state — the serve
+    tier's hot-path matcher.
+
+    Exact-key matching runs as one vectorized ``searchsorted`` over a
+    sorted fixed-width byte view of the quantization keys (replacing the
+    per-row ``dict.get`` loop, kept as
+    :meth:`ClusterIndex.match_clusters_reference` — the parity oracle);
+    unseen keys fall back to the nearest representative under the
+    relative-max metric, unchanged.  Being frozen, a service can capture
+    one and keep matching consistently while the owning index mutates
+    underneath it."""
+
+    rel_tol: float
+    skeys: np.ndarray         # (k,) sorted quantization-key bytes
+    scids: np.ndarray         # (k,) int64 cluster id per sorted key
+    rep_ids: np.ndarray       # (c,) int64 cluster ids
+    rep_mat: np.ndarray       # (c, 6) float64 representatives
+
+    def match(self, metrics: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        metrics = np.asarray(metrics, dtype=np.float64)
+        if metrics.ndim != 2 or metrics.shape[1] != N_METRICS:
+            raise ValueError(f"expected (n, {N_METRICS}) metrics array")
+        n = metrics.shape[0]
+        if n == 0:
+            return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=bool)
+        if not len(self.skeys):
+            raise ValueError("cannot match against an empty cluster index")
+        q = np.ascontiguousarray(quantize_metrics(metrics, self.rel_tol))
+        qs = q.view(_KEY_DTYPE).ravel()
+        pos = np.minimum(np.searchsorted(self.skeys, qs),
+                         len(self.skeys) - 1)
+        matched = self.skeys[pos] == qs
+        cids = np.zeros(n, dtype=np.int64)
+        cids[matched] = self.scids[pos[matched]]
+        if not matched.all():
+            v = metrics[~matched][:, None, :]
+            denom = np.maximum(
+                np.maximum(np.abs(self.rep_mat[None]), np.abs(v)), 1e-30)
+            dist = (np.abs(self.rep_mat[None] - v) / denom).max(axis=2)
+            cids[~matched] = self.rep_ids[np.argmin(dist, axis=1)]
+        return cids, matched
+
+
 @dataclasses.dataclass
 class ClusterIndex:
     """Running corpus-clustering state: one :class:`ScenarioBuckets` per
@@ -362,13 +415,53 @@ class ClusterIndex:
         ``TraceStore.metrics``)."""
         return self._derive_full()["ids"][name]
 
+    def matcher(self) -> ClusterMatcher:
+        """Frozen :class:`ClusterMatcher` snapshot of the derived lookup
+        state (sorted key view + representatives).  Cached alongside the
+        derived state, so it rebuilds only after mutations; serving
+        callers capture it once per sync and stay immune to concurrent
+        index mutation mid-match."""
+        d = self._derive_full()
+        m = d.get("matcher")
+        if m is None:
+            by_key, remap = d["by_key"], d["remap"]
+            if by_key:
+                # insertion position == global bucket id, so the joined
+                # key bytes line up with ``remap`` by construction
+                flat = np.frombuffer(b"".join(by_key), dtype=_KEY_DTYPE)
+                order = np.argsort(flat, kind="stable")
+                skeys = flat[order]
+                scids = np.asarray(remap, dtype=np.int64)[order]
+            else:
+                skeys = np.zeros(0, dtype=_KEY_DTYPE)
+                scids = np.zeros(0, dtype=np.int64)
+            reps = d["reps"]
+            rep_ids = np.fromiter(reps.keys(), dtype=np.int64,
+                                  count=len(reps))
+            rep_mat = (np.stack([reps[int(c)] for c in rep_ids])
+                       if len(reps) else np.zeros((0, N_METRICS)))
+            m = ClusterMatcher(rel_tol=self.rel_tol, skeys=skeys,
+                               scids=scids, rep_ids=rep_ids, rep_mat=rep_mat)
+            d["matcher"] = m
+        return m
+
     def match_clusters(self, metrics: np.ndarray,
                        ) -> tuple[np.ndarray, np.ndarray]:
         """Map arbitrary metric rows onto the derived corpus clusters
         *without* re-clustering: exact quantization-key lookup with a
         nearest-representative fallback for unseen keys.  Pure NumPy —
-        the serve tier's hot path.  Returns ``(cluster_ids, matched)``
-        where ``matched[i]`` is False for fallback rows."""
+        the serve tier's hot path, vectorized via the sorted key view in
+        :class:`ClusterMatcher` (bit-identical to the per-row loop kept
+        as :meth:`match_clusters_reference`).  Returns ``(cluster_ids,
+        matched)`` where ``matched[i]`` is False for fallback rows."""
+        return self.matcher().match(metrics)
+
+    def match_clusters_reference(self, metrics: np.ndarray,
+                                 ) -> tuple[np.ndarray, np.ndarray]:
+        """The per-row dict-lookup matcher the vectorized path replaced —
+        preserved verbatim as the parity oracle (repo oracle discipline):
+        tests pin ``match_clusters`` bit-identical to this on zoo + fuzz
+        streams."""
         metrics = np.asarray(metrics, dtype=np.float64)
         if metrics.ndim != 2 or metrics.shape[1] != N_METRICS:
             raise ValueError(f"expected (n, {N_METRICS}) metrics array")
@@ -730,6 +823,10 @@ class CorpusStore:
         #: (grammar objects are not persistable; the on-disk caches are
         #: the cluster index and the fit/grammar caches)
         self.memo: dict = {}
+        #: serializes this handle's mutators against in-process serving
+        #: refreshes (cross-process safety stays with the shard flocks)
+        self.lock = threading.RLock()
+        self._subscribers: list = []
 
         mpath = self.root / _MANIFEST
         if mpath.exists():
@@ -962,6 +1059,39 @@ class CorpusStore:
                                {"version": _MANIFEST_VERSION, "entries": cur})
         self._shards[i] = cur
 
+    # -- mutation notifications ------------------------------------------------
+
+    def subscribe(self, fn) -> None:
+        """Register ``fn(event, names)`` to run after every mutation this
+        handle commits (``event`` is ``"add"`` or ``"remove"``; ``names``
+        a tuple of affected scenarios).  Callbacks fire after
+        ``_finish_mutation`` under :attr:`lock`; they must be cheap and
+        must not mutate the store (serving subscribers just flip a stale
+        bit and refresh lazily)."""
+        self._subscribers.append(fn)
+
+    def unsubscribe(self, fn) -> None:
+        """Drop a subscriber registered with :meth:`subscribe` (no-op if
+        absent)."""
+        with contextlib.suppress(ValueError):
+            self._subscribers.remove(fn)
+
+    def _notify(self, event: str, names) -> None:
+        for fn in list(self._subscribers):
+            fn(event, tuple(names))
+
+    def manifest_fingerprint(self) -> str:
+        """sha256 over this handle's canonical ``(name, content_hash)``
+        entry list — the cheap drift probe serving caches compare against
+        (a mutation through this handle always changes it)."""
+        h = hashlib.sha256()
+        for e in self._iter_entries():
+            h.update(e["name"].encode())
+            h.update(b"\x00")
+            h.update(e["content_hash"].encode())
+            h.update(b"\x00")
+        return h.hexdigest()
+
     # -- mutation --------------------------------------------------------------
 
     @staticmethod
@@ -973,16 +1103,18 @@ class CorpusStore:
         """Append one scenario: write its npz + bucket sidecar, commit
         the shard entry under the shard lock, fold its bucket table into
         the cluster index.  Returns the content hash."""
-        self._validate_name(name)
-        if name in self:
-            raise ValueError(f"scenario {name!r} already in corpus")
-        _, entry, sb, _ = _ingest_front_half(self.root, name, store,
-                                             self.rel_tol)
-        self._append_entry(entry)
-        self.index.ingest_table(name, sb)
-        self._stores[name] = store
-        self._finish_mutation()
-        return entry["content_hash"]
+        with self.lock:
+            self._validate_name(name)
+            if name in self:
+                raise ValueError(f"scenario {name!r} already in corpus")
+            _, entry, sb, _ = _ingest_front_half(self.root, name, store,
+                                                 self.rel_tol)
+            self._append_entry(entry)
+            self.index.ingest_table(name, sb)
+            self._stores[name] = store
+            self._finish_mutation()
+            self._notify("add", [name])
+            return entry["content_hash"]
 
     def add_scenarios(self, items, n_workers: int = 0,
                       threshold: float = 0.5, warm_grammars: bool = True,
@@ -1001,6 +1133,12 @@ class CorpusStore:
         so the first joint synthesis after ingest skips Sequitur for
         every stream whose joint partition matches the local one.
         Returns ``{name: content_hash}``."""
+        with self.lock:
+            return self._add_scenarios_locked(items, n_workers, threshold,
+                                              warm_grammars)
+
+    def _add_scenarios_locked(self, items, n_workers, threshold,
+                              warm_grammars) -> dict[str, str]:
         items = [(name, src) for name, src in items]
         for name, _ in items:
             self._validate_name(name)
@@ -1040,6 +1178,7 @@ class CorpusStore:
                 self._stores[name] = src
         self._finish_mutation()
         self.save_grammars()
+        self._notify("add", [name for name, _ in items])
         return hashes
 
     def remove_scenario(self, name: str) -> None:
@@ -1049,13 +1188,15 @@ class CorpusStore:
         their partials refold (in manifest order) at the next derive.  No
         metrics reload, no full rebuild; post-removal clustering is
         bit-identical to a from-scratch index over the survivors."""
-        entry = self._entry(name)
-        self._remove_entry(entry)
-        self._stores.pop(name, None)
-        self.scenario_path(name).unlink(missing_ok=True)
-        self._sidecar_path(name).unlink(missing_ok=True)
-        self.index.remove(name)
-        self._finish_mutation()
+        with self.lock:
+            entry = self._entry(name)
+            self._remove_entry(entry)
+            self._stores.pop(name, None)
+            self.scenario_path(name).unlink(missing_ok=True)
+            self._sidecar_path(name).unlink(missing_ok=True)
+            self.index.remove(name)
+            self._finish_mutation()
+            self._notify("remove", [name])
 
     def _metrics_of(self, name: str) -> np.ndarray:
         cached = self._stores.get(name)

@@ -10,11 +10,70 @@ import dataclasses
 import json
 from typing import Any, Iterable
 
+import numpy as np
+
 from repro.core.events import CommEvent, ComputeEvent, Event, is_comm
 from repro.core.sequitur import Sequitur
 
 # A rule body entry: ("t", terminal_id, exp) or ("r", rule_id, exp)
 Sym = tuple[str, int, int]
+
+#: depth bins of :func:`rule_histogram` (the last bin absorbs deeper rules)
+GRAMMAR_HIST_BINS = 8
+
+
+def rule_histogram(rules: dict[int, list[Sym]], main_id: int = 0,
+                   n_bins: int = GRAMMAR_HIST_BINS) -> np.ndarray:
+    """Depth-binned rule occurrence/instantiation counts of a frozen rule
+    set — the grammar's *shape* as a small integer vector of length
+    ``2 * n_bins``.
+
+    The first half sums, over every non-main rule of depth ``d`` (depth
+    1 = all-terminal bodies; depths ``>= n_bins`` fold into the last
+    bin), how many times the rule is instantiated in one full expansion
+    of ``main_id`` (exponents multiply through the rule DAG); the second
+    half counts the *distinct* reachable rules per depth.  Two streams
+    with identical symbol mass but different schedules compress to
+    different rule sets, so their histograms separate — the serve tier's
+    sequence-aware embedding term.  Both halves ride along deliberately:
+    after the serve tier's scale-invariant log-normalization a single
+    vector would collapse scalar multiples (e.g. one depth-1 rule
+    instantiated 6× vs two instantiated 6× each), while the pair keeps
+    distinct log-magnitude ratios.  Pure dict/int work over the frozen
+    ``{rid: [(kind, ref, exp), ...]}`` form (the
+    :class:`~repro.core.corpus_store.GrammarCache` payload): no Sequitur,
+    no terminal table.  int64 (exact counts), not normalized.
+    """
+    depths: dict[int, int] = {}
+
+    def depth(r: int) -> int:
+        if r in depths:
+            return depths[r]
+        depths[r] = 0  # cycle guard (well-formed grammars are acyclic)
+        d = 1 + max((depth(ref) for k, ref, _ in rules[r] if k == "r"),
+                    default=0)
+        depths[r] = d
+        return d
+
+    for r in rules:
+        depth(r)
+
+    # transitive instantiation counts: parents (strictly deeper than any
+    # rule they reference) propagate before children are read
+    counts: dict[int, int] = {main_id: 1}
+    for r in sorted(rules, key=lambda r: (-depths[r], r)):
+        c = counts.get(r, 0)
+        if not c:
+            continue            # unreachable from main
+        for kind, ref, exp in rules[r]:
+            if kind == "r":
+                counts[ref] = counts.get(ref, 0) + c * exp
+    hist = np.zeros(2 * n_bins, dtype=np.int64)
+    for r, d in depths.items():
+        if r != main_id and counts.get(r, 0):
+            hist[min(d, n_bins) - 1] += counts[r]
+            hist[n_bins + min(d, n_bins) - 1] += 1
+    return hist
 
 
 class TerminalTable:

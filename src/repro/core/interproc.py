@@ -96,6 +96,22 @@ class MergedProgram:
         """Deepest rule nesting — the scan-nest depth of compiled modules."""
         return max(self.rule_depths().values(), default=0)
 
+    def rule_histogram(self, n_bins: int | None = None):
+        """Depth-binned transitive rule-instantiation counts over the
+        whole merged program (:func:`repro.core.grammar.rule_histogram`
+        applied to a synthetic main that concatenates every merged main
+        rule, each entry weighted by its rank-set size) — the program's
+        shape as a small integer vector, rank-weighted so an SPMD rule
+        executed by 64 ranks counts 64×."""
+        from repro.core.grammar import GRAMMAR_HIST_BINS, rule_histogram
+        n_bins = GRAMMAR_HIST_BINS if n_bins is None else n_bins
+        synth = max(self.rules, default=-1) + 1
+        body: list[Sym] = [(k, ref, exp * len(ranks))
+                           for main in self.mains
+                           for k, ref, exp, ranks in main]
+        return rule_histogram({**self.rules, synth: body}, main_id=synth,
+                              n_bins=n_bins)
+
     def rule_comm_axes(self) -> dict[int, frozenset]:
         """Mesh axes touched by comm terminals reachable from each rule,
         computed once bottom-up (drives per-group device hints)."""

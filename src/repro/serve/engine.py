@@ -8,6 +8,7 @@ context × 128-slot pool fit per chip.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 
@@ -17,6 +18,29 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.model import build_forward, init_cache
+
+
+class StageTimers:
+    """Per-stage wall-clock accumulators for serving observability —
+    shared by both serving tiers (:class:`ServeEngine` prefill/decode,
+    :class:`~repro.serve.proxy_service.ProxyService`
+    match/featurize/distance/profile).  ``time(stage)`` is a context
+    manager; :meth:`snapshot_ms` renders ``{stage}_ms`` keys for a stats
+    dict or a benchmark row."""
+
+    def __init__(self, *stages: str):
+        self._acc = {s: 0.0 for s in stages}
+
+    @contextlib.contextmanager
+    def time(self, stage: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._acc[stage] += time.perf_counter() - t0
+
+    def snapshot_ms(self) -> dict[str, float]:
+        return {f"{s}_ms": round(v * 1e3, 3) for s, v in self._acc.items()}
 
 
 @dataclasses.dataclass
@@ -35,6 +59,7 @@ class ServeEngine:
         self.mesh = mesh
         self.max_len = max_len
         self.eos_id = eos_id
+        self.timers = StageTimers("prefill", "decode")
         self._prefill = jax.jit(
             lambda p, b: build_forward(cfg, "prefill")(p, b, cfg, mesh))
         self._decode = jax.jit(
@@ -86,6 +111,8 @@ class ServeEngine:
                 break
         jax.block_until_ready(tok)
         t2 = time.perf_counter()
+        self.timers._acc["prefill"] += t1 - t0
+        self.timers._acc["decode"] += t2 - t1
         gen = np.stack(out, axis=1)
         n_tok = gen.size
         return GenResult(tokens=gen, prefill_sec=t1 - t0, decode_sec=t2 - t1,

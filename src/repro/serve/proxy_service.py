@@ -7,26 +7,53 @@ known workload it resembles and what it would cost on each chip — the
 automated profiling → prediction loop of Synapse (PAPERS.md).  The
 serving discipline mirrors :class:`repro.serve.engine.ServeEngine`: pay
 the compile/synthesis cost once up front, then answer every request from
-warm state at fixed cost.
+warm state at fixed cost — batched, observable, and coherent under
+corpus mutation:
 
-:class:`ProxyService` wraps a :class:`~repro.core.corpus_store.
-CorpusStore`.  Construction runs **one** incremental corpus synthesis
-(on a warm store: fully cache-resolved) and precomputes a feature
-embedding per scenario.  A query then:
+* **Batched queries.**  :meth:`ProxyService.query_batch` featurizes many
+  traces against one vectorized cluster match over their concatenated
+  metric rows (:class:`~repro.core.corpus_store.ClusterMatcher`) and
+  answers them with a single (n_queries × n_scenarios) distance
+  computation; :meth:`ProxyService.query` is the batch of one, so the
+  two paths cannot drift.
 
-1. maps the query trace's metric rows onto the corpus clusters with the
-   index's exact-key/nearest-rep matcher (pure NumPy, no re-clustering);
-2. featurizes the trace over the corpus terminal-table **fit
-   coefficients** (per-cluster block-combination loop counts, summed
-   over the trace's rows) plus its **comm-kind histogram** (payload ×
-   occurrence mass per collective kind);
-3. returns the nearest scenario's *cached pre-assembled proxy module*
-   and a memoized cross-chip :func:`~repro.core.portability.
-   predict_profile` estimate.
+* **Mutation-coherent warm cache.**  The service subscribes to
+  :meth:`CorpusStore.subscribe` notifications; ``add``/``remove`` flips
+  a stale bit and the next query triggers :meth:`ProxyService.refresh`
+  — one incremental ``synthesize_corpus`` (memo/cache-resolved, *not* a
+  re-warm: ``n_warm_synthesis`` stays 1) that re-embeds **only** the
+  scenarios whose label-invariant embed key changed and invalidates
+  only the ``(name, chip)`` profile memos whose module changed.
+  Refreshed state is pinned bit-identical to a freshly constructed
+  service on the mutated store.  An *unsubscribed* service detects
+  manifest-fingerprint drift and raises :class:`StaleServiceError`
+  instead of serving removed scenarios.
 
-No Sequitur, no fit dispatch, no codegen on the hot path — the
-``stats`` counters pin this (``n_warm_synthesis`` stays 1 however many
-queries run), and tests assert it by poisoning the cold-path entry
+* **Nearest-neighbor structure.**  At or above ``ann_threshold``
+  scenarios the distance stage queries an exact
+  :class:`~repro.serve.ann.BallTree` instead of materializing the full
+  distance matrix; the brute-force path stays as the parity oracle
+  (same nearest scenario, bit-equal distance).  In ANN mode
+  ``QueryResult.distances`` holds only the matched scenario.
+
+* **Sequence-aware embedding.**  Embeddings concatenate three
+  unit-log-normalized terms: summed fit-coefficient mass over matched
+  clusters, the comm-kind payload·occurrence histogram, and a
+  grammar-rule histogram (depth-binned transitive rule-instantiation
+  counts, :func:`repro.core.grammar.rule_histogram`) read from the
+  store's cached frozen grammars — schedule-divergent but comm-identical
+  workloads separate, with **no Sequitur on any path** (an uncached
+  query stream just contributes a zero term and bumps
+  ``n_grammar_hist_misses``).
+
+* **Observability.**  ``stats`` carries per-stage latency accumulators
+  (``match_ms``/``featurize_ms``/``distance_ms``/``profile_ms``, via the
+  shared :class:`repro.serve.engine.StageTimers`) and hit-rate counters;
+  ``benchmarks/corpus_scale.py`` snapshots them per row.
+
+No Sequitur, no fit dispatch, no codegen on the hot path — the ``stats``
+counters pin this (``n_warm_synthesis`` stays 1 however many queries and
+refreshes run), and tests assert it by poisoning the cold-path entry
 points after warm-up.
 
 Featurizing over fit coefficients rather than raw metrics deliberately
@@ -37,18 +64,36 @@ if their raw metric magnitudes differ.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import threading
 
 import numpy as np
 
-from repro.core.events import COMM_KINDS
+from repro.core.corpus_store import GrammarCache
+from repro.core.events import COMM_KINDS, N_METRICS
+from repro.core.grammar import GRAMMAR_HIST_BINS, rule_histogram
 from repro.core.interproc import compute_gid_index
 from repro.core.portability import (
     CHIPS, REFERENCE_CHIP, ProfilePrediction, predict_profile,
 )
-from repro.core.trace_ir import TraceStore
+from repro.core.trace_ir import (
+    TraceStore, _first_appearance_factorize, rank_symbol_streams,
+)
+from repro.serve.ann import BallTree
+from repro.serve.engine import StageTimers
 
 _KIND_INDEX = {k: i for i, k in enumerate(COMM_KINDS)}
 _N_COEF = 11                       # block-combination loop counts (x_1..x_11)
+
+#: corpus size at which the distance stage switches from the brute-force
+#: matrix to the exact ball tree (overridable per service)
+ANN_THRESHOLD = 64
+
+
+class StaleServiceError(RuntimeError):
+    """The corpus store mutated under a service that is not subscribed to
+    its mutation notifications — the warm cache can no longer be trusted,
+    so the service fails loudly instead of answering from stale state."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,7 +102,10 @@ class QueryResult:
 
     name: str                      # nearest corpus scenario
     distance: float                # embedding distance to it
-    distances: dict[str, float]    # all scenarios, for inspection
+    #: per-scenario distances for inspection — every scenario in
+    #: brute-force mode; only the matched one once the ANN index is
+    #: active (the tree never materializes the rest)
+    distances: dict[str, float]
     module: object                 # its cached pre-assembled proxy module
     profile: ProfilePrediction     # cross-chip roofline estimate
     matched_frac: float            # fraction of rows exact-key matched
@@ -69,12 +117,20 @@ class QueryResult:
         return self.module.__proxy_path__
 
 
+def _unit_log_rows(m: np.ndarray) -> np.ndarray:
+    """Row-wise log1p then L2-normalize: comparable across trace lengths
+    and robust to the metric magnitude spread.  One vectorized pass over
+    a whole batch; the reduction (elementwise square, per-row sum, sqrt)
+    is row-local, so a row's bits do not depend on batch size — the
+    batch of one and the batch of N embed identically."""
+    m = np.log1p(np.maximum(np.asarray(m, dtype=np.float64), 0.0))
+    n = np.sqrt((m ** 2).sum(axis=1, keepdims=True))
+    return np.divide(m, np.where(n > 0, n, 1.0))
+
+
 def _unit_log(v: np.ndarray) -> np.ndarray:
-    """log1p then L2-normalize: comparable across trace lengths and
-    robust to the metric magnitude spread."""
-    v = np.log1p(np.maximum(np.asarray(v, dtype=np.float64), 0.0))
-    n = float(np.linalg.norm(v))
-    return v / n if n > 0 else v
+    """:func:`_unit_log_rows` of a single vector."""
+    return _unit_log_rows(np.asarray(v, dtype=np.float64)[None])[0]
 
 
 class ProxyService:
@@ -84,6 +140,7 @@ class ProxyService:
 
         svc = ProxyService(cstore)                 # one warm synthesis
         ans = svc.query(trace_store, chip="v5p")   # hot path: pure NumPy
+        outs = svc.query_batch(traces)             # one vectorized pass
         ans.module.__proxy_path__                  # pre-assembled proxy
         ans.profile.step_time                      # cross-chip estimate
 
@@ -91,11 +148,16 @@ class ProxyService:
     ``chip=`` overrides.  ``count_scale``/``threshold``/``out_dir``
     forward to the warm :func:`~repro.core.synthesize.synthesize_corpus`
     call (``out_dir`` makes the cached modules land somewhere durable).
+    ``subscribe=False`` opts out of the store's mutation notifications —
+    such a service raises :class:`StaleServiceError` if the store drifts
+    under it.  ``ann_threshold`` sets the corpus size at which nearest-
+    scenario lookup switches to the exact ball tree.
     """
 
     def __init__(self, cstore, *, chip: str = REFERENCE_CHIP,
                  threshold: float = 0.5, count_scale: float = 1.0,
-                 out_dir=None):
+                 out_dir=None, subscribe: bool = True,
+                 ann_threshold: int = ANN_THRESHOLD):
         if not cstore.names:
             raise ValueError("cannot serve an empty corpus")
         if chip not in CHIPS:
@@ -103,22 +165,54 @@ class ProxyService:
         from repro.core.synthesize import synthesize_corpus   # lazy: jax
         self._cstore = cstore
         self.chip = chip
+        self._threshold = threshold
+        self._count_scale = count_scale
+        self._out_dir = out_dir
+        self._ann_threshold = int(ann_threshold)
+        self._lock = threading.RLock()
+        self._stale = False
+        self._timers = StageTimers("match", "featurize", "distance",
+                                   "profile")
         self.stats = {
             "n_warm_synthesis": 0,
+            "n_refresh": 0,
             "n_queries": 0,
+            "n_query_batches": 0,
             "n_module_cache_hits": 0,
             "n_profile_cache_hits": 0,
             "n_profile_cache_misses": 0,
+            "n_profile_invalidated": 0,
             "n_matched_rows": 0,
             "n_fallback_rows": 0,
+            "n_reembedded": 0,
+            "n_grammar_hist_hits": 0,
+            "n_grammar_hist_misses": 0,
+            "n_ann_queries": 0,
+            "n_brute_queries": 0,
         }
+        self.stats.update(self._timers.snapshot_ms())
         # the single cold-path synthesis (on a warm store this resolves
         # from the persisted grammar/fit caches and the result memo)
         self.corpus = synthesize_corpus(store=cstore, threshold=threshold,
                                         count_scale=count_scale,
                                         out_dir=out_dir)
         self.stats["n_warm_synthesis"] += 1
+        self._embeddings: dict[str, np.ndarray] = {}
+        self._embed_keys: dict[str, str] = {}
+        self._profiles: dict[tuple[str, str], ProfilePrediction] = {}
+        self._sync(count_reembeds=False)
+        self._subscribed = False
+        if subscribe:
+            cstore.subscribe(self._on_store_mutation)
+            self._subscribed = True
 
+    # -- warm-state derivation / refresh ---------------------------------------
+
+    def _sync(self, count_reembeds: bool) -> None:
+        """(Re)derive every piece of warm serving state from the current
+        ``self.corpus`` + store view, reusing embeddings whose
+        label-invariant embed key is unchanged."""
+        cstore = self._cstore
         # cluster id -> fit-coefficient row, via the corpus terminal table
         gid_of = compute_gid_index(self.corpus.table)
         n_cids = (max(gid_of) + 1) if gid_of else 0
@@ -127,21 +221,156 @@ class ProxyService:
             fr = self.corpus.fits.get(gid)
             if fr is not None:
                 self._coef[cid] = np.asarray(fr.x, dtype=np.float64)
-
+        # frozen matcher snapshot: in-flight queries stay immune to index
+        # mutations until the next sync
+        self._matcher = cstore.index.matcher()
         ids_by_name, _ = cstore.cluster_assignments()
-        self._embeddings = {
-            name: self._featurize(cstore.load_scenario(name),
-                                  ids_by_name[name])
-            for name in cstore.names
-        }
-        self._profiles: dict[tuple[str, str], ProfilePrediction] = {}
+        old_keys, old_emb = self._embed_keys, self._embeddings
+        embeddings: dict[str, np.ndarray] = {}
+        keys: dict[str, str] = {}
+        memo: dict = {}
+        n_re = 0
+        for name in cstore.names:
+            k = self._embed_key(name, ids_by_name[name])
+            keys[name] = k
+            if old_keys.get(name) == k:
+                embeddings[name] = old_emb[name]
+            else:
+                embeddings[name] = self._featurize(
+                    cstore.load_scenario(name), ids_by_name[name], memo)
+                n_re += 1
+        if count_reembeds:
+            self.stats["n_reembedded"] += n_re
+        self._embeddings, self._embed_keys = embeddings, keys
+        self._names = list(embeddings)
+        self._emb_mat = np.stack([embeddings[n] for n in self._names])
+        self._ann = (BallTree(self._emb_mat)
+                     if len(self._names) >= self._ann_threshold else None)
+        self._fingerprint = cstore.manifest_fingerprint()
 
-    # -- featurization (pure NumPy) --------------------------------------------
+    def _embed_key(self, name: str, cids: np.ndarray) -> str:
+        """Content key of one scenario's embedding: trace content hash ⊕
+        first-appearance cluster pattern ⊕ the coefficient rows of the
+        clusters it touches.  Deliberately invariant under pure cluster
+        relabeling (the common effect of unrelated appends/removals), so
+        refresh re-embeds only scenarios whose embedding inputs actually
+        changed."""
+        local, uniq, _ = _first_appearance_factorize(
+            np.asarray(cids, dtype=np.int64))
+        h = hashlib.sha256(
+            f"embed|1|{self._threshold!r}|"
+            f"{self._cstore.content_hash(name)}|".encode())
+        h.update(np.ascontiguousarray(local, dtype=np.int64).tobytes())
+        for u in uniq.tolist():
+            if 0 <= u < len(self._coef):
+                h.update(self._coef[int(u)].tobytes())
+            else:
+                h.update(b"\xff")
+        return h.hexdigest()
 
-    def _featurize(self, store: TraceStore, cids: np.ndarray) -> np.ndarray:
-        """Embed one trace: summed fit-coefficient mass over its compute
-        rows ⊕ comm-kind payload·occurrence histogram, each log-scaled
-        and unit-normalized."""
+    def _on_store_mutation(self, event: str, names) -> None:
+        # runs inside the mutator (under the store lock): only flip the
+        # stale bit — taking the service lock here would invert the
+        # service-then-store lock order refresh uses
+        self._stale = True
+
+    def _ensure_fresh(self) -> None:
+        if self._stale:
+            self.refresh()
+            return
+        if self._cstore.manifest_fingerprint() != self._fingerprint:
+            if self._subscribed:
+                self.refresh()        # notification raced us: catch up
+            else:
+                raise StaleServiceError(
+                    "corpus store mutated under an unsubscribed "
+                    "ProxyService (manifest fingerprint drifted); construct "
+                    "a fresh service or subscribe to mutation notifications")
+
+    def refresh(self) -> "ProxyService":
+        """Catch the warm cache up with the mutated store: one
+        incremental ``synthesize_corpus`` (memo/cache-resolved — not a
+        re-warm), selective re-embedding, precise profile-memo
+        invalidation.  Resulting state is bit-identical to a freshly
+        constructed service on the mutated store."""
+        from repro.core.synthesize import synthesize_corpus   # lazy: jax
+        with self._lock:
+            cstore = self._cstore
+            with cstore.lock:
+                # clear the stale bit *before* re-deriving: a mutation
+                # landing after we release the store lock re-arms it, so
+                # no update is ever lost
+                self._stale = False
+                if not cstore.names:
+                    raise ValueError("cannot serve an empty corpus")
+                old_modules = {n: r.proxy.module
+                               for n, r in self.corpus.results.items()}
+                self.corpus = synthesize_corpus(
+                    store=cstore, threshold=self._threshold,
+                    count_scale=self._count_scale, out_dir=self._out_dir)
+                self.stats["n_refresh"] += 1
+                dropped = 0
+                for key in list(self._profiles):
+                    res = self.corpus.results.get(key[0])
+                    if (res is None or
+                            res.proxy.module is not old_modules.get(key[0])):
+                        del self._profiles[key]
+                        dropped += 1
+                self.stats["n_profile_invalidated"] += dropped
+                self._sync(count_reembeds=True)
+        return self
+
+    def close(self) -> None:
+        """Detach from the store's mutation notifications (idempotent)."""
+        if self._subscribed:
+            self._cstore.unsubscribe(self._on_store_mutation)
+            self._subscribed = False
+
+    # -- featurization (pure NumPy + cached frozen grammars) -------------------
+
+    def _grammar_hist(self, store: TraceStore, cids: np.ndarray,
+                      memo: dict | None = None) -> np.ndarray:
+        """Summed depth-binned rule histogram over the trace's per-rank
+        streams, read from the store's cached frozen grammars (the same
+        content-addressed keys joint synthesis populates) — no Sequitur;
+        an uncached stream contributes zeros and counts a miss.  ``memo``
+        dedupes work on repeated streams, keyed first by raw stream bytes
+        (skipping factorize + hashing entirely) and then by grammar key;
+        :meth:`query_batch` shares one memo across the whole batch, so
+        look-alike probes pay for featurization once."""
+        memo = {} if memo is None else memo
+        hist = np.zeros(2 * GRAMMAR_HIST_BINS, dtype=np.int64)
+        syms = rank_symbol_streams(store, np.asarray(cids, dtype=np.int64))
+        ext = store.extents
+        for r in range(store.n_ranks):
+            s = syms[int(ext[r]):int(ext[r + 1])]
+            if not len(s):
+                continue
+            sb = s.tobytes()
+            h = memo.get(sb)
+            if h is None:
+                local_ids, _, _ = _first_appearance_factorize(s)
+                key = GrammarCache.key(local_ids, self._threshold)
+                h = memo.get(key)
+                if h is None:
+                    rules = self._cstore.grammars.get(key)
+                    if rules is None:
+                        self.stats["n_grammar_hist_misses"] += 1
+                        h = np.zeros(2 * GRAMMAR_HIST_BINS, dtype=np.int64)
+                    else:
+                        self.stats["n_grammar_hist_hits"] += 1
+                        h = rule_histogram(rules)
+                    memo[key] = h
+                memo[sb] = h
+            hist += h
+        return hist
+
+    def _featurize_parts(self, store: TraceStore, cids: np.ndarray,
+                         memo: dict | None = None,
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The three raw (un-normalized) embedding terms of one trace:
+        summed fit-coefficient mass over its compute rows, comm-kind
+        payload·occurrence histogram, grammar-rule histogram."""
         comp = np.zeros(_N_COEF)
         if len(cids) and len(self._coef):
             valid = cids[(cids >= 0) & (cids < len(self._coef))]
@@ -150,7 +379,23 @@ class ProxyService:
         occ = store.comm_occurrence_counts()
         for c, ev in enumerate(store.comm_pool):
             comm[_KIND_INDEX[ev.kind]] += float(occ[c]) * ev.payload_bytes
-        return np.concatenate([_unit_log(comp), _unit_log(comm)])
+        return comp, comm, self._grammar_hist(store, cids, memo)
+
+    @staticmethod
+    def _embed_rows(parts: list) -> np.ndarray:
+        """Normalize a batch of :meth:`_featurize_parts` outputs in three
+        vectorized passes (one per term) — row bits are batch-size
+        independent, so this is the single embedding definition for
+        corpus scenarios, single queries, and batches alike."""
+        return np.concatenate(
+            [_unit_log_rows(np.stack([p[i] for p in parts]))
+             for i in range(3)], axis=1)
+
+    def _featurize(self, store: TraceStore, cids: np.ndarray,
+                   memo: dict | None = None) -> np.ndarray:
+        """Embed one trace: the three terms of :meth:`_featurize_parts`,
+        each log-scaled and unit-normalized."""
+        return self._embed_rows([self._featurize_parts(store, cids, memo)])[0]
 
     def embedding(self, name: str) -> np.ndarray:
         """The precomputed embedding of a corpus scenario."""
@@ -162,22 +407,74 @@ class ProxyService:
               ) -> QueryResult:
         """Nearest corpus scenario for a query trace — index matching +
         embedding distance + cached module/profile lookup; no synthesis
-        stage runs."""
-        self.stats["n_queries"] += 1
-        cids, matched = self._cstore.index.match_clusters(store.metrics)
-        self.stats["n_matched_rows"] += int(matched.sum())
-        self.stats["n_fallback_rows"] += int((~matched).sum())
-        q = self._featurize(store, cids)
-        distances = {n: float(np.linalg.norm(q - e))
-                     for n, e in self._embeddings.items()}
-        name = min(distances, key=distances.get)
-        module = self.corpus.results[name].proxy.module   # pre-assembled
-        self.stats["n_module_cache_hits"] += 1
-        profile = self.predict_profile(name, chip)
-        return QueryResult(
-            name=name, distance=distances[name], distances=distances,
-            module=module, profile=profile,
-            matched_frac=(float(matched.mean()) if len(matched) else 1.0))
+        stage runs.  The batch of one: bit-identical to
+        :meth:`query_batch` by construction."""
+        return self.query_batch([store], chip=chip)[0]
+
+    def query_batch(self, stores, chip: str | None = None,
+                    ) -> list[QueryResult]:
+        """Answer many queries in one vectorized pass: a single cluster
+        match over the concatenated metric rows, per-segment
+        featurization, and one (n_queries × n_scenarios) distance
+        computation (or one ball-tree walk per query in ANN mode)."""
+        stores = list(stores)
+        for i, st in enumerate(stores):
+            if st.n_events == 0:
+                raise ValueError(
+                    f"cannot query an empty trace (batch index {i}): the "
+                    "all-zero embedding would match an arbitrary scenario")
+        if not stores:
+            return []
+        with self._lock:
+            return self._query_batch_locked(stores, chip)
+
+    def _query_batch_locked(self, stores: list, chip: str | None,
+                            ) -> list[QueryResult]:
+        self._ensure_fresh()
+        self.stats["n_query_batches"] += 1
+        self.stats["n_queries"] += len(stores)
+
+        ext = np.cumsum([0] + [st.metrics.shape[0] for st in stores])
+        with self._timers.time("match"):
+            allm = (np.concatenate([st.metrics for st in stores])
+                    if ext[-1] else np.zeros((0, N_METRICS)))
+            cids_all, matched_all = self._matcher.match(allm)
+        self.stats["n_matched_rows"] += int(matched_all.sum())
+        self.stats["n_fallback_rows"] += int((~matched_all).sum())
+
+        with self._timers.time("featurize"):
+            memo: dict = {}       # shared: look-alike probes featurize once
+            Q = self._embed_rows(
+                [self._featurize_parts(st, cids_all[ext[i]:ext[i + 1]], memo)
+                 for i, st in enumerate(stores)])
+
+        with self._timers.time("distance"):
+            if self._ann is not None:
+                self.stats["n_ann_queries"] += len(stores)
+                picks = [self._ann.query(q) for q in Q]
+                idxs = [i for i, _ in picks]
+                dists = [{self._names[i]: float(d)} for i, d in picks]
+            else:
+                self.stats["n_brute_queries"] += len(stores)
+                D = np.sqrt(((Q[:, None, :] - self._emb_mat[None]) ** 2)
+                            .sum(axis=-1))
+                idxs = np.argmin(D, axis=1).tolist()
+                dists = [dict(zip(self._names, row)) for row in D.tolist()]
+
+        out: list[QueryResult] = []
+        with self._timers.time("profile"):
+            for k, st in enumerate(stores):
+                name = self._names[int(idxs[k])]
+                module = self.corpus.results[name].proxy.module
+                self.stats["n_module_cache_hits"] += 1
+                profile = self.predict_profile(name, chip)
+                m = matched_all[ext[k]:ext[k + 1]]
+                out.append(QueryResult(
+                    name=name, distance=float(dists[k][name]),
+                    distances=dists[k], module=module, profile=profile,
+                    matched_frac=(float(m.mean()) if len(m) else 1.0)))
+        self.stats.update(self._timers.snapshot_ms())
+        return out
 
     def predict_profile(self, name: str, chip: str | None = None,
                         ) -> ProfilePrediction:
@@ -187,12 +484,13 @@ class ProxyService:
         query)."""
         chip = chip or self.chip
         key = (name, chip)
-        hit = self._profiles.get(key)
-        if hit is None:
-            self.stats["n_profile_cache_misses"] += 1
-            hit = predict_profile(self.corpus.results[name].proxy.module,
-                                  chip)
-            self._profiles[key] = hit
-        else:
-            self.stats["n_profile_cache_hits"] += 1
-        return hit
+        with self._lock:
+            hit = self._profiles.get(key)
+            if hit is None:
+                self.stats["n_profile_cache_misses"] += 1
+                hit = predict_profile(
+                    self.corpus.results[name].proxy.module, chip)
+                self._profiles[key] = hit
+            else:
+                self.stats["n_profile_cache_hits"] += 1
+            return hit

@@ -213,6 +213,68 @@ def test_index_empty_scenario():
     assert idx.n_clusters == 0
 
 
+def test_match_clusters_vectorized_bit_identical_to_reference(tmp_path):
+    """The sorted-view + searchsorted matcher returns exactly the
+    ``(cids, matched)`` the per-row dict-lookup loop (the preserved
+    parity oracle) does — on zoo metrics, perturbed/fuzzed rows, and the
+    all-fallback and empty edge cases."""
+    stores = _zoo3()
+    cs = CorpusStore(tmp_path / "c")
+    for n, st in stores.items():
+        cs.add_scenario(n, st)
+
+    rng = np.random.default_rng(7)
+    streams = [np.concatenate([stores[n].metrics for n in cs.names]),
+               rng.uniform(0.0, 1e9, size=(64, 6)),           # all fallback
+               np.concatenate([stores["a"].metrics,
+                               rng.uniform(0.0, 1e7, size=(32, 6))]),
+               stores["b"].metrics * (1.0 + 1e-7),            # near-key
+               np.zeros((0, 6))]
+    for metrics in streams:
+        cids_v, match_v = cs.index.match_clusters(metrics)
+        cids_r, match_r = cs.index.match_clusters_reference(metrics)
+        np.testing.assert_array_equal(cids_v, cids_r)
+        np.testing.assert_array_equal(match_v, match_r)
+
+    for fn in (cs.index.match_clusters, cs.index.match_clusters_reference):
+        with pytest.raises(ValueError, match="expected"):
+            fn(np.zeros((3, 4)))
+    empty = ClusterIndex.empty()
+    for fn in (empty.match_clusters, empty.match_clusters_reference):
+        with pytest.raises(ValueError, match="empty cluster index"):
+            fn(np.asarray([_V1]))
+
+
+def test_store_mutation_notifications(tmp_path):
+    """add/remove notify subscribers with the affected names after the
+    mutation commits; unsubscribe stops delivery; the manifest
+    fingerprint moves with every mutation and returns to the prior value
+    when the same content set is restored."""
+    cs = CorpusStore(tmp_path / "c")
+    seen: list[tuple] = []
+    cs.subscribe(lambda ev, names: seen.append((ev, names)))
+    fp0 = cs.manifest_fingerprint()
+    cs.add_scenario("a", _store([_V1, _V2]))
+    fp1 = cs.manifest_fingerprint()
+    assert seen == [("add", ("a",))] and fp1 != fp0
+    cs.add_scenarios([("b", _store([_V1, _V3])),
+                      ("c", _store([_V2, _V3]))])
+    assert seen[-1] == ("add", ("b", "c"))
+    cs.remove_scenario("b")
+    assert seen[-1] == ("remove", ("b",))
+    cs.remove_scenario("c")
+    cs.remove_scenario("a")
+    assert cs.manifest_fingerprint() == fp0     # pure function of the set
+    second: list[tuple] = []
+    fn = lambda ev, names: second.append((ev, names))  # noqa: E731
+    cs.subscribe(fn)
+    cs.unsubscribe(fn)
+    cs.unsubscribe(fn)                          # double-unsubscribe is a no-op
+    n = len(seen)
+    cs.add_scenario("a", _store([_V1]))
+    assert len(seen) == n + 1 and second == []  # first still fires, fn gone
+
+
 def test_remove_scenario_o_remaining(tmp_path):
     """Removal drops the scenario's partial-sum table and refolds the
     survivors — no full rebuild (the index never re-touches metrics) and

@@ -111,3 +111,230 @@ def test_service_rejects_empty_store_and_bad_chip(tmp_path):
     cs.add_scenario("a", _store([_V1]))
     with pytest.raises(ValueError, match="unknown chip"):
         ProxyService(cs, chip="v999")
+
+
+def test_query_empty_trace_raises(svc):
+    """Regression: a zero-event trace used to embed to the all-zero
+    vector and 'match' an arbitrary scenario — now it fails loudly, and
+    one bad trace in a batch fails the batch before any stats move."""
+    empty = TraceStore.from_rank_traces([[] for _ in range(4)], {"x": 4})
+    q0 = svc.stats["n_queries"]
+    with pytest.raises(ValueError, match="empty trace"):
+        svc.query(empty)
+    with pytest.raises(ValueError, match=r"batch index 1"):
+        svc.query_batch([_store([_V1]), empty])
+    assert svc.stats["n_queries"] == q0
+
+
+# ---------------------------------------------------------------------------
+# batched queries
+# ---------------------------------------------------------------------------
+
+
+def test_query_batch_matches_sequential(svc):
+    """One vectorized pass answers exactly what N single queries do —
+    names, distances (bitwise), per-scenario distance maps, matched
+    fractions."""
+    novel = tuple(v * 1.7 + 13.0 for v in _V3)
+    traces = [_store([_V3, _V3, _V1]), _store([_V2, _V2], kind="all_gather"),
+              _store([novel, novel, _V3]), _store([_V1, _V2, _V3])]
+    singles = [svc.query(t) for t in traces]
+    batched = svc.query_batch(traces)
+    assert len(batched) == len(singles)
+    for s, b in zip(singles, batched):
+        assert b.name == s.name
+        assert b.distance == s.distance            # same bits
+        assert b.distances == s.distances
+        assert b.matched_frac == s.matched_frac
+        assert b.module is s.module
+        assert b.profile is s.profile              # memoized per (name, chip)
+    assert svc.stats["n_query_batches"] >= 1
+
+
+def test_grammar_term_separates_schedules(tmp_path):
+    """Schedule-divergent but comm/compute-identical workloads land on
+    different scenarios: the interleaved and grouped streams have the
+    same metric multiset and the same comm histogram, so only the
+    grammar-rule-histogram term tells them apart — read from the cached
+    frozen grammars, never by running Sequitur at query time."""
+    inter, grouped = _store([_V1, _V2] * 6), _store([_V1] * 6 + [_V2] * 6)
+    cs = CorpusStore(tmp_path / "corpus")
+    cs.add_scenario("interleaved", inter)
+    cs.add_scenario("grouped", grouped)
+    svc = ProxyService(cs, out_dir=tmp_path / "modules")
+    h0 = svc.stats["n_grammar_hist_hits"]
+    a, b = svc.query_batch([_store([_V1, _V2] * 6),
+                            _store([_V1] * 6 + [_V2] * 6)])
+    assert a.name == "interleaved" and a.distance == pytest.approx(0.0)
+    assert b.name == "grouped" and b.distance == pytest.approx(0.0)
+    assert a.distances["grouped"] > 1e-3           # genuinely separated
+    assert svc.stats["n_grammar_hist_hits"] > h0   # grammars came from cache
+    # an uncached stream contributes a zero grammar term and a miss
+    m0 = svc.stats["n_grammar_hist_misses"]
+    svc.query(_store([_V2, _V1] * 3))
+    assert svc.stats["n_grammar_hist_misses"] > m0
+
+
+# ---------------------------------------------------------------------------
+# mutation coherence: refresh, staleness, selective re-embedding
+# ---------------------------------------------------------------------------
+
+
+def _mutable_svc(tmp_path):
+    cs = CorpusStore(tmp_path / "corpus")
+    cs.add_scenario("heavy", _store([_V3, _V3, _V1]))
+    cs.add_scenario("light", _store([_V2, _V2], kind="all_gather"))
+    cs.add_scenario("mixed", _store([_V1, _V2, _V3]))
+    return cs, ProxyService(cs, out_dir=tmp_path / "modules")
+
+
+def test_refresh_matches_rebuilt_service(tmp_path):
+    """Mutate the store under a subscribed service, query (which
+    triggers the refresh), and pin the refreshed warm state bit-identical
+    to a service constructed from scratch on the mutated store — without
+    a second warm synthesis (``n_warm_synthesis`` stays 1)."""
+    cs, svc = _mutable_svc(tmp_path)
+    svc.query(_store([_V1, _V2, _V3]))             # warm the hot path
+    cs.add_scenario("extra", _store([_V3, _V1], kind="all_to_all"))
+    cs.remove_scenario("light")
+    ans = svc.query(_store([_V3, _V1], kind="all_to_all"))
+    assert ans.name == "extra"
+    assert svc.stats["n_refresh"] == 1
+    assert svc.stats["n_warm_synthesis"] == 1      # refresh is not a re-warm
+
+    rebuilt = ProxyService(cs, out_dir=tmp_path / "modules")
+    assert svc._names == rebuilt._names
+    for n in rebuilt._names:
+        assert np.array_equal(svc.embedding(n), rebuilt.embedding(n))
+    a, b = svc.query(_store([_V1, _V2, _V3])), \
+        rebuilt.query(_store([_V1, _V2, _V3]))
+    assert (a.name, a.distance, a.distances) == (b.name, b.distance,
+                                                 b.distances)
+    # same store handle -> shared result memo -> identical module objects
+    assert a.module is b.module
+    svc.close(), rebuilt.close()
+
+
+def test_refresh_reembeds_only_changed_scenarios(tmp_path):
+    """Appending a duplicate-content scenario doubles every bucket sum
+    and count exactly (IEEE: (2s)/(2c) == s/c bitwise), so cluster reps,
+    coefficient rows, and the survivors' embed keys are unchanged —
+    refresh re-embeds exactly the one new scenario and keeps every
+    profile memo."""
+    cs, svc = _mutable_svc(tmp_path)
+    p_heavy = svc.predict_profile("heavy")
+    p_light = svc.predict_profile("light", "v4")
+    cs.add_scenario("mixed2", _store([_V1, _V2, _V3]))   # content == mixed
+    svc.refresh()
+    assert svc.stats["n_reembedded"] == 1
+    assert svc.stats["n_profile_invalidated"] == 0
+    assert svc.predict_profile("heavy") is p_heavy
+    assert svc.predict_profile("light", "v4") is p_light
+    # removal of an unrelated scenario: survivors again keep their state
+    cs.remove_scenario("mixed2")
+    svc.refresh()
+    assert svc.stats["n_reembedded"] == 1          # nothing new to embed
+    assert svc.predict_profile("heavy") is p_heavy
+    svc.close()
+
+
+def test_unsubscribed_service_fails_loudly_on_drift(tmp_path):
+    """Regression (warm-cache staleness): an opted-out service must not
+    answer from a cache the store has drifted away from — it detects the
+    manifest-fingerprint mismatch and raises instead of serving a
+    removed/stale scenario."""
+    cs, _ = _mutable_svc(tmp_path)
+    svc = ProxyService(cs, out_dir=tmp_path / "modules", subscribe=False)
+    svc.query(_store([_V1, _V2, _V3]))             # fresh: fine
+    cs.remove_scenario("mixed")
+    from repro.serve.proxy_service import StaleServiceError
+    with pytest.raises(StaleServiceError, match="fingerprint drifted"):
+        svc.query(_store([_V1, _V2, _V3]))
+    # an explicit refresh resynchronizes and service resumes
+    svc.refresh()
+    assert svc.query(_store([_V3, _V3, _V1])).name == "heavy"
+
+
+def test_concurrent_batches_interleaved_with_mutation(tmp_path, monkeypatch):
+    """query_batch from several threads, racing store append/remove of a
+    duplicate-content scenario: every query answers, the stats stay
+    consistent, and the cold path never runs — Sequitur and the fit
+    solvers are poisoned throughout (refresh's incremental synthesis must
+    resolve purely from the content-addressed caches)."""
+    cs, svc = _mutable_svc(tmp_path)
+    svc.query(_store([_V1, _V2, _V3]))             # warm before poisoning
+
+    def _boom(*a, **kw):
+        raise AssertionError("cold path entered during concurrent serving")
+
+    monkeypatch.setattr(sequitur, "compress", _boom)
+    monkeypatch.setattr(sequitur.Sequitur, "push", _boom, raising=True)
+    monkeypatch.setattr(proxy_search, "fit_batch", _boom)
+    monkeypatch.setattr(proxy_search, "fit_combination", _boom)
+
+    import threading
+    errors: list[BaseException] = []
+    n_threads, n_batches = 4, 6
+    traces = [_store([_V3, _V3, _V1]), _store([_V1, _V2, _V3])]
+
+    def worker():
+        try:
+            for _ in range(n_batches):
+                for ans in svc.query_batch(traces):
+                    assert ans.name in ("heavy", "mixed", "mixed2")
+        except BaseException as e:                  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    q0 = svc.stats["n_queries"]
+    for t in threads:
+        t.start()
+    for _ in range(3):                              # racing mutations
+        cs.add_scenario("mixed2", _store([_V1, _V2, _V3]))
+        svc.query(_store([_V1, _V2, _V3]))
+        cs.remove_scenario("mixed2")
+    for t in threads:
+        t.join()
+    assert not errors
+    expected = q0 + n_threads * n_batches * len(traces) + 3
+    assert svc.stats["n_queries"] == expected
+    assert svc.stats["n_module_cache_hits"] == svc.stats["n_queries"]
+    assert svc.stats["n_warm_synthesis"] == 1       # never re-warmed
+    assert svc.stats["n_refresh"] >= 1              # mutations were seen
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# nearest-neighbor structure
+# ---------------------------------------------------------------------------
+
+
+def test_ann_mode_matches_brute_force(tmp_path):
+    """Below/above ``ann_threshold`` the service must give the same
+    answer: the ball tree is exact, so names agree and distances are
+    bit-equal; ANN-mode ``distances`` holds only the matched scenario."""
+    cs = CorpusStore(tmp_path / "corpus")
+    base = np.asarray([_V1, _V2, _V3])
+    for i in range(9):
+        vecs = [tuple(v) for v in base * (1.0 + 0.31 * i) + 7.0 * i]
+        cs.add_scenario(f"s{i}", _store(vecs + [_V1 if i % 2 else _V2]))
+    brute = ProxyService(cs, out_dir=tmp_path / "m1", ann_threshold=10 ** 6)
+    ann = ProxyService(cs, out_dir=tmp_path / "m2", ann_threshold=1)
+    assert brute._ann is None and ann._ann is not None
+    queries = [_store([tuple(v) for v in base * (1.0 + 0.31 * i) + 7.0 * i])
+               for i in range(9)] + [_store([_V1, _V1]), _store([_V3])]
+    for rb, ra in zip(brute.query_batch(queries), ann.query_batch(queries)):
+        assert ra.name == rb.name
+        assert ra.distance == rb.distance          # same bits
+        assert set(ra.distances) == {ra.name}      # ANN: matched only
+        assert len(rb.distances) == 9              # brute: all scenarios
+    assert ann.stats["n_ann_queries"] == len(queries)
+    assert brute.stats["n_brute_queries"] == len(queries)
+    brute.close(), ann.close()
+
+
+def test_stage_timers_accumulate(svc):
+    svc.query(_store([_V1, _V2, _V3]))
+    for stage in ("match_ms", "featurize_ms", "distance_ms", "profile_ms"):
+        assert svc.stats[stage] >= 0.0
+    assert svc.stats["match_ms"] + svc.stats["featurize_ms"] > 0.0

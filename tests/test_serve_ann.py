@@ -1,0 +1,78 @@
+"""BallTree exactness: the serve tier's nearest-neighbor structure is
+pinned bit-identical (index and distance) to ``brute_force_nearest``,
+the retained parity oracle — including ties, duplicates, degenerate
+point sets, and leaf-size extremes."""
+import numpy as np
+import pytest
+
+from repro.serve.ann import BallTree, brute_force_nearest
+
+
+def _fuzz_cases():
+    rng = np.random.default_rng(11)
+    for n, d in [(1, 3), (2, 1), (7, 5), (8, 5), (9, 5), (33, 2),
+                 (200, 35), (513, 8)]:
+        yield rng.normal(size=(n, d)), rng.normal(size=(16, d))
+
+
+def test_balltree_matches_brute_force_bitwise():
+    for pts, queries in _fuzz_cases():
+        tree = BallTree(pts)
+        assert len(tree) == len(pts)
+        for q in queries:
+            bi, bd = brute_force_nearest(pts, q)
+            ti, td = tree.query(q)
+            assert ti == bi
+            assert td == bd            # same bits, not just approx
+
+
+def test_balltree_on_unit_normalized_embedding_scale():
+    # serve-tier regime: L2-normalized rows, tiny pairwise gaps
+    rng = np.random.default_rng(3)
+    pts = rng.normal(size=(128, 35))
+    pts /= np.sqrt((pts ** 2).sum(axis=1, keepdims=True))
+    tree = BallTree(pts)
+    for q in pts[::7]:                 # queries that sit exactly on points
+        ti, td = tree.query(q)
+        bi, bd = brute_force_nearest(pts, q)
+        assert (ti, td) == (bi, bd) and td == 0.0
+    for q in rng.normal(size=(32, 35)):
+        assert tree.query(q) == brute_force_nearest(pts, q)
+
+
+def test_balltree_ties_break_to_lowest_index():
+    # duplicated rows at several indices: the first occurrence must win,
+    # exactly as np.argmin does for the oracle
+    base = np.asarray([[0.0, 0.0], [1.0, 1.0], [1.0, 1.0], [0.0, 0.0],
+                       [2.0, -1.0], [1.0, 1.0]])
+    pts = np.tile(base, (4, 1))        # 24 rows, heavy duplication
+    tree = BallTree(pts, leaf_size=2)
+    for q in [np.asarray([1.0, 1.0]), np.asarray([0.0, 0.0]),
+              np.asarray([0.5, 0.5]), np.asarray([10.0, 10.0])]:
+        assert tree.query(q) == brute_force_nearest(pts, q)
+
+
+def test_balltree_leaf_size_invariance():
+    rng = np.random.default_rng(5)
+    pts = rng.normal(size=(50, 4))
+    queries = rng.normal(size=(20, 4))
+    answers = [brute_force_nearest(pts, q) for q in queries]
+    for leaf in (1, 2, 8, 50, 100):
+        tree = BallTree(pts, leaf_size=leaf)
+        assert [tree.query(q) for q in queries] == answers
+
+
+def test_balltree_identical_points():
+    pts = np.ones((17, 6))
+    tree = BallTree(pts)
+    assert tree.query(np.ones(6)) == (0, 0.0)
+    assert tree.query(np.zeros(6)) == brute_force_nearest(pts, np.zeros(6))
+
+
+def test_empty_inputs_raise():
+    with pytest.raises(ValueError, match="non-empty"):
+        BallTree(np.zeros((0, 3)))
+    with pytest.raises(ValueError, match="non-empty"):
+        BallTree(np.zeros(4))          # not (n, d)
+    with pytest.raises(ValueError, match="empty point set"):
+        brute_force_nearest(np.zeros((0, 3)), np.zeros(3))
