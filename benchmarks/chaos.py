@@ -1,0 +1,360 @@
+"""Chaos sweep: deterministic fault injection at every registered store
+touchpoint, with recovery + survivor-set parity hard-asserted per case.
+
+Rows (→ ``artifacts/BENCH_10.json``):
+
+1. **chaos_coverage** — a full store lifecycle (open, ingest, cache
+   saves, scenario/sidecar/shard/index reads) under an *empty* fault
+   plan must consult every point in
+   :data:`repro.core.faults.FAULT_POINTS`.  A registered point the
+   lifecycle never reaches is a hole in the sweep; a store touchpoint
+   that forgot to register never shows up here and fails the paired
+   test tier instead (``tests/test_faults.py``).
+
+2. **chaos_<point>** (one row per registered point) — for each damage
+   kind the point supports (``crash_before`` / ``crash_after`` /
+   ``torn_write`` / ``io_error``): seed a store, install
+   ``FaultPlan.crash_at(point, kind)``, drive the lifecycle until the
+   fault fires (hard-asserted — a case that never fires is a coverage
+   bug), then do what a restarted appender does: reopen from disk,
+   ``verify()``, ``repair()`` if dirty, and assert the repaired store is
+   *clean* and **bit-identical to a from-scratch store over the
+   survivors** — names, content hashes, cluster assignments, and (full
+   runs) the synthesized δ̄ per scenario.
+
+3. **chaos_slow_lock** — contended lock acquisition (``slow_lock``
+   budget of 3) must retry through with bounded backoff and commit;
+   an unbounded hold must surface the
+   :class:`~repro.core.corpus_store.LockTimeoutError` diagnostic.
+
+4. **chaos_worker_death** — an OOM-killed pool worker
+   (``worker_death`` on one item) breaks the pool; the per-item serial
+   fallback must still commit every scenario, bit-identical to a
+   serial-only ingest, with the break counted in ``store.stats``.
+
+``--smoke`` sweeps every point with its most damaging supported kind
+(``torn_write`` where available, else ``crash_before``), cluster-level
+parity only — the CI ``incremental-corpus`` job's chaos leg.  Full runs
+sweep every (point, kind) pair with δ̄ parity and append rows to
+``artifacts/benchmarks.json`` via the shared ``write_artifacts``.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.synthesize_time import write_artifacts
+
+_V = [(2.1e7, 3.3e5, 1.1e7, 8.2e3, 0., 0.),
+      (4.4e6, 1.2e4, 2.2e6, 0., 7.0, 1.0),
+      (9.9e8, 5.5e5, 3.3e7, 1.1e3, 0., 2.0)]
+
+#: the kinds that damage store state (vs delay it); ``slow_lock`` and
+#: ``worker_death`` get dedicated rows because their contract is
+#: "survive without repair", not "repair to parity"
+_DAMAGE_KINDS = ("crash_before", "crash_after", "torn_write", "io_error")
+
+
+def _zoo() -> dict:
+    from repro.core.events import CommEvent, ComputeEvent
+    from repro.core.trace_ir import TraceStore
+
+    def mk(vs):
+        comm = CommEvent("psum", (8,), "float32", ("x",))
+        tr = []
+        for v in vs:
+            tr += [ComputeEvent(tuple(v)), comm]
+        return TraceStore.from_rank_traces([list(tr) for _ in range(4)],
+                                           {"x": 4})
+
+    return {"a": mk([_V[0], _V[1]]), "b": mk([_V[0], _V[2]]),
+            "c": mk([_V[1], _V[2]])}
+
+
+def _fake_fit():
+    from types import SimpleNamespace
+    return SimpleNamespace(x=np.arange(11), predicted=np.zeros(6),
+                           target=np.zeros(6), residual=0.0,
+                           per_metric_rel_err=np.zeros(6), unroll=1)
+
+
+def _seed(root: Path, zoo: dict):
+    """A healthy two-scenario store, committed before any plan installs."""
+    from repro.core.corpus_store import CorpusStore
+
+    cs = CorpusStore(root)
+    cs.add_scenario("a", zoo["a"])
+    cs.add_scenario("b", zoo["b"])
+    return cs
+
+
+def _lifecycle(root: Path, zoo: dict) -> None:
+    """One pass over every registered fault point: open (shard + index
+    reads), ingest (lock, worker front half, scenario/sidecar/shard/index
+    writes), cache saves (fit/grammar/manifest writes), an evicted
+    scenario reload, and an index rebuild from sidecars."""
+    from repro.core.corpus_store import CorpusStore
+
+    cs = CorpusStore(root)                         # read.shard, read.index
+    cs.add_scenario("c", zoo["c"])                 # lock + worker + writes
+    cs.save_fits(table_fingerprint="chaos")        # write.manifest
+    cs.fits.put("k", _fake_fit())
+    cs.save_fits()                                 # write.fit_cache
+    cs.grammars.put("k", {0: [("t", 1, 2)]})
+    cs.save_grammars()                             # write.grammar_cache
+    cs._stores.clear()
+    cs.load_scenario("a")                          # read.scenario_npz
+    (root / "cluster_index.npz").unlink(missing_ok=True)
+    CorpusStore(root)                              # read.sidecar rebuild
+
+
+def _recover(root: Path):
+    """The restarted appender's protocol: reopen from disk, fsck, repair
+    if dirty, and hard-assert the result is clean."""
+    from repro.core.corpus_store import CorpusStore
+
+    cs = CorpusStore(root)
+    repaired = not cs.verify().clean
+    if repaired:
+        cs.repair()
+    rep = cs.verify()
+    assert rep.clean, rep.summary()
+    return cs, repaired
+
+
+def _assert_survivor_parity(cs, zoo: dict, fresh_root: Path,
+                            deep: bool) -> int:
+    """The repaired store must equal a from-scratch store over the same
+    surviving set — names, hashes, cluster derivation, and (deep) the
+    synthesized δ̄ bit for bit."""
+    from repro.core.corpus_store import CorpusStore
+
+    fresh = CorpusStore(fresh_root)
+    for n in cs.names:
+        fresh.add_scenario(n, zoo[n])
+    assert fresh.names == cs.names, (fresh.names, cs.names)
+    for n in cs.names:
+        assert fresh.content_hash(n) == cs.content_hash(n), n
+    ids_a, reps_a = cs.cluster_assignments()
+    ids_b, reps_b = fresh.cluster_assignments()
+    for n in cs.names:
+        np.testing.assert_array_equal(ids_a[n], ids_b[n])
+    assert set(reps_a) == set(reps_b)
+    for cid in reps_a:
+        np.testing.assert_array_equal(reps_a[cid], reps_b[cid])
+    if deep and cs.names:
+        from repro.core.synthesize import synthesize_corpus
+        ci = synthesize_corpus(store=cs)
+        cf = synthesize_corpus(store=fresh)
+        for n in cs.names:
+            fi = ci.results[n].fidelity(sample_ranks=None)
+            ff = cf.results[n].fidelity(sample_ranks=None)
+            np.testing.assert_array_equal(fi.delta, ff.delta)
+    return len(cs.names)
+
+
+def _one_case(point: str, kind: str, deep: bool) -> dict:
+    """Seed → inject one fault → crash → recover → parity."""
+    from repro.core import faults
+    from repro.core.corpus_store import (IngestBatchError,
+                                         ScenarioCorruptError)
+
+    with tempfile.TemporaryDirectory() as td:
+        td = Path(td)
+        root = td / "corpus"
+        zoo = _zoo()
+        _seed(root, zoo)
+
+        plan = faults.FaultPlan.crash_at(point, kind)
+        crashed = False
+        with faults.active_plan(plan):
+            try:
+                _lifecycle(root, zoo)
+            except (faults.InjectedCrash, OSError, IngestBatchError,
+                    ScenarioCorruptError):
+                # ScenarioCorruptError is the typed wrapper an injected
+                # read EIO surfaces as — still a crash outcome here
+                crashed = True
+        assert plan.fired, f"fault {kind} at {point} never fired"
+
+        t0 = time.perf_counter()
+        cs, repaired = _recover(root)
+        t_recover = time.perf_counter() - t0
+        n_survivors = _assert_survivor_parity(cs, zoo, td / "fresh", deep)
+        return {"kind": kind, "crashed": crashed, "repaired": repaired,
+                "n_survivors": n_survivors,
+                "recover_ms": round(t_recover * 1e3, 2)}
+
+
+def _point_row(point: str, kinds, deep: bool) -> dict:
+    cases = [_one_case(point, k, deep) for k in kinds]
+    return {
+        "program": f"chaos_{point}",
+        "kinds": [c["kind"] for c in cases],
+        "n_cases": len(cases),
+        "n_fired": len(cases),              # hard-asserted per case
+        "n_repaired": sum(c["repaired"] for c in cases),
+        "min_survivors": min(c["n_survivors"] for c in cases),
+        "recover_ms_max": max(c["recover_ms"] for c in cases),
+        "delta_parity": "deep" if deep else "cluster",
+        "survivor_parity": True,            # hard-asserted per case
+    }
+
+
+def _coverage_row() -> dict:
+    """Every registered point must be consulted by the lifecycle — an
+    empty plan records hits without firing anything."""
+    from repro.core import faults
+
+    with tempfile.TemporaryDirectory() as td:
+        root = Path(td) / "corpus"
+        zoo = _zoo()
+        _seed(root, zoo)
+        plan = faults.FaultPlan([])
+        with faults.active_plan(plan):
+            _lifecycle(root, zoo)
+        hit = {p for p, _ in plan.hits}
+        missing = set(faults.registered_points()) - hit
+        assert not missing, f"points never consulted: {sorted(missing)}"
+        assert not plan.fired
+        return {"program": "chaos_coverage",
+                "n_points": len(faults.registered_points()),
+                "n_consulted": len(hit & set(faults.registered_points())),
+                "all_points_consulted": True}
+
+
+def _slow_lock_row() -> dict:
+    from repro.core import faults
+    from repro.core.corpus_store import (CorpusStore, LockTimeoutError,
+                                         _file_lock)
+
+    with tempfile.TemporaryDirectory() as td:
+        root = Path(td) / "corpus"
+        zoo = _zoo()
+        # bounded contention: three failed attempts, then the lock wins
+        # and the ingest commits
+        plan = faults.FaultPlan([faults.FaultSpec("lock.acquire",
+                                                  "slow_lock", count=3)])
+        t0 = time.perf_counter()
+        with faults.active_plan(plan):
+            cs = CorpusStore(root)
+            cs.add_scenario("a", zoo["a"])
+        t_through = time.perf_counter() - t0
+        assert cs.names == ["a"]
+        n_retries = len(plan.fired)
+
+        # unbounded hold: the timeout diagnostic, not a hang
+        plan = faults.FaultPlan([faults.FaultSpec("lock.acquire",
+                                                  "slow_lock",
+                                                  count=10_000)])
+        diagnosed = False
+        with faults.active_plan(plan):
+            try:
+                with _file_lock(Path(td) / "x.lock", timeout=0.05):
+                    pass
+            except LockTimeoutError as e:
+                diagnosed = e.attempts > 1
+        assert diagnosed
+        return {"program": "chaos_slow_lock",
+                "n_contended_attempts": n_retries,
+                "retried_through_ms": round(t_through * 1e3, 2),
+                "committed_under_contention": True,
+                "timeout_diagnostic": True}
+
+
+def _fork_available() -> bool:
+    import multiprocessing as mp
+    return "fork" in mp.get_all_start_methods()
+
+
+def _worker_death_row() -> dict:
+    from repro.core import faults
+    from repro.core.corpus_store import CorpusStore
+
+    with tempfile.TemporaryDirectory() as td:
+        td = Path(td)
+        zoo = _zoo()
+        items = sorted(zoo.items())
+        n_workers = 2 if _fork_available() else 0
+        plan = faults.FaultPlan([faults.FaultSpec("worker.ingest",
+                                                  "worker_death",
+                                                  match="b")])
+        t0 = time.perf_counter()
+        with faults.active_plan(plan):
+            cs = CorpusStore(td / "corpus")
+            cs.add_scenarios(items, n_workers=n_workers)
+        t_ingest = time.perf_counter() - t0
+
+        ser = CorpusStore(td / "serial")
+        ser.add_scenarios(items, n_workers=0)
+        assert cs.names == ser.names
+        for n in cs.names:
+            assert cs.content_hash(n) == ser.content_hash(n), n
+        if n_workers:
+            assert cs.stats["n_pool_breaks"] >= 1, cs.stats
+        return {"program": "chaos_worker_death",
+                "n_workers": n_workers,
+                "n_pool_breaks": cs.stats["n_pool_breaks"],
+                "n_serial_retries": cs.stats["n_serial_retries"],
+                "ingest_ms": round(t_ingest * 1e3, 2),
+                "all_items_committed": True,
+                "bit_identical_to_serial": True}
+
+
+def _smoke_kind(point: str) -> str:
+    """The most damaging kind each point supports: a torn on-disk write
+    where possible, else a pre-op crash."""
+    from repro.core import faults
+    return ("torn_write" if "torn_write" in faults.FAULT_POINTS[point]
+            else "crash_before")
+
+
+def run() -> list[dict]:
+    from repro.core import faults
+
+    rows = [_coverage_row()]
+    for point in faults.registered_points():
+        kinds = [k for k in faults.FAULT_POINTS[point]
+                 if k in _DAMAGE_KINDS]
+        rows.append(_point_row(point, kinds, deep=True))
+    rows += [_slow_lock_row(), _worker_death_row()]
+    return rows
+
+
+def smoke() -> None:
+    """CI chaos smoke: every registered point, one most-damaging fault
+    each, recovery + cluster-level survivor parity hard-asserted."""
+    from repro.core import faults
+
+    cov = _coverage_row()
+    print(", ".join(f"{k}={v}" for k, v in cov.items()))
+
+    for point in faults.registered_points():
+        row = _point_row(point, [_smoke_kind(point)], deep=False)
+        print(", ".join(f"{k}={v}" for k, v in row.items()))
+        assert row["survivor_parity"], row
+
+    lock = _slow_lock_row()
+    print(", ".join(f"{k}={v}" for k, v in lock.items()))
+    worker = _worker_death_row()
+    print(", ".join(f"{k}={v}" for k, v in worker.items()))
+    print("chaos smoke OK")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="every point, one most-damaging fault each, "
+                         "cluster-level parity hard asserts (CI)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        rows = run()
+        for r in rows:
+            print(", ".join(f"{k}={v}" for k, v in r.items()))
+        write_artifacts(rows, snapshot="BENCH_10.json", suite="chaos")

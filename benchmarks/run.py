@@ -17,7 +17,7 @@ from pathlib import Path  # noqa: E402
 
 SUITES = ("compression_table", "minime_compare", "replay_time",
           "synthesize_time", "codegen_parity", "portability", "proxy_dryrun",
-          "corpus_scale")
+          "corpus_scale", "chaos")
 
 
 def main() -> None:
@@ -59,6 +59,10 @@ def main() -> None:
         from benchmarks.synthesize_time import write_artifacts
         write_artifacts(results["corpus_scale"], snapshot="BENCH_9.json",
                         suite="corpus_scale", out_dir=out.parent)
+    if "chaos" in results:
+        from benchmarks.synthesize_time import write_artifacts
+        write_artifacts(results["chaos"], snapshot="BENCH_10.json",
+                        suite="chaos", out_dir=out.parent)
 
 
 if __name__ == "__main__":

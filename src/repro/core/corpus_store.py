@@ -71,11 +71,13 @@ import json
 import os
 import tempfile
 import threading
+import time
 from pathlib import Path
 from typing import Iterator, Sequence
 
 import numpy as np
 
+from repro.core import faults
 from repro.core.events import (
     N_METRICS, combine_bucket_tables, quantize_metrics,
     scenario_bucket_table,
@@ -97,6 +99,12 @@ _GRAMMARS = "grammar_cache.json"
 _SCENARIO_DIR = "scenarios"
 _SHARD_DIR = "shards"
 _LOCK_DIR = "locks"
+_QUARANTINE_DIR = "quarantine"
+_META = "store.meta.json"
+
+#: how long a shard/header lock acquisition retries (with exponential
+#: backoff) before raising :class:`LockTimeoutError`
+LOCK_TIMEOUT = 30.0
 
 
 class ToleranceMismatchError(ValueError):
@@ -111,17 +119,115 @@ class IndexFormatError(ValueError):
     once (the v1 → v2 migration path)."""
 
 
+class ScenarioCorruptError(RuntimeError):
+    """A scenario artifact (``scenarios/<name>.npz`` or its bucket
+    sidecar, where the metrics fallback is also unreadable) failed to
+    load.  Typed so callers — and :meth:`CorpusStore.repair` — can
+    identify the culprit instead of unwinding on a raw
+    ``zipfile``/``OSError`` from deep inside iteration or synthesis."""
+
+    def __init__(self, name: str, path, cause: BaseException):
+        self.name = name
+        self.path = str(path)
+        self.cause = cause
+        super().__init__(
+            f"scenario {name!r} artifact {path} is unreadable "
+            f"({type(cause).__name__}: {cause}); run "
+            "CorpusStore.verify()/repair() to quarantine it")
+
+
+class ShardCorruptError(RuntimeError):
+    """A shard manifest file is unparseable (torn write / bit rot).  The
+    store opens with the shard recorded in :attr:`CorpusStore.
+    shard_errors` — synthesis and serving refuse to run until
+    :meth:`CorpusStore.repair` reconstructs the shard's entries from the
+    surviving scenario artifacts."""
+
+    def __init__(self, path, cause: BaseException):
+        self.path = str(path)
+        self.cause = cause
+        super().__init__(
+            f"shard manifest {path} is unreadable "
+            f"({type(cause).__name__}: {cause}); run "
+            "CorpusStore.repair() to reconstruct it from the scenario "
+            "artifacts")
+
+
+class LockTimeoutError(TimeoutError):
+    """Could not acquire a store lock inside the bounded retry window.
+    Carries the lock path and attempt count so the diagnostic names the
+    stuck writer's lock file instead of hanging forever."""
+
+    def __init__(self, path, timeout: float, attempts: int):
+        self.path = str(path)
+        self.timeout = timeout
+        self.attempts = attempts
+        super().__init__(
+            f"could not acquire corpus lock {path} within {timeout:.1f}s "
+            f"({attempts} attempts with backoff) — another writer is "
+            "stuck or died while holding it; if no writer process is "
+            "alive the flock is already released and this indicates "
+            "pathological contention")
+
+
+@dataclasses.dataclass
+class IngestItemError:
+    """One scenario's typed ingest failure (after the serial retry)."""
+
+    name: str
+    error: BaseException
+    retried: bool = False
+
+    def __str__(self) -> str:
+        return (f"{self.name}: {type(self.error).__name__}: {self.error}"
+                + (" (after serial retry)" if self.retried else ""))
+
+
+class IngestBatchError(RuntimeError):
+    """Some items of an :meth:`CorpusStore.add_scenarios` batch failed —
+    **after** the survivors committed.  Per-item fault isolation: a dead
+    worker or one corrupt input costs that item, never the batch.
+    ``hashes`` holds the committed scenarios, ``errors`` the typed
+    per-item failures."""
+
+    def __init__(self, errors: list[IngestItemError], hashes: dict):
+        self.errors = list(errors)
+        self.hashes = dict(hashes)
+        names = [e.name for e in self.errors]
+        super().__init__(
+            f"{len(self.errors)} of {len(self.errors) + len(self.hashes)} "
+            f"scenarios failed ingest: {names} "
+            f"({len(self.hashes)} committed); see .errors for causes")
+
+
 # ---------------------------------------------------------------------------
 # crash-safe writes + cross-process locking
 # ---------------------------------------------------------------------------
 
 
-def _atomic_npz_write(path: Path, writer) -> None:
+def _finish_atomic(tmp: str, path: Path, spec, site: str) -> None:
+    """Shared tail of every atomic-write site: implement a ``torn_write``
+    fault (the non-atomic clobber the renamer exists to prevent — injected
+    anyway so fsck is exercised against real damage), commit the rename,
+    then a ``crash_after`` fault."""
+    if spec is not None and spec.kind == "torn_write":
+        data = Path(tmp).read_bytes()
+        os.unlink(tmp)
+        faults.apply_torn_write(path, data, site, str(path))
+    os.replace(tmp, path)
+    if spec is not None and spec.kind == "crash_after":
+        raise faults.InjectedCrash(site, f"after commit of {path}")
+
+
+def _atomic_npz_write(path: Path, writer, site: str = "write.index") -> None:
     """Write-then-rename so a crash (or SIGKILL) mid-write never
     truncates the live file.  The tmp name is unique per writer
     (``mkstemp``), so two processes racing on the same target each
-    rename a complete file — last one wins, both are valid."""
+    rename a complete file — last one wins, both are valid.  ``site``
+    names the registered fault point (:mod:`repro.core.faults`) this
+    write arms — inert unless a plan is installed."""
     path = Path(path)
+    spec = faults.arm(site, path)
     fd, tmp = tempfile.mkstemp(dir=str(path.parent),
                                prefix=path.name + ".", suffix=".tmp")
     try:
@@ -129,19 +235,21 @@ def _atomic_npz_write(path: Path, writer) -> None:
             writer(f)
             f.flush()
             os.fsync(f.fileno())
-        os.replace(tmp, path)
+        _finish_atomic(tmp, path, spec, site)
     except BaseException:
         with contextlib.suppress(OSError):
             os.unlink(tmp)
         raise
 
 
-def _atomic_json_write(path: Path, obj, sort_keys: bool = True) -> None:
+def _atomic_json_write(path: Path, obj, sort_keys: bool = True,
+                       site: str = "write.manifest") -> None:
     """JSON twin of :func:`_atomic_npz_write` — same contract: readers
     (and reopeners after a kill) observe either the old or the new
     manifest, never a truncated one.  ``sort_keys=False`` for payloads
     whose dict order is semantic (the grammar cache)."""
     path = Path(path)
+    spec = faults.arm(site, path)
     fd, tmp = tempfile.mkstemp(dir=str(path.parent),
                                prefix=path.name + ".", suffix=".tmp")
     try:
@@ -149,23 +257,71 @@ def _atomic_json_write(path: Path, obj, sort_keys: bool = True) -> None:
             json.dump(obj, f, indent=1, sort_keys=sort_keys)
             f.flush()
             os.fsync(f.fileno())
-        os.replace(tmp, path)
+        _finish_atomic(tmp, path, spec, site)
     except BaseException:
         with contextlib.suppress(OSError):
             os.unlink(tmp)
         raise
 
 
+def _atomic_scenario_write(path: Path, tstore: TraceStore) -> Path:
+    """Atomic form of ``TraceStore.save`` for the corpus's scenario npz
+    files: a killed ingest must never leave a truncated scenario behind
+    a committed shard entry (the sidecar-before-entry ordering covers
+    the entry; this covers the artifact itself)."""
+    path = Path(path)
+    spec = faults.arm("write.scenario_npz", path)
+    # suffix keeps .npz so TraceStore.save doesn't append another one
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent),
+                               prefix=path.name + ".", suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        tstore.save(tmp)
+        with open(tmp, "rb") as f:
+            os.fsync(f.fileno())
+        _finish_atomic(tmp, path, spec, "write.scenario_npz")
+    except BaseException:
+        with contextlib.suppress(OSError):
+            os.unlink(tmp)
+        raise
+    return path
+
+
+def _acquire_flock(f, path: Path, timeout: float) -> None:
+    """Bounded lock acquisition: non-blocking attempts with exponential
+    backoff instead of an unbounded ``LOCK_EX`` wait, so a writer that
+    died (or hung) holding a lock surfaces as a
+    :class:`LockTimeoutError` diagnostic, never an eternal hang."""
+    deadline = time.monotonic() + timeout
+    delay = 1e-3
+    attempts = 0
+    while True:
+        attempts += 1
+        spec = faults.arm("lock.acquire", path)
+        try:
+            if spec is not None and spec.kind == "slow_lock":
+                raise BlockingIOError(
+                    f"injected lock contention on {path}")
+            fcntl.flock(f.fileno(), fcntl.LOCK_EX | fcntl.LOCK_NB)
+            return
+        except BlockingIOError:
+            if time.monotonic() >= deadline:
+                raise LockTimeoutError(path, timeout, attempts) from None
+            time.sleep(delay)
+            delay = min(delay * 2, 0.05)
+
+
 @contextlib.contextmanager
-def _file_lock(path: Path):
+def _file_lock(path: Path, timeout: float = LOCK_TIMEOUT):
     """Exclusive advisory lock serializing cross-process read-modify-
-    write of one shard manifest (or the header).  Degrades to no locking
+    write of one shard manifest (or the header), acquired with bounded
+    retry + backoff (:func:`_acquire_flock`).  Degrades to no locking
     where ``fcntl`` is unavailable — single-appender only there."""
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     with open(path, "a+") as f:
         if fcntl is not None:
-            fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            _acquire_flock(f, path, timeout)
         try:
             yield
         finally:
@@ -219,11 +375,12 @@ class ScenarioBuckets:
                      counts=self.counts, local_ids=self.local_ids,
                      meta=np.asarray(meta))
 
-        _atomic_npz_write(Path(path), write)
+        _atomic_npz_write(Path(path), write, site="write.sidecar")
 
     @classmethod
     def load(cls, path, expected_rel_tol: float | None = None,
              ) -> "ScenarioBuckets":
+        faults.crash_point("read.sidecar", path)
         with np.load(path) as z:
             meta = json.loads(str(z["meta"]))
             if meta.get("version") != _INDEX_VERSION:
@@ -521,7 +678,7 @@ class ClusterIndex:
             np.savez(f, key_extents=kext, row_extents=rext,
                      meta=np.asarray(meta), **cat)
 
-        _atomic_npz_write(Path(path), write)
+        _atomic_npz_write(Path(path), write, site="write.index")
 
     @classmethod
     def load(cls, path, expected_rel_tol: float | None = None,
@@ -531,6 +688,7 @@ class ClusterIndex:
         :class:`ToleranceMismatchError` when the artifact's ``rel_tol``
         disagrees with ``expected_rel_tol`` (loud, never a silent
         re-cluster)."""
+        faults.crash_point("read.index", path)
         with np.load(path) as z:
             meta = json.loads(str(z["meta"]))
             if meta.get("version") != _INDEX_VERSION:
@@ -612,7 +770,7 @@ class FitCache:
                 rel_err=np.stack([fr.per_metric_rel_err for fr in frs]),
                 unroll=np.asarray([fr.unroll for fr in frs], dtype=np.int64))
 
-        _atomic_npz_write(Path(path), write)
+        _atomic_npz_write(Path(path), write, site="write.fit_cache")
 
     @classmethod
     def load(cls, path) -> "FitCache":
@@ -719,7 +877,8 @@ class GrammarCache:
                                    for rid, body in rules.items()}
                                for k, rules in self._rules.items()}}
         # sort_keys=False: rid order is semantic (see comment above)
-        _atomic_json_write(path, payload, sort_keys=False)
+        _atomic_json_write(path, payload, sort_keys=False,
+                           site="write.grammar_cache")
         self.dirty = False
 
     @classmethod
@@ -760,8 +919,9 @@ def _ingest_front_half(root, name: str, src, rel_tol: float,
     the pipe).  Returns ``(name, manifest_entry, buckets, grammar_rules)``
     for the parent to merge under the shard locks."""
     root = Path(root)
+    faults.crash_point("worker.ingest", name)
     store = src if isinstance(src, TraceStore) else TraceStore.load(src)
-    path = store.save(root / _SCENARIO_DIR / f"{name}.npz")
+    path = _atomic_scenario_write(root / _SCENARIO_DIR / f"{name}.npz", store)
     chash = store.content_hash()
     sb = ScenarioBuckets.from_metrics(store.metrics, rel_tol)
     sb.save(root / _SCENARIO_DIR / f"{name}.buckets.npz")
@@ -827,10 +987,21 @@ class CorpusStore:
         #: refreshes (cross-process safety stays with the shard flocks)
         self.lock = threading.RLock()
         self._subscribers: list = []
+        #: scenarios whose artifacts failed to load at open (corrupt npz
+        #: with no healthy sidecar): excluded from the cluster index,
+        #: poison synthesis until :meth:`repair` quarantines them
+        self.damaged: dict[str, ScenarioCorruptError] = {}
+        #: shard manifests that failed to parse at open: entries absent
+        #: from this handle's view until :meth:`repair` reconstructs them
+        self.shard_errors: dict[int, ShardCorruptError] = {}
+        #: operational counters (pool breaks, serial retries, ...)
+        self.stats: dict[str, int] = {"n_pool_breaks": 0,
+                                      "n_serial_retries": 0,
+                                      "n_ingest_errors": 0}
 
         mpath = self.root / _MANIFEST
         if mpath.exists():
-            manifest = json.loads(mpath.read_text())
+            manifest = self._read_header(mpath)
             version = manifest.get("version")
             if version not in (1, _MANIFEST_VERSION):
                 raise ValueError(
@@ -848,7 +1019,7 @@ class CorpusStore:
                         f"corpus at {self.root} has {manifest['n_shards']} "
                         f"shards, asked to open with {n_shards}")
                 self.manifest = manifest
-                self._shards = [self._read_shard(self._shard_path(i))
+                self._shards = [self._read_shard_safe(i)
                                 for i in range(self.n_shards)]
         else:
             self.manifest = {"version": _MANIFEST_VERSION,
@@ -857,6 +1028,7 @@ class CorpusStore:
                              "table_fingerprint": None}
             self._shards = [[] for _ in range(self.n_shards)]
             self._write_manifest()
+        self._write_meta()
 
         seen: set[str] = set()
         for e in self._iter_entries():
@@ -886,6 +1058,41 @@ class CorpusStore:
 
     # -- open-time migration / healing -----------------------------------------
 
+    def _read_header(self, mpath: Path) -> dict:
+        """Read the manifest header, recovering a torn one from the
+        immutable ``store.meta.json`` twin (written at creation; holds
+        only the never-changing fields, so recovery loses at most the
+        ``table_fingerprint`` observability field)."""
+        try:
+            return json.loads(mpath.read_text())
+        except ValueError as e:
+            meta_path = self.root / _META
+            if not meta_path.exists():
+                raise ValueError(
+                    f"corpus manifest {mpath} is unreadable "
+                    f"({type(e).__name__}: {e}) and no {_META} recovery "
+                    "twin exists (pre-robustness store?)") from e
+            recovered = json.loads(meta_path.read_text())
+            manifest = {"version": recovered["version"],
+                        "rel_tol": recovered["rel_tol"],
+                        "n_shards": recovered["n_shards"],
+                        "table_fingerprint": None}
+            _atomic_json_write(mpath, manifest)   # heal in place
+            return manifest
+
+    def _write_meta(self) -> None:
+        """Persist (once) the immutable header twin used by
+        :meth:`_read_header` to recover from a torn ``manifest.json``.
+        Pre-existing stores heal it on first open.  Plain write, no
+        fault point: it is write-once and recovery-only."""
+        meta_path = self.root / _META
+        if not meta_path.exists():
+            tmp = meta_path.with_suffix(".tmp")
+            tmp.write_text(json.dumps(
+                {"version": _MANIFEST_VERSION, "rel_tol": self.rel_tol,
+                 "n_shards": self.n_shards}, sort_keys=True))
+            os.replace(tmp, meta_path)
+
     def _migrate_v1(self, manifest: dict) -> None:
         """One-time v1 → v2 migration: reshard the flat scenario list and
         adopt the canonical order.  The v1 index npz fails the version
@@ -906,7 +1113,8 @@ class CorpusStore:
             if shard:
                 _atomic_json_write(self._shard_path(i),
                                    {"version": _MANIFEST_VERSION,
-                                    "entries": shard})
+                                    "entries": shard},
+                                   site="write.shard")
         self._write_manifest()
 
     def _load_or_rebuild_index(self) -> ClusterIndex:
@@ -917,7 +1125,12 @@ class CorpusStore:
         gone), so the store self-heals instead of silently serving
         assignments inconsistent with its contents.  A *tolerance
         mismatch* is not healed: it raises
-        :class:`ToleranceMismatchError` loudly."""
+        :class:`ToleranceMismatchError` loudly.
+
+        A scenario whose sidecar *and* npz are both unreadable cannot be
+        healed: it is recorded in :attr:`damaged` and excluded from the
+        index (synthesis refuses to run until :meth:`repair` quarantines
+        it) — a double fault must not brick ``open``."""
         ipath = self.root / _INDEX
         names = self.names
         idx: ClusterIndex | None = None
@@ -937,26 +1150,40 @@ class CorpusStore:
         for n in names:
             if n in tables:
                 continue
-            spath = self._sidecar_path(n)
-            sb: ScenarioBuckets | None = None
-            if spath.exists():
-                try:
-                    sb = ScenarioBuckets.load(spath,
-                                              expected_rel_tol=self.rel_tol)
-                except ToleranceMismatchError:
-                    raise
-                except Exception:
-                    sb = None
-            if sb is None:
-                sb = ScenarioBuckets.from_metrics(self._metrics_of(n),
-                                                  self.rel_tol)
-                sb.save(spath)        # heal the sidecar (v1 → v2 migration)
-            tables[n] = sb
+            sb = self._sidecar_or_rebuild(n)
+            if sb is not None:
+                tables[n] = sb
+        healthy = [n for n in names if n in tables]
         idx = ClusterIndex(rel_tol=self.rel_tol, tables=tables,
-                           order=list(names))
-        if names:
+                           order=healthy)
+        if healthy and not self.damaged:
             idx.save(ipath)
         return idx
+
+    def _sidecar_or_rebuild(self, n: str) -> ScenarioBuckets | None:
+        """One scenario's bucket table: load the sidecar, else rebuild it
+        from the scenario's metrics (healing the sidecar on disk).  When
+        the npz is also unreadable, record the scenario in
+        :attr:`damaged` and return ``None``."""
+        spath = self._sidecar_path(n)
+        sb: ScenarioBuckets | None = None
+        if spath.exists():
+            try:
+                sb = ScenarioBuckets.load(spath,
+                                          expected_rel_tol=self.rel_tol)
+            except ToleranceMismatchError:
+                raise
+            except Exception:
+                sb = None
+        if sb is None:
+            try:
+                metrics = self._metrics_of(n)
+            except ScenarioCorruptError as e:
+                self.damaged[n] = e
+                return None
+            sb = ScenarioBuckets.from_metrics(metrics, self.rel_tol)
+            sb.save(spath)            # heal the sidecar
+        return sb
 
     # -- basic accessors -------------------------------------------------------
 
@@ -1028,11 +1255,28 @@ class CorpusStore:
     def _read_shard(path: Path) -> list[dict]:
         if not path.exists():
             return []
-        data = json.loads(path.read_text())
+        faults.crash_point("read.shard", path)
+        try:
+            data = json.loads(path.read_text())
+        except (OSError, ValueError) as e:
+            # torn write / bit rot: typed so open can record it and
+            # repair() can reconstruct the shard from scenario artifacts
+            raise ShardCorruptError(path, e) from e
         if data.get("version") != _MANIFEST_VERSION:
             raise ValueError(f"unsupported shard manifest version "
                              f"{data.get('version')!r} in {path}")
         return sorted(data["entries"], key=_entry_sort_key)
+
+    def _read_shard_safe(self, i: int) -> list[dict]:
+        """Open-time shard read that records (instead of raising) a
+        :class:`ShardCorruptError` in :attr:`shard_errors`, so a torn
+        shard manifest leaves the store openable — and repairable —
+        rather than bricked."""
+        try:
+            return self._read_shard(self._shard_path(i))
+        except ShardCorruptError as e:
+            self.shard_errors[i] = e
+            return []
 
     def _append_entry(self, entry: dict) -> None:
         """Commit one scenario entry to its shard: flock the shard,
@@ -1047,7 +1291,8 @@ class CorpusStore:
             cur.append(entry)
             cur.sort(key=_entry_sort_key)
             _atomic_json_write(self._shard_path(i),
-                               {"version": _MANIFEST_VERSION, "entries": cur})
+                               {"version": _MANIFEST_VERSION, "entries": cur},
+                               site="write.shard")
         self._shards[i] = cur
 
     def _remove_entry(self, entry: dict) -> None:
@@ -1056,7 +1301,8 @@ class CorpusStore:
             cur = [e for e in self._read_shard(self._shard_path(i))
                    if e["name"] != entry["name"]]
             _atomic_json_write(self._shard_path(i),
-                               {"version": _MANIFEST_VERSION, "entries": cur})
+                               {"version": _MANIFEST_VERSION, "entries": cur},
+                               site="write.shard")
         self._shards[i] = cur
 
     # -- mutation notifications ------------------------------------------------
@@ -1137,6 +1383,45 @@ class CorpusStore:
             return self._add_scenarios_locked(items, n_workers, threshold,
                                               warm_grammars)
 
+    def _pool_front_half(self, items, n_workers, threshold, warm_grammars,
+                         results: dict, errors: dict) -> None:
+        """Fan :func:`_ingest_front_half` across a process pool with
+        per-future fault isolation: one worker dying (a real
+        ``BrokenProcessPool`` — e.g. OOM-killed) or one corrupt input
+        fails only its own items, never the batch.  Failed items land in
+        ``errors`` for the caller's serial retry."""
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
+        from concurrent.futures.process import BrokenProcessPool
+        method = ("fork" if "fork" in mp.get_all_start_methods()
+                  else "spawn")
+        ctx = mp.get_context(method)
+        pool_broke = False
+        with ProcessPoolExecutor(
+                max_workers=min(n_workers, len(items)),
+                mp_context=ctx) as ex:
+            futs = [(name, ex.submit(_ingest_front_half, str(self.root),
+                                     name,
+                                     src if isinstance(src, TraceStore)
+                                     else str(src),
+                                     self.rel_tol, threshold, warm_grammars))
+                    for name, src in items]
+            for name, fut in futs:
+                try:
+                    results[name] = fut.result()
+                except BrokenProcessPool as e:
+                    # the pool is dead: every unfinished future fails
+                    # with this — count the break once, queue the items
+                    # for the serial retry
+                    if not pool_broke:
+                        pool_broke = True
+                        self.stats["n_pool_breaks"] += 1
+                    errors[name] = e
+                except (Exception, faults.InjectedCrash) as e:
+                    # InjectedCrash here came over the pipe from a
+                    # *child* — a worker crash, not this process's
+                    errors[name] = e
+
     def _add_scenarios_locked(self, items, n_workers, threshold,
                               warm_grammars) -> dict[str, str]:
         items = [(name, src) for name, src in items]
@@ -1147,38 +1432,59 @@ class CorpusStore:
         if len({n for n, _ in items}) != len(items):
             raise ValueError("duplicate scenario names in batch")
 
+        results: dict[str, tuple] = {}
+        errors: dict[str, BaseException] = {}
         if n_workers and len(items) > 1:
-            import multiprocessing as mp
-            from concurrent.futures import ProcessPoolExecutor
-            method = ("fork" if "fork" in mp.get_all_start_methods()
-                      else "spawn")
-            ctx = mp.get_context(method)
-            with ProcessPoolExecutor(
-                    max_workers=min(n_workers, len(items)),
-                    mp_context=ctx) as ex:
-                futs = [ex.submit(_ingest_front_half, str(self.root), name,
-                                  src if isinstance(src, TraceStore)
-                                  else str(src),
-                                  self.rel_tol, threshold, warm_grammars)
-                        for name, src in items]
-                results = [f.result() for f in futs]
+            self._pool_front_half(items, n_workers, threshold, warm_grammars,
+                                  results, errors)
         else:
-            results = [_ingest_front_half(self.root, name, src, self.rel_tol,
-                                          threshold, warm_grammars)
-                       for name, src in items]
+            # serial path: Exception costs the item (retried below);
+            # InjectedCrash propagates — it simulates THIS process dying
+            for name, src in items:
+                try:
+                    results[name] = _ingest_front_half(
+                        self.root, name, src, self.rel_tol, threshold,
+                        warm_grammars)
+                except Exception as e:
+                    errors[name] = e
 
+        # one serial retry per failed item (transient faults — a dead
+        # worker, flaky EIO — clear; deterministic ones fail again and
+        # are reported as typed per-item errors)
+        item_errors: list[IngestItemError] = []
+        by_name = dict(items)
+        for name in list(errors):
+            self.stats["n_serial_retries"] += 1
+            try:
+                results[name] = _ingest_front_half(
+                    self.root, name, by_name[name], self.rel_tol, threshold,
+                    warm_grammars)
+                del errors[name]
+            except Exception as e:
+                item_errors.append(IngestItemError(name, e, retried=True))
+
+        # commit the survivors (canonical order washes out which failed)
         hashes: dict[str, str] = {}
-        for name, entry, sb, rules in results:
+        for name, src in items:
+            r = results.get(name)
+            if r is None:
+                continue
+            _, entry, sb, rules = r
             self._append_entry(entry)
             self.index.ingest_table(name, sb)
             self.grammars.merge(rules)
             hashes[name] = entry["content_hash"]
-        for name, src in items:
             if isinstance(src, TraceStore):
                 self._stores[name] = src
         self._finish_mutation()
         self.save_grammars()
-        self._notify("add", [name for name, _ in items])
+        if hashes:
+            self._notify("add", list(hashes))
+        if item_errors:
+            self.stats["n_ingest_errors"] += len(item_errors)
+            # after commit: per-item fault isolation means the failures
+            # cost their items, never the batch
+            raise IngestBatchError(item_errors, hashes)
         return hashes
 
     def remove_scenario(self, name: str) -> None:
@@ -1202,14 +1508,27 @@ class CorpusStore:
         cached = self._stores.get(name)
         if cached is not None:
             return cached.metrics
-        cols = TraceStore.load_columns(self.root / self._entry(name)["file"],
-                                       ["metrics"])
+        path = self.root / self._entry(name)["file"]
+        try:
+            # fault point inside the try: an injected EIO is typed like a
+            # real one (InjectedCrash is a BaseException and still escapes)
+            faults.crash_point("read.scenario_npz", path)
+            cols = TraceStore.load_columns(path, ["metrics"])
+        except Exception as e:
+            raise ScenarioCorruptError(name, path, e) from e
         return cols["metrics"]
 
     def load_scenario(self, name: str) -> TraceStore:
         st = self._stores.get(name)
         if st is None:
-            st = TraceStore.load(self.root / self._entry(name)["file"])
+            path = self.root / self._entry(name)["file"]
+            try:
+                faults.crash_point("read.scenario_npz", path)
+                st = TraceStore.load(path)
+            except Exception as e:
+                # typed: a truncated npz must name its scenario, not
+                # unwind as a raw zipfile/OSError mid-synthesis
+                raise ScenarioCorruptError(name, path, e) from e
             self._stores[name] = st
         return st
 
@@ -1244,24 +1563,13 @@ class CorpusStore:
             if n not in current:
                 self.index.remove(n)
         for n in names:
-            if n in self.index.tables:
+            if n in self.index.tables or n in self.damaged:
                 continue
-            sb: ScenarioBuckets | None = None
-            spath = self._sidecar_path(n)
-            if spath.exists():
-                try:
-                    sb = ScenarioBuckets.load(spath,
-                                              expected_rel_tol=self.rel_tol)
-                except ToleranceMismatchError:
-                    raise
-                except Exception:
-                    sb = None
-            if sb is None:
-                sb = ScenarioBuckets.from_metrics(self._metrics_of(n),
-                                                  self.rel_tol)
-                sb.save(spath)
-            self.index.ingest_table(n, sb)
-        self.index.set_order(names)
+            sb = self._sidecar_or_rebuild(n)
+            if sb is not None:
+                self.index.ingest_table(n, sb)
+        self.index.set_order([n for n in names
+                              if n in self.index.tables])
         self.index.save(self.root / _INDEX)
 
     def save_fits(self, table_fingerprint: str | None = None) -> None:
@@ -1285,3 +1593,33 @@ class CorpusStore:
         incremental synthesis after the front half)."""
         if self.grammars.dirty:
             self.grammars.save(self.root / _GRAMMARS)
+
+    # -- integrity: fsck + quarantine ------------------------------------------
+
+    def quarantine_dir(self) -> Path:
+        """Where :meth:`repair` moves damaged scenario artifacts
+        (created on first use)."""
+        return self.root / _QUARANTINE_DIR
+
+    def verify(self, deep: bool = True):
+        """fsck: cross-check every shard entry against its scenario npz
+        (existence, loadability, content-hash match), sidecar presence
+        and coherence, index/manifest agreement, and cache readability.
+        Returns a typed :class:`repro.core.fsck.VerifyReport`; mutates
+        nothing.  ``deep=False`` skips re-hashing the scenario npz
+        payloads (existence/metadata checks only)."""
+        from repro.core.fsck import verify_store   # lazy: keeps ingest
+        with self.lock:                            # workers import-light
+            return verify_store(self, deep=deep)
+
+    def repair(self):
+        """Quarantine every damaged scenario (npz + sidecar moved to
+        ``quarantine/`` with a JSON damage record), reconstruct corrupt
+        shard manifests from the surviving scenario artifacts, and heal
+        sidecars/index/caches — then re-derive.  Post-repair store state
+        is bit-identical to a from-scratch store over the surviving
+        scenario set (the chaos-sweep oracle).  Returns a
+        :class:`repro.core.fsck.RepairReport`."""
+        from repro.core.fsck import repair_store
+        with self.lock:
+            return repair_store(self)

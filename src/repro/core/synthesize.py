@@ -492,6 +492,14 @@ def _synthesize_corpus_incremental(cstore, threshold: float,
     """The ``synthesize_corpus(store=...)`` path: same outputs as the
     batch path over the store's scenarios in manifest order, touching only
     what changed since the last synthesis."""
+    # a damaged store must fail loudly here, not emit a proxy silently
+    # missing scenarios: repair()/quarantine is an operator decision
+    damaged = getattr(cstore, "damaged", None)
+    if damaged:
+        raise next(iter(damaged.values()))
+    shard_errors = getattr(cstore, "shard_errors", None)
+    if shard_errors:
+        raise next(iter(shard_errors.values()))
     names = cstore.names
     ids_by_name, reps = cstore.cluster_assignments()
 

@@ -69,7 +69,7 @@ import threading
 
 import numpy as np
 
-from repro.core.corpus_store import GrammarCache
+from repro.core.corpus_store import GrammarCache, ScenarioCorruptError
 from repro.core.events import COMM_KINDS, N_METRICS
 from repro.core.grammar import GRAMMAR_HIST_BINS, rule_histogram
 from repro.core.interproc import compute_gid_index
@@ -189,7 +189,14 @@ class ProxyService:
             "n_grammar_hist_misses": 0,
             "n_ann_queries": 0,
             "n_brute_queries": 0,
+            # degraded-mode serving (see refresh()): a failed refresh
+            # keeps answering from the last-good snapshot
+            "degraded": False,
+            "n_degraded_refreshes": 0,
+            "n_excluded_scenarios": 0,
         }
+        self._degraded_cause: BaseException | None = None
+        self._failed_fingerprint: str | None = None
         self.stats.update(self._timers.snapshot_ms())
         # the single cold-path synthesis (on a warm store this resolves
         # from the persisted grammar/fit caches and the result memo)
@@ -275,6 +282,14 @@ class ProxyService:
         self._stale = True
 
     def _ensure_fresh(self) -> None:
+        if self._degraded_cause is not None:
+            # degraded: retry the refresh only once the store actually
+            # changed (a repair/mutation moves the fingerprint) — never a
+            # retry storm against the same broken state
+            if (self._stale or self._cstore.manifest_fingerprint()
+                    != self._failed_fingerprint):
+                self.refresh()
+            return
         if self._stale:
             self.refresh()
             return
@@ -292,7 +307,16 @@ class ProxyService:
         incremental ``synthesize_corpus`` (memo/cache-resolved — not a
         re-warm), selective re-embedding, precise profile-memo
         invalidation.  Resulting state is bit-identical to a freshly
-        constructed service on the mutated store."""
+        constructed service on the mutated store.
+
+        A refresh that *fails* (corrupt scenario artifact, damaged
+        store, synthesis error) does not take the service down: the
+        last-good snapshot keeps serving, ``stats["degraded"]`` /
+        :meth:`health` surface the cause, scenarios implicated in the
+        failure are excluded from matching, and the next store change
+        (e.g. :meth:`~repro.core.corpus_store.CorpusStore.repair`
+        quarantining the culprit) triggers a retry that restores normal
+        service — with state bit-identical to a rebuilt one."""
         from repro.core.synthesize import synthesize_corpus   # lazy: jax
         with self._lock:
             cstore = self._cstore
@@ -303,22 +327,84 @@ class ProxyService:
                 self._stale = False
                 if not cstore.names:
                     raise ValueError("cannot serve an empty corpus")
+                old_corpus = self.corpus
                 old_modules = {n: r.proxy.module
                                for n, r in self.corpus.results.items()}
-                self.corpus = synthesize_corpus(
-                    store=cstore, threshold=self._threshold,
-                    count_scale=self._count_scale, out_dir=self._out_dir)
-                self.stats["n_refresh"] += 1
-                dropped = 0
-                for key in list(self._profiles):
-                    res = self.corpus.results.get(key[0])
-                    if (res is None or
-                            res.proxy.module is not old_modules.get(key[0])):
-                        del self._profiles[key]
-                        dropped += 1
-                self.stats["n_profile_invalidated"] += dropped
-                self._sync(count_reembeds=True)
+                try:
+                    self.corpus = synthesize_corpus(
+                        store=cstore, threshold=self._threshold,
+                        count_scale=self._count_scale,
+                        out_dir=self._out_dir)
+                    self.stats["n_refresh"] += 1
+                    dropped = 0
+                    for key in list(self._profiles):
+                        res = self.corpus.results.get(key[0])
+                        if (res is None or res.proxy.module
+                                is not old_modules.get(key[0])):
+                            del self._profiles[key]
+                            dropped += 1
+                    self.stats["n_profile_invalidated"] += dropped
+                    self._sync(count_reembeds=True)
+                except Exception as e:
+                    # keep serving the last-good snapshot (InjectedCrash
+                    # is a BaseException: a simulated process death is
+                    # not degradable and propagates)
+                    self.corpus = old_corpus
+                    self._enter_degraded(e)
+                    return self
+                self._exit_degraded()
         return self
+
+    # -- degraded-mode serving -------------------------------------------------
+
+    def _enter_degraded(self, cause: BaseException) -> None:
+        """A refresh failed: record the cause + the fingerprint it failed
+        against (the retry gate), and drop scenarios implicated in the
+        failure from the match set so a damaged scenario is never
+        *answered* from the stale snapshot."""
+        self._degraded_cause = cause
+        self._failed_fingerprint = self._cstore.manifest_fingerprint()
+        self.stats["degraded"] = True
+        self.stats["n_degraded_refreshes"] += 1
+        bad: set[str] = set(getattr(self._cstore, "damaged", {}) or {})
+        c: BaseException | None = cause
+        while c is not None:
+            if isinstance(c, ScenarioCorruptError):
+                bad.add(c.name)
+            c = c.__cause__
+        keep = [n for n in self._names if n not in bad]
+        if keep and len(keep) < len(self._names):
+            self._names = keep
+            self._emb_mat = np.stack([self._embeddings[n] for n in keep])
+            self._ann = (BallTree(self._emb_mat)
+                         if len(keep) >= self._ann_threshold else None)
+        self.stats["n_excluded_scenarios"] = (
+            len(self._embeddings) - len(self._names))
+
+    def _exit_degraded(self) -> None:
+        self._degraded_cause = None
+        self._failed_fingerprint = None
+        self.stats["degraded"] = False
+        self.stats["n_excluded_scenarios"] = 0
+
+    def health(self) -> dict:
+        """Liveness/consistency snapshot for operators: ``status`` is
+        ``"ok"`` or ``"degraded"``; degraded responses carry the refresh
+        failure's cause and how much of the corpus is still served."""
+        with self._lock:
+            degraded = self._degraded_cause is not None
+            return {
+                "status": "degraded" if degraded else "ok",
+                "degraded": degraded,
+                "cause": (f"{type(self._degraded_cause).__name__}: "
+                          f"{self._degraded_cause}" if degraded else None),
+                "serving_scenarios": len(self._names),
+                "excluded_scenarios": int(
+                    self.stats["n_excluded_scenarios"]),
+                "n_refresh": int(self.stats["n_refresh"]),
+                "n_degraded_refreshes": int(
+                    self.stats["n_degraded_refreshes"]),
+            }
 
     def close(self) -> None:
         """Detach from the store's mutation notifications (idempotent)."""

@@ -1,0 +1,547 @@
+"""Chaos tests: deterministic fault injection over every store
+touchpoint, fsck/quarantine semantics, per-item ingest isolation, lock
+timeout diagnostics, and degraded-mode serving.
+
+The write-site sweep here is the kill-mid-write test generalized over
+**every** atomic-write site via the registered fault points
+(:data:`repro.core.faults.FAULT_POINTS`); ``benchmarks/chaos.py`` runs
+the same enumeration with the full δ̄-parity oracle."""
+import json
+import multiprocessing as mp
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.corpus_store import (
+    CorpusStore, IngestBatchError, LockTimeoutError, ScenarioCorruptError,
+    ShardCorruptError, _file_lock,
+)
+from repro.core.events import CommEvent, ComputeEvent
+from repro.core.trace_ir import TraceStore
+
+_V1 = (2.1e7, 3.3e5, 1.1e7, 8.2e3, 0., 0.)
+_V2 = (4.4e6, 1.2e4, 2.2e6, 0., 7.0, 1.0)
+_V3 = (9.9e8, 5.5e5, 3.3e7, 1.1e3, 0., 2.0)
+
+
+def _store(vectors, comm_axis="x", n_ranks=4):
+    comm = CommEvent("psum", (8,), "float32", (comm_axis,))
+    tr = []
+    for v in vectors:
+        tr += [ComputeEvent(tuple(v)), comm]
+    return TraceStore.from_rank_traces([list(tr) for _ in range(n_ranks)],
+                                       {comm_axis: n_ranks})
+
+
+def _zoo3():
+    return {"a": _store([_V1, _V2]), "b": _store([_V1, _V3]),
+            "c": _store([_V2, _V3])}
+
+
+def _seeded(tmp_path, names=("a", "b")):
+    cs = CorpusStore(tmp_path / "corpus")
+    zoo = _zoo3()
+    for n in names:
+        cs.add_scenario(n, zoo[n])
+    return cs
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    faults.clear_plan()
+
+
+# ---------------------------------------------------------------------------
+# the fault layer itself
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_all_kinds():
+    pts = faults.registered_points()
+    assert len(pts) == len(set(pts)) >= 13
+    for p in pts:
+        for k in faults.FAULT_POINTS[p]:
+            assert k in faults.FAULT_KINDS
+
+
+def test_spec_rejects_unregistered():
+    with pytest.raises(ValueError, match="unregistered"):
+        faults.FaultSpec("write.nonsense", "crash_before")
+    with pytest.raises(ValueError, match="not supported"):
+        faults.FaultSpec("read.shard", "torn_write")
+
+
+def test_inert_without_plan():
+    assert faults.current_plan() is None
+    assert faults.arm("write.shard", "anything") is None
+    faults.crash_point("read.shard", "anything")     # no-op
+
+
+def test_plan_random_is_seed_deterministic():
+    a = faults.FaultPlan.random(seed=7, n_faults=5)
+    b = faults.FaultPlan.random(seed=7, n_faults=5)
+    assert ([(s.point, s.kind, s.skip) for s in a.specs]
+            == [(s.point, s.kind, s.skip) for s in b.specs])
+    c = faults.FaultPlan.random(seed=8, n_faults=5)
+    assert ([(s.point, s.kind) for s in a.specs]
+            != [(s.point, s.kind) for s in c.specs]) or a.seed != c.seed
+
+
+def test_match_skip_and_count_semantics():
+    plan = faults.FaultPlan([faults.FaultSpec(
+        "write.shard", "crash_before", match="shard-03", skip=1, count=1)])
+    with faults.active_plan(plan):
+        assert faults.arm("write.shard", "shard-01.json") is None  # no match
+        assert faults.arm("write.shard", "shard-03.json") is None  # skipped
+        with pytest.raises(faults.InjectedCrash):
+            faults.arm("write.shard", "shard-03.json")             # fires
+        assert faults.arm("write.shard", "shard-03.json") is None  # burnt out
+    assert plan.fired == [("write.shard", "crash_before", "shard-03.json")]
+
+
+def test_injected_crash_not_swallowed_by_except_exception():
+    with pytest.raises(faults.InjectedCrash):
+        try:
+            raise faults.InjectedCrash("write.shard")
+        except Exception:                            # the self-heal pattern
+            pytest.fail("InjectedCrash must not be catchable as Exception")
+
+
+# ---------------------------------------------------------------------------
+# kill-mid-write, parameterized over EVERY atomic-write site
+# ---------------------------------------------------------------------------
+
+#: how to drive one write at each site on a 2-scenario store
+def _trigger(cs, site):
+    if site in ("write.scenario_npz", "write.sidecar", "write.shard",
+                "write.index", "write.manifest"):
+        cs.add_scenario("c", _zoo3()["c"])
+        if site == "write.manifest":
+            cs.save_fits(table_fingerprint="chaos")  # manifest rewrite
+    elif site == "write.fit_cache":
+        from types import SimpleNamespace
+        cs.fits.put("k", SimpleNamespace(
+            x=np.arange(11), predicted=np.zeros(6), target=np.zeros(6),
+            residual=0.0, per_metric_rel_err=np.zeros(6), unroll=1))
+        cs.save_fits()
+    elif site == "write.grammar_cache":
+        cs.grammars.put("k", {0: [("t", 1, 2)]})
+        cs.save_grammars()
+    else:                                            # pragma: no cover
+        raise AssertionError(site)
+
+
+_WRITE_SITES = [p for p in faults.registered_points()
+                if p.startswith("write.")]
+
+
+@pytest.mark.parametrize("kind", ["crash_before", "crash_after",
+                                  "torn_write"])
+@pytest.mark.parametrize("site", _WRITE_SITES)
+def test_kill_mid_write_every_site(tmp_path, site, kind):
+    cs = _seeded(tmp_path)
+    baseline = cs.names
+    plan = faults.FaultPlan.crash_at(site, kind)
+    with faults.active_plan(plan):
+        with pytest.raises(faults.InjectedCrash):
+            _trigger(cs, site)
+    assert plan.fired, f"fault at {site} never fired"
+
+    # reopen from disk as a crashed process's successor would
+    cs2 = CorpusStore(tmp_path / "corpus")
+    rep = cs2.verify()
+    if not rep.clean:
+        cs2.repair()
+        assert cs2.verify().clean, cs2.verify().summary()
+    # survivors are a subset of {baseline + c}; every survivor loads
+    assert set(baseline) <= set(cs2.names) | set(rep.fatal_names)
+    for n in cs2.names:
+        st = cs2.load_scenario(n)
+        assert st.content_hash() == cs2.content_hash(n)
+    # index coherent with the manifest view
+    assert cs2.index.order == cs2.names
+
+
+@pytest.mark.parametrize("site", _WRITE_SITES)
+def test_eio_mid_write_surfaces_and_store_survives(tmp_path, site):
+    cs = _seeded(tmp_path)
+    with faults.active_plan(faults.FaultPlan.crash_at(site, "io_error")):
+        with pytest.raises(OSError):
+            _trigger(cs, site)
+    cs2 = CorpusStore(tmp_path / "corpus")
+    rep = cs2.verify()
+    if not rep.clean:
+        cs2.repair()
+        assert cs2.verify().clean
+    assert set(cs2.names) >= {"a", "b"} - set(rep.fatal_names)
+
+
+# ---------------------------------------------------------------------------
+# typed corruption errors (satellite: truncated npz regression)
+# ---------------------------------------------------------------------------
+
+
+def test_truncated_scenario_npz_is_typed(tmp_path):
+    cs = _seeded(tmp_path)
+    p = cs.scenario_path("a")
+    p.write_bytes(p.read_bytes()[:48])
+    cs._stores.clear()                       # force the disk read
+    with pytest.raises(ScenarioCorruptError) as ei:
+        cs.load_scenario("a")
+    assert ei.value.name == "a"
+    assert str(p) == ei.value.path
+    assert isinstance(ei.value.cause, Exception)
+    assert "repair" in str(ei.value)
+
+
+def test_truncated_npz_poisons_synthesis_with_typed_error(tmp_path):
+    from repro.core.synthesize import synthesize_corpus
+    cs = _seeded(tmp_path)
+    p = cs.scenario_path("b")
+    p.write_bytes(p.read_bytes()[:48])
+    cs._stores.clear()
+    cs.memo.clear()
+    with pytest.raises(ScenarioCorruptError):
+        synthesize_corpus(store=cs)
+
+
+def test_read_eio_becomes_scenario_corrupt(tmp_path):
+    cs = _seeded(tmp_path)
+    cs._stores.clear()
+    plan = faults.FaultPlan([faults.FaultSpec("read.scenario_npz",
+                                              "io_error")])
+    with faults.active_plan(plan):
+        with pytest.raises(ScenarioCorruptError):
+            cs._metrics_of("a")
+
+
+def test_torn_shard_recorded_not_raised_at_open(tmp_path):
+    cs = _seeded(tmp_path)
+    shard = next(s for s in (tmp_path / "corpus" / "shards").iterdir()
+                 if len(json.loads(s.read_text())["entries"]))
+    shard.write_bytes(shard.read_bytes()[:20])
+    cs2 = CorpusStore(tmp_path / "corpus")       # opens, does not raise
+    assert cs2.shard_errors
+    err = next(iter(cs2.shard_errors.values()))
+    assert isinstance(err, ShardCorruptError)
+    from repro.core.synthesize import synthesize_corpus
+    with pytest.raises(ShardCorruptError):       # but synthesis refuses
+        synthesize_corpus(store=cs2)
+    cs2.repair()
+    assert not cs2.shard_errors
+    assert set(cs2.names) == {"a", "b"}
+    assert cs2.verify().clean
+
+
+def test_torn_manifest_header_recovers_from_meta_twin(tmp_path):
+    cs = _seeded(tmp_path)
+    n_shards = cs.n_shards
+    (tmp_path / "corpus" / "manifest.json").write_bytes(b'{"version": 2,')
+    cs2 = CorpusStore(tmp_path / "corpus")
+    assert cs2.n_shards == n_shards
+    assert set(cs2.names) == {"a", "b"}
+    assert cs2.verify().clean
+
+
+# ---------------------------------------------------------------------------
+# verify / repair / quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_verify_clean_on_healthy_store(tmp_path):
+    cs = _seeded(tmp_path, names=("a", "b", "c"))
+    rep = cs.verify()
+    assert rep.clean and rep.n_scenarios == 3
+    assert "clean" in rep.summary()
+
+
+def test_verify_finds_hash_mismatch(tmp_path):
+    cs = _seeded(tmp_path)
+    other = _zoo3()["c"]
+    other.save(cs.scenario_path("a"))            # wrong content, loads fine
+    cs._stores.clear()
+    rep = cs.verify()
+    assert [i.kind for i in rep.fatal] == ["hash_mismatch"]
+    assert rep.fatal_names == ["a"]
+
+
+def test_verify_shallow_skips_payloads(tmp_path):
+    cs = _seeded(tmp_path)
+    p = cs.scenario_path("a")
+    p.write_bytes(p.read_bytes()[:48])
+    rep = cs.verify(deep=False)
+    assert rep.clean                              # existence checks only
+    assert not cs.verify(deep=True).clean
+
+
+def test_repair_quarantines_and_restores_parity(tmp_path):
+    from repro.core.synthesize import synthesize_corpus
+    cs = _seeded(tmp_path, names=("a", "b", "c"))
+    p = cs.scenario_path("b")
+    p.write_bytes(p.read_bytes()[:48])
+    cs._sidecar_path("b").unlink()               # double fault
+    cs._stores.clear()
+    cs.memo.clear()
+
+    rr = cs.repair()
+    assert rr.quarantined == ["b"]
+    assert cs.verify().clean
+    assert set(cs.names) == {"a", "c"}
+    q = cs.quarantine_dir()
+    assert (q / "b.npz").exists()
+    record = json.loads((q / "b.json").read_text())
+    assert record["name"] == "b"
+
+    # the oracle: post-repair δ̄ bit-identical to from-scratch synthesis
+    # of the survivors
+    corp = synthesize_corpus(store=cs)
+    fresh = CorpusStore(tmp_path / "fresh")
+    zoo = _zoo3()
+    for n in cs.names:
+        fresh.add_scenario(n, zoo[n])
+    corp2 = synthesize_corpus(store=fresh)
+    for n in cs.names:
+        ri, rb = corp.results[n], corp2.results[n]
+        assert ri.merged.rules == rb.merged.rules
+        fi = ri.fidelity(sample_ranks=None)
+        fb = rb.fidelity(sample_ranks=None)
+        np.testing.assert_array_equal(fi.delta, fb.delta)
+
+
+def test_repair_heals_corrupt_sidecar_without_quarantine(tmp_path):
+    cs = _seeded(tmp_path)
+    sp = cs._sidecar_path("a")
+    sp.write_bytes(b"garbage")
+    (tmp_path / "corpus" / "cluster_index.npz").unlink()
+    cs2 = CorpusStore(tmp_path / "corpus")       # heals from metrics
+    assert set(cs2.names) == {"a", "b"}
+    assert not cs2.damaged
+    assert cs2.verify().clean
+
+
+def test_repair_heals_corrupt_caches(tmp_path):
+    cs = _seeded(tmp_path)
+    (tmp_path / "corpus" / "grammar_cache.json").write_text("{nope")
+    from types import SimpleNamespace
+    cs.fits.put("k", SimpleNamespace(
+        x=np.arange(11), predicted=np.zeros(6), target=np.zeros(6),
+        residual=0.0, per_metric_rel_err=np.zeros(6), unroll=1))
+    cs.save_fits()
+    fpath = tmp_path / "corpus" / "fit_cache.npz"
+    fpath.write_bytes(fpath.read_bytes()[:30])
+    rep = cs.verify()
+    assert {i.kind for i in rep.issues} == {"cache_corrupt"}
+    cs.repair()
+    assert cs.verify().clean
+    assert len(cs.fits) == 0
+
+
+# ---------------------------------------------------------------------------
+# lock retry / timeout
+# ---------------------------------------------------------------------------
+
+
+def test_slow_lock_retries_through_contention(tmp_path):
+    plan = faults.FaultPlan([faults.FaultSpec("lock.acquire", "slow_lock",
+                                              count=3)])
+    with faults.active_plan(plan):
+        with _file_lock(tmp_path / "x.lock", timeout=5.0):
+            pass
+    assert len(plan.fired) == 3                  # contended thrice, then won
+
+
+def test_lock_timeout_diagnostic(tmp_path):
+    plan = faults.FaultPlan([faults.FaultSpec("lock.acquire", "slow_lock",
+                                              count=10_000)])
+    with faults.active_plan(plan):
+        with pytest.raises(LockTimeoutError) as ei:
+            with _file_lock(tmp_path / "x.lock", timeout=0.05):
+                pass
+    assert ei.value.attempts > 1
+    assert "x.lock" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# per-item ingest isolation (satellite: BrokenProcessPool fallback)
+# ---------------------------------------------------------------------------
+
+
+def _fork_available():
+    return "fork" in mp.get_all_start_methods()
+
+
+@pytest.mark.skipif(not _fork_available(), reason="needs fork start method")
+def test_worker_death_falls_back_to_serial(tmp_path):
+    cs = CorpusStore(tmp_path / "corpus")
+    zoo = _zoo3()
+    # the poisoned item OOM-kills its fork worker (os._exit) -> a real
+    # BrokenProcessPool; the parent's serial retry must land all items
+    plan = faults.FaultPlan([faults.FaultSpec(
+        "worker.ingest", "worker_death", match="b")])
+    with faults.active_plan(plan):
+        hashes = cs.add_scenarios(sorted(zoo.items()), n_workers=2)
+    assert set(hashes) == {"a", "b", "c"}
+    assert cs.stats["n_pool_breaks"] >= 1
+    assert cs.stats["n_serial_retries"] >= 1
+    assert set(cs.names) == {"a", "b", "c"}
+    assert cs.verify().clean
+
+
+def test_one_bad_item_costs_only_itself(tmp_path):
+    cs = CorpusStore(tmp_path / "corpus")
+    zoo = _zoo3()
+    bad = tmp_path / "nope.npz"
+    bad.write_bytes(b"not an npz")
+    items = [("a", zoo["a"]), ("bad", str(bad)), ("c", zoo["c"])]
+    with pytest.raises(IngestBatchError) as ei:
+        cs.add_scenarios(items)
+    err = ei.value
+    assert set(err.hashes) == {"a", "c"}         # survivors committed
+    assert [e.name for e in err.errors] == ["bad"]
+    assert err.errors[0].retried
+    assert set(cs.names) == {"a", "c"}
+    assert cs.stats["n_ingest_errors"] == 1
+    assert cs.verify().clean
+
+
+@pytest.mark.skipif(not _fork_available(), reason="needs fork start method")
+def test_pool_bad_item_isolated_and_retried(tmp_path):
+    cs = CorpusStore(tmp_path / "corpus")
+    zoo = _zoo3()
+    bad = tmp_path / "nope.npz"
+    bad.write_bytes(b"not an npz")
+    items = [("a", zoo["a"]), ("bad", str(bad)), ("c", zoo["c"])]
+    with pytest.raises(IngestBatchError) as ei:
+        cs.add_scenarios(items, n_workers=2)
+    assert set(ei.value.hashes) == {"a", "c"}
+    assert set(cs.names) == {"a", "c"}
+    assert cs.verify().clean
+
+
+# ---------------------------------------------------------------------------
+# inertness + coverage: every registered point is actually threaded
+# ---------------------------------------------------------------------------
+
+
+def test_store_lifecycle_hits_every_fault_point(tmp_path):
+    """An empty plan records every consultation; a registered point the
+    store never consults is dead registry weight (and a hole in the
+    chaos sweep's coverage)."""
+    from types import SimpleNamespace
+    plan = faults.FaultPlan([])
+    with faults.active_plan(plan):
+        cs = CorpusStore(tmp_path / "corpus")
+        zoo = _zoo3()
+        cs.add_scenarios(sorted(zoo.items())[:2], n_workers=2
+                         if _fork_available() else 0)
+        cs.add_scenario("c", zoo["c"])
+        cs.save_fits(table_fingerprint="cov")
+        cs.fits.put("k", SimpleNamespace(
+            x=np.arange(11), predicted=np.zeros(6), target=np.zeros(6),
+            residual=0.0, per_metric_rel_err=np.zeros(6), unroll=1))
+        cs.save_fits()
+        cs.grammars.put("k", {0: [("t", 1, 2)]})
+        cs.save_grammars()
+        # reads: shard + index at reopen; sidecar + scenario via eviction
+        (tmp_path / "corpus" / "cluster_index.npz").unlink()
+        cs2 = CorpusStore(tmp_path / "corpus")
+        cs2._stores.clear()
+        cs2.load_scenario("a")
+        (tmp_path / "corpus" / "cluster_index.npz").unlink()
+        CorpusStore(tmp_path / "corpus")          # sidecar-driven rebuild
+        ip = tmp_path / "corpus" / "cluster_index.npz"
+        from repro.core.corpus_store import ClusterIndex
+        ClusterIndex.load(ip, expected_rel_tol=cs.rel_tol)
+    hit = {p for p, _ in plan.hits}
+    missing = set(faults.registered_points()) - hit
+    assert not missing, f"points never consulted: {sorted(missing)}"
+    assert not plan.fired                         # empty plan fires nothing
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode serving
+# ---------------------------------------------------------------------------
+
+
+def _svc(tmp_path):
+    from repro.serve.proxy_service import ProxyService
+    cs = _seeded(tmp_path, names=("a", "b", "c"))
+    return cs, ProxyService(cs, out_dir=tmp_path / "modules")
+
+
+def test_degraded_serving_keeps_answering_and_recovers(tmp_path):
+    """The acceptance loop: induce a refresh failure (corrupt scenario
+    behind a legitimate mutation), keep answering from the last-good
+    snapshot with ``degraded=True`` and the culprit excluded from
+    matching, then repair the store and pin the recovered state
+    bit-identical to a rebuilt service."""
+    from repro.serve.proxy_service import ProxyService
+    cs, svc = _svc(tmp_path)
+    assert svc.health()["status"] == "ok"
+
+    p = cs.scenario_path("a")
+    p.write_bytes(p.read_bytes()[:48])
+    cs._stores.clear()                    # force refresh to read the disk
+    cs.memo.clear()
+    cs.remove_scenario("b")               # legit mutation -> stale bit
+
+    ans = svc.query(_store([_V2, _V3]))   # refresh fails; last-good serves
+    assert ans.name == "c"
+    assert svc.stats["degraded"] is True
+    assert svc.stats["n_degraded_refreshes"] == 1
+    h = svc.health()
+    assert h["status"] == "degraded"
+    assert "ScenarioCorruptError" in h["cause"]
+    assert h["excluded_scenarios"] == 1
+
+    # the damaged scenario is excluded from matching: its own trace must
+    # answer with some healthy scenario, never "a"
+    assert svc.query(_store([_V1, _V2])).name != "a"
+    # no retry storm: the store hasn't changed, so further queries do
+    # not re-attempt the refresh
+    assert svc.stats["n_degraded_refreshes"] == 1
+
+    rr = cs.repair()                      # quarantine -> notify -> retry
+    assert rr.quarantined == ["a"]
+    ans2 = svc.query(_store([_V2, _V3]))
+    assert ans2.name == "c"
+    assert svc.stats["degraded"] is False
+    assert svc.health()["status"] == "ok"
+    assert svc.stats["n_warm_synthesis"] == 1      # never re-warmed
+
+    rebuilt = ProxyService(cs, out_dir=tmp_path / "modules")
+    assert svc._names == rebuilt._names
+    for n in rebuilt._names:
+        assert np.array_equal(svc.embedding(n), rebuilt.embedding(n))
+    q1, q2 = svc.query(_store([_V2, _V3])), rebuilt.query(_store([_V2, _V3]))
+    assert (q1.name, q1.distance, q1.distances) == (q2.name, q2.distance,
+                                                    q2.distances)
+    svc.close(), rebuilt.close()
+
+
+def test_degraded_on_generic_synthesis_failure(tmp_path, monkeypatch):
+    """Degraded mode is not specific to corruption: any refresh
+    exception keeps the last-good snapshot serving (with nothing
+    excluded when no scenario is implicated)."""
+    cs, svc = _svc(tmp_path)
+
+    def _boom(*a, **k):
+        raise RuntimeError("induced synthesis failure")
+
+    import repro.core.synthesize as synth_mod
+    monkeypatch.setattr(synth_mod, "synthesize_corpus", _boom)
+    cs.remove_scenario("b")
+    ans = svc.query(_store([_V2, _V3]))
+    assert ans.name == "c"
+    assert svc.stats["degraded"] is True
+    assert svc.health()["excluded_scenarios"] == 0
+    assert "RuntimeError" in svc.health()["cause"]
+
+    monkeypatch.undo()                    # "transient" failure clears
+    cs.add_scenario("d", _store([_V1, _V3], comm_axis="y"))
+    svc.query(_store([_V2, _V3]))
+    assert svc.stats["degraded"] is False
+    assert svc.health()["status"] == "ok"
+    svc.close()
